@@ -1,0 +1,128 @@
+"""Paper Fig. 9 (+ Fig. 8 CPU sweep, §5.4 CIR-locked) — build / deployment /
+end-to-end time for the whole suite vs the conventional builder, at a
+representative 500 Mbps link.
+
+  conventional: build (dev) + push + pull (deploy); the image bundles the
+                runtime env + code (+ weights when serving).
+  CIR:          pre-build (dev) + push CIR + lazy-build (deploy); the
+                deployment host's accelerator runtime is REUSED (seeded
+                cache — the libnvidia-container analog), components are
+                pre-compiled, fetch overlaps resolution.
+
+Two suites are reported: train CIRs (environment-only, the paper's
+build-time story) and serve CIRs (weights included on both sides).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import ARCHS
+from repro.core import tpu_single_pod
+
+from .common import (MBPS, conventional_for, csv_row, fresh_builder,
+                     lazy_deploy_time)
+
+
+def run(bw_mbps: float = 500.0, locked: bool = False, cores: int = 4,
+        entrypoint: str = "train", quiet: bool = False) -> Dict[str, Dict]:
+    bw = bw_mbps * MBPS
+    spec = tpu_single_pod()
+    lb, pb = fresh_builder(bw_mbps)
+    rows: Dict[str, Dict] = {}
+    for arch_id in ARCHS:
+        t0 = time.perf_counter()
+        cir = pb.prebuild(ARCHS[arch_id], entrypoint=entrypoint)
+        prebuild_s = time.perf_counter() - t0
+        conv = conventional_for(cir, lb, spec)
+
+        # cold deployment node: fresh store, host runtime pre-installed
+        lb_cold, _ = fresh_builder(bw_mbps, host_spec=spec)
+        if locked:
+            # lock produced on a TEST node; production node is still cold
+            lock = lb.build(cir, spec, assemble=False).lock
+            inst = lb_cold.build_from_lock(cir, lock, spec, assemble=False)
+        else:
+            inst = lb_cold.build(cir, spec, assemble=False)
+        rep = inst.report
+
+        conv_build = conv.build_time(bw, cores)
+        conv_deploy = conv.pull_time(bw)
+        conv_e2e = conv_build + conv.push_time(bw) + conv_deploy
+        cir_deploy = lazy_deploy_time(rep, bw)
+        cir_build = prebuild_s + cir_deploy
+        cir_e2e = prebuild_s + (rep.bytes_cir / bw) + cir_deploy
+        rows[arch_id] = {
+            "conv_build_s": conv_build, "cir_build_s": cir_build,
+            "conv_deploy_s": conv_deploy, "cir_deploy_s": cir_deploy,
+            "conv_e2e_s": conv_e2e, "cir_e2e_s": cir_e2e,
+            "build_reduction_pct": 100 * (1 - cir_build / conv_build),
+            "deploy_reduction_pct": 100 * (1 - cir_deploy / conv_deploy),
+            "e2e_reduction_pct": 100 * (1 - cir_e2e / conv_e2e),
+        }
+    if not quiet:
+        print(f"-- {entrypoint} CIRs, {bw_mbps:.0f} Mbps, {cores} cores, "
+              f"locked={locked}")
+        print(f"{'arch':24s} {'conv bld':>9s} {'cir bld':>8s} "
+              f"{'conv dep':>9s} {'cir dep':>8s} {'conv e2e':>9s} "
+              f"{'cir e2e':>8s}")
+        for a, r in rows.items():
+            print(f"{a:24s} {r['conv_build_s']:>8.1f}s "
+                  f"{r['cir_build_s']:>7.1f}s "
+                  f"{r['conv_deploy_s']:>8.1f}s {r['cir_deploy_s']:>7.1f}s "
+                  f"{r['conv_e2e_s']:>8.1f}s {r['cir_e2e_s']:>7.1f}s")
+        for k in ("build", "deploy", "e2e"):
+            avg = sum(r[f"{k}_reduction_pct"] for r in rows.values()) \
+                / len(rows)
+            print(f"avg {k} time reduction: {avg:.1f}%   "
+                  f"(paper: build 77–87%, deploy 42–63%, e2e ~91%)")
+    return rows
+
+
+def cpu_sweep(bw_mbps: float = 500.0, quiet: bool = False) -> Dict[int, Dict]:
+    """Fig. 8 analog: conventional build time scales with install cores;
+    CIR lazy-build barely moves (no install stage)."""
+    out = {}
+    for cores in (1, 2, 4, 8, 16):
+        rows = run(bw_mbps=bw_mbps, cores=cores, quiet=True)
+        conv = sum(r["conv_build_s"] for r in rows.values())
+        cir = sum(r["cir_build_s"] for r in rows.values())
+        out[cores] = {"conv_total_s": conv, "cir_total_s": cir}
+        if not quiet:
+            print(f"cores={cores:2d}  conventional={conv:8.1f}s  "
+                  f"CIR={cir:6.1f}s")
+    return out
+
+
+def main() -> List[str]:
+    rows = run(quiet=True)
+    avg_b = sum(r["build_reduction_pct"] for r in rows.values()) / len(rows)
+    avg_d = sum(r["deploy_reduction_pct"] for r in rows.values()) / len(rows)
+    avg_e = sum(r["e2e_reduction_pct"] for r in rows.values()) / len(rows)
+    serve = run(entrypoint="serve", quiet=True)
+    avg_sd = sum(r["deploy_reduction_pct"] for r in serve.values()) \
+        / len(serve)
+    locked = run(locked=True, quiet=True)
+    avg_lock = sum(r["deploy_reduction_pct"] for r in locked.values()) \
+        / len(locked)
+    sweep = cpu_sweep(quiet=True)
+    spread_conv = sweep[1]["conv_total_s"] / sweep[16]["conv_total_s"]
+    spread_cir = sweep[1]["cir_total_s"] / sweep[16]["cir_total_s"]
+    return [
+        csv_row("build_time.fig9", 0.0,
+                f"build_red={avg_b:.1f}%;deploy_red={avg_d:.1f}%;"
+                f"e2e_red={avg_e:.1f}%;serve_deploy_red={avg_sd:.1f}%"),
+        csv_row("build_time.locked", 0.0,
+                f"locked_deploy_red={avg_lock:.1f}%"),
+        csv_row("build_time.cpu_sweep.fig8", 0.0,
+                f"conv_1c_vs_16c={spread_conv:.2f}x;"
+                f"cir_1c_vs_16c={spread_cir:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    run(entrypoint="serve")
+    print()
+    cpu_sweep()

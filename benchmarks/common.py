@@ -1,0 +1,116 @@
+"""Shared cost model + helpers for the benchmark suite.
+
+Wall-clock components we can MEASURE offline (resolution, fetch
+bookkeeping, assembly) are measured; network transfer is byte-accounted and
+simulated at a parameterized link bandwidth (the paper's 10–1000 Mbps
+sweeps); the conventional builder's package-install work is MODELED with
+documented constants calibrated against the paper's own observations:
+
+  INSTALL_BPS  — 20 MB/s: pip/dpkg download-unpack-compile throughput.
+    The paper's Fig 7 shows a persistent ~100 s Docker-vs-CIR gap that
+    bandwidth cannot remove, on ~2 GB of packages → ~20 MB/s.
+  UNPACK_BPS   — 150 MB/s: layer-by-layer image unpacking (paper §2:
+    at high bandwidth, deployment is limited by sequential unpacking).
+
+The conventional ("docker-like") build of one application:
+  pull base env bytes → for each manager group, sequentially download and
+  install its components (no cross-manager parallelism — paper Fig 3).
+The CIR path: pre-build (measured) → push CIR → lazy-build = max(resolve,
+parallel fetch of missing components) + assemble (components are
+pre-compiled, so no install stage).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+from repro.configs import ARCHS
+from repro.core import (CIR, LazyBuilder, LocalComponentStore, PreBuilder,
+                        SpecSheet, tpu_single_pod)
+from repro.core import catalog
+
+INSTALL_BPS = 20e6
+UNPACK_BPS = 150e6
+
+MBPS = 1e6 / 8  # bytes/s per Mbps
+
+
+def fresh_builder(link_mbps: float = 500.0, host_spec: Optional[SpecSheet]
+                  = None) -> Tuple[LazyBuilder, PreBuilder]:
+    svc = catalog.build_service()
+    lb = LazyBuilder(svc, LocalComponentStore(),
+                     link_bandwidth_bps=link_mbps * 1e6)
+    if host_spec is not None:
+        seed_host_components(lb, host_spec)
+    return lb, PreBuilder(svc)
+
+
+def seed_host_components(lb: LazyBuilder, spec: SpecSheet) -> None:
+    """Deployment platforms come with their accelerator runtime installed
+    (TPU VMs ship libtpu; the paper reuses host GPU libs via
+    libnvidia-container).  The lazy-builder therefore treats the platform's
+    ``env`` components as locally cached; conventional images must bundle
+    them."""
+    for c in lb.service.registry.all_components():
+        if c.manager != "env":
+            continue
+        if not c.requires or c.env_satisfied(spec.context()):
+            lb.store.put(c)
+
+
+@dataclasses.dataclass
+class ConventionalModel:
+    """Docker/Buildah/Apptainer-analog timings for one application."""
+    image_bytes: int                  # full platform-specific image
+    package_bytes: int                # compressed packages to install
+    base_bytes: int                   # base image (env components)
+    weight_bytes: int
+    squashfs_penalty: float = 0.0     # apptainer-style CPU compression
+
+    def build_time(self, bw_bps: float, cores: int = 4) -> float:
+        """Sequential: pull base, then per-group download+install.  The
+        install stage covers the runtime env too (pip install jax[tpu] /
+        apt — what the CIR converters did once, offline)."""
+        t = self.base_bytes / bw_bps
+        t += self.package_bytes / bw_bps            # serialized downloads
+        t += (self.package_bytes + self.base_bytes) \
+            / (INSTALL_BPS * max(cores, 1) / 4)
+        t += self.weight_bytes / bw_bps
+        t += self.squashfs_penalty * self.image_bytes / (INSTALL_BPS *
+                                                         max(cores, 1))
+        return t
+
+    def push_time(self, bw_bps: float) -> float:
+        return self.image_bytes / bw_bps
+
+    def pull_time(self, bw_bps: float) -> float:
+        return self.image_bytes / bw_bps + self.image_bytes / UNPACK_BPS
+
+
+def conventional_for(cir: CIR, lb: LazyBuilder, spec: SpecSheet
+                     ) -> ConventionalModel:
+    """Derive the conventional image's composition from the SAME resolved
+    component set the lazy-builder uses (identical content, different
+    packaging) — the CIR-locked comparison of §5.4."""
+    inst = lb.build(cir, spec, assemble=False)
+    comps = inst.bundle.components()
+    base = sum(c.size_bytes for c in comps if c.manager == "env")
+    weights = sum(c.size_bytes for c in comps if c.manager == "asset")
+    packages = sum(c.size_bytes for c in comps
+                   if c.manager not in ("env", "asset"))
+    return ConventionalModel(
+        image_bytes=base + weights + packages,
+        package_bytes=packages, base_bytes=base, weight_bytes=weights)
+
+
+def lazy_deploy_time(report, bw_bps: float) -> float:
+    """Paper's lazy-build deployment: CIR pull + parallel component fetch
+    overlapped with resolution, then assembly (no install — components are
+    pre-compiled)."""
+    net = (report.bytes_cir + report.bytes_fetched) / bw_bps
+    return max(report.resolve_s, net) + report.fetch_s + report.assemble_s
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

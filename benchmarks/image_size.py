@@ -1,0 +1,52 @@
+"""Paper Fig. 6 — image size: CIR vs conventional platform-specific image.
+
+Per architecture (the 10-arch suite is our app benchmark): CIR wire bytes,
+the conventional image bytes (same resolved content, bundled), the bytes a
+cold lazy-build fetches, and the reduction percentages."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+from repro.configs import ARCHS
+from repro.core import tpu_single_pod
+
+from .common import conventional_for, csv_row, fresh_builder
+
+
+def run(entrypoint: str = "serve", quiet: bool = False) -> Dict[str, Dict]:
+    lb, pb = fresh_builder()
+    spec = tpu_single_pod()
+    rows: Dict[str, Dict] = {}
+    for arch_id in ARCHS:
+        cir = pb.prebuild(ARCHS[arch_id], entrypoint=entrypoint)
+        conv = conventional_for(cir, lb, spec)
+        rows[arch_id] = {
+            "cir_bytes": cir.size_bytes(),
+            "image_bytes": conv.image_bytes,
+            "reduction_pct": 100.0 * (1 - cir.size_bytes()
+                                      / conv.image_bytes),
+        }
+    if not quiet:
+        print(f"{'arch':24s} {'CIR':>10s} {'conv image':>14s} {'reduction':>10s}")
+        for a, r in rows.items():
+            print(f"{a:24s} {r['cir_bytes']:>9d}B "
+                  f"{r['image_bytes']/2**20:>11.0f}MiB "
+                  f"{r['reduction_pct']:>9.2f}%")
+        avg = sum(r["reduction_pct"] for r in rows.values()) / len(rows)
+        print(f"{'average':24s} {'':>10s} {'':>14s} {avg:>9.2f}%  "
+              f"(paper: ~95%+)")
+    return rows
+
+
+def main() -> List[str]:
+    t0 = time.perf_counter()
+    rows = run(quiet=True)
+    dt_us = (time.perf_counter() - t0) * 1e6 / max(len(rows), 1)
+    avg = sum(r["reduction_pct"] for r in rows.values()) / len(rows)
+    return [csv_row("image_size.fig6", dt_us,
+                    f"avg_reduction={avg:.2f}%;archs={len(rows)}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Framework roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifacts.  Run ``python -m repro.launch.dryrun --all`` first; this
+benchmark aggregates whatever artifacts exist."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.launch.roofline import analyze, fmt_table, load_artifacts
+
+from .common import csv_row
+
+
+def run(quiet: bool = False):
+    arts = [a for a in load_artifacts() if "skipped" not in a]
+    rows = [analyze(a) for a in arts]
+    if not quiet and rows:
+        print(fmt_table(rows))
+    if not quiet and not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+    return rows
+
+
+def main() -> List[str]:
+    rows = run(quiet=True)
+    if not rows:
+        return [csv_row("roofline", 0.0, "no_artifacts")]
+    by_dom = {}
+    for r in rows:
+        by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+    best = max(rows, key=lambda r: r["roofline_fraction"])
+    return [csv_row(
+        "roofline", 0.0,
+        f"cells={len(rows)};dominant={by_dom};"
+        f"best={best['arch']}x{best['shape']}="
+        f"{best['roofline_fraction']:.3f}")]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one line per table)."""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (bandwidth, build_time, cross_platform, image_size,
+                   roofline, sharing)
+    mods = [image_size, build_time, bandwidth, cross_platform, sharing,
+            roofline]
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in mods:
+        t0 = time.perf_counter()
+        try:
+            rows = mod.main()
+            dt_us = (time.perf_counter() - t0) * 1e6
+            for row in rows:
+                name, _, derived = row.split(",", 2)
+                print(f"{name},{dt_us/max(len(rows),1):.1f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},0,FAILED", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

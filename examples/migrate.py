@@ -1,0 +1,88 @@
+"""Workload migration — the sky/edge-computing scenario the paper targets.
+
+A training job runs on platform A; mid-run it must MOVE (spot preemption,
+data locality, cheaper capacity elsewhere).  With conventional images a
+per-platform image must exist in advance.  With CIR:
+
+  1. the driver checkpoints (atomic, bucket-deduped);
+  2. the SAME CIR is lazily re-built for platform B's specSheet — new
+     variant picks, new sharding plan, zero developer action;
+  3. the checkpoint is restored with platform B's shardings (reshard on
+     restore) and training resumes exactly where it stopped.
+
+Run:  PYTHONPATH=src python examples/migrate.py
+"""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.core import (LazyBuilder, PreBuilder, cpu_smoke, gpu_server)
+from repro.core import catalog
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime import elastic_rescale
+from repro.checkpoint import CheckpointManager
+
+CKPT = "/tmp/repro_migrate"
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    service = catalog.build_service()
+    cfg = ARCHS["phi4-mini-3.8b"].reduced()
+    cir = PreBuilder(service).prebuild(cfg, entrypoint="train")
+    builder = LazyBuilder(service)
+    mesh = make_smoke_mesh(1)
+
+    # ---- platform A: run 10 steps, checkpoint ------------------------------
+    spec_a = cpu_smoke()
+    a = builder.build(cir, spec_a, mesh=mesh)
+    step = jax.jit(a.entry["train_step"])
+    state = a.entry["init_state"](jax.random.PRNGKey(0))
+    losses_a = []
+    for i in range(10):
+        batch = {k: jnp.asarray(v) for k, v in
+                 a.entry["batch_fn"](64, 2, step=i).items()}
+        state, m = step(state, batch)
+        losses_a.append(float(m["loss"]))
+    mgr = CheckpointManager(CKPT, async_save=False)
+    mgr.save(10, state)
+    print(f"platform A ({spec_a.platform_id}): 10 steps, "
+          f"loss {losses_a[0]:.4f} -> {losses_a[-1]:.4f}; checkpointed")
+    print("  A picks:", {c.name: c.env for c in a.bundle.components()
+                         if c.manager in ("env", "opt", "parallel")})
+
+    # ---- migrate: same CIR, platform B -------------------------------------
+    spec_b = gpu_server()
+    b, restored_step, state_b = elastic_rescale(
+        builder, cir, a.lock, spec_b, mesh, CKPT,
+        lambda container, _mesh: container.entry["state_shardings"]())
+    print(f"\nmigrated to platform B ({spec_b.platform_id}) at step "
+          f"{restored_step} — SAME {cir.size_bytes()}-byte CIR, re-resolved")
+    print("  B picks:", {c.name: c.env for c in b.bundle.components()
+                         if c.manager in ("env", "opt", "parallel")})
+
+    # state continuity: B's restored params == A's params bit-for-bit
+    import numpy as np
+    wa = jax.tree_util.tree_leaves(state["params"])[0]
+    wb = jax.tree_util.tree_leaves(state_b["params"])[0]
+    np.testing.assert_array_equal(np.asarray(wa), np.asarray(wb))
+    assert int(state_b["opt"]["step"]) == int(state["opt"]["step"])
+
+    step_b = jax.jit(b.entry["train_step"])
+    losses_b = []
+    for i in range(restored_step, restored_step + 10):
+        batch = {k: jnp.asarray(v) for k, v in
+                 b.entry["batch_fn"](64, 2, step=i).items()}
+        state_b, m = step_b(state_b, batch)
+        losses_b.append(float(m["loss"]))
+    print(f"platform B: 10 more steps, loss {losses_b[0]:.4f} -> "
+          f"{losses_b[-1]:.4f}")
+    print("\nmigration preserved training state bit-for-bit — optimizer "
+          "step and params carried across platforms")
+
+
+if __name__ == "__main__":
+    main()

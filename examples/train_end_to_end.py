@@ -1,0 +1,87 @@
+"""End-to-end driver: train a ~100M-parameter decoder for a few hundred
+steps through the full stack — CIR pre-build → lazy-build → fault-tolerant
+driver with checkpointing — and report the loss curve.
+
+The data pipeline injects copy structure, so the loss measurably drops.
+
+Run:  PYTHONPATH=src python examples/train_end_to_end.py [--steps 200]
+(~100M params on CPU: expect a few seconds per step; use --small for CI.)
+"""
+import argparse
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import LazyBuilder, PreBuilder, probe_host
+from repro.core import catalog
+from repro.launch.mesh import make_smoke_mesh
+from repro.runtime import RuntimeConfig, TrainDriver
+
+# a ~107M-parameter dense LM (41M embedding + 66M blocks)
+CONFIG_100M = ArchConfig(
+    arch_id="demo-107m", family="dense-lm",
+    num_layers=10, d_model=640, n_heads=10, n_kv=5, head_dim=64,
+    d_ff=2560, vocab=32000, ffn="swiglu", norm="rms",
+    rope_theta=10000.0, dtype="float32", max_seq=1024,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--small", action="store_true",
+                    help="~10M params / fast CI variant")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e")
+    args = ap.parse_args()
+
+    cfg = CONFIG_100M
+    if args.small:
+        cfg = dataclasses.replace(cfg, num_layers=4, d_model=256,
+                                  n_heads=4, n_kv=2, d_ff=1024, vocab=8000,
+                                  arch_id="demo-10m")
+    n_params = cfg.param_count()
+    print(f"{cfg.arch_id}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq} tokens")
+
+    service = catalog.build_service()
+    cir = PreBuilder(service).prebuild(cfg, entrypoint="train")
+    inst = LazyBuilder(service).build(
+        cir, probe_host(mesh_shape=(1,), mesh_axes=("data",)),
+        mesh=make_smoke_mesh(1),
+        overrides={"lr": 6e-4, "total_steps": args.steps,
+                   "warmup": args.steps // 10})
+    e = inst.entry
+    step_fn = jax.jit(e["train_step"], donate_argnums=(0,))
+
+    def batch_fn(step):
+        return {k: jnp.asarray(v) for k, v in
+                e["batch_fn"](args.seq, args.batch, step=step).items()}
+
+    driver = TrainDriver(
+        train_step=step_fn,
+        init_state=lambda: e["init_state"](jax.random.PRNGKey(0)),
+        batch_fn=batch_fn,
+        ckpt_dir=os.path.join(args.ckpt_dir, cfg.arch_id),
+        cfg=RuntimeConfig(total_steps=args.steps,
+                          checkpoint_every=max(args.steps // 4, 10)))
+    t0 = time.perf_counter()
+    res = driver.run()
+    dt = time.perf_counter() - t0
+    k = max(1, args.steps // 10)
+    first = sum(res.losses[:k]) / k
+    last = sum(res.losses[-k:]) / k
+    toks = args.steps * args.batch * args.seq
+    print(f"done in {dt:.0f}s ({toks/dt:.0f} tok/s on CPU)")
+    print(f"loss: first-{k}-avg {first:.4f}  ->  last-{k}-avg {last:.4f}")
+    assert last < first, "loss did not decrease"
+    print("loss decreased — end-to-end training path OK")
+
+
+if __name__ == "__main__":
+    main()

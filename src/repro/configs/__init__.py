@@ -1,0 +1,23 @@
+"""Assigned architecture configs (exact public numbers) + lookup helpers."""
+from typing import Dict, List
+
+from .base import ArchConfig, FAMILY_MODEL_COMPONENT  # noqa: F401
+
+from . import (codeqwen15_7b, dbrx_132b, deepseek_v3_671b, gemma2_9b,
+               jamba_v01_52b, musicgen_medium, phi4_mini_38b, qwen2_vl_2b,
+               rwkv6_16b, starcoder2_3b)
+
+ARCHS: Dict[str, ArchConfig] = {
+    m.CONFIG.arch_id: m.CONFIG
+    for m in (deepseek_v3_671b, dbrx_132b, gemma2_9b, codeqwen15_7b,
+              phi4_mini_38b, starcoder2_3b, musicgen_medium, rwkv6_16b,
+              jamba_v01_52b, qwen2_vl_2b)
+}
+
+ARCH_IDS: List[str] = list(ARCHS.keys())
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return ARCHS[arch_id]

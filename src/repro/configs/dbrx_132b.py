@@ -1,0 +1,27 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained MoE.
+
+40L d_model=6144 48H (GQA kv=8) d_ff=10752/expert vocab=100352
+[hf:databricks/dbrx-base; unverified].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="dbrx-132b",
+    family="moe-lm",
+    num_layers=40,
+    d_model=6144,
+    n_heads=48,
+    n_kv=8,
+    head_dim=128,
+    d_ff=10752,
+    vocab=100352,
+    attention="gqa",
+    ffn="swiglu",
+    norm="ln",
+    num_experts=16,
+    top_k=4,
+    moe_ff=10752,
+    rope_theta=500000.0,
+    dtype="bfloat16",
+    notes="Every layer MoE (no dense prefix); softmax router.",
+)

@@ -1,0 +1,37 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8 experts, MTP.
+
+61L d_model=7168 128H d_ff(dense)=18432 moe_ff=2048 vocab=129280
+[arXiv:2412.19437; hf].  The assignment's ``d_ff=2048`` is the routed-expert
+hidden dim; the first 3 layers are dense with d_ff=18432 per the paper.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-v3-671b",
+    family="moe-lm",
+    num_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv=128,
+    head_dim=128,
+    d_ff=18432,
+    vocab=129280,
+    attention="mla",
+    q_lora_rank=1536,
+    kv_lora_rank=512,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    ffn="swiglu",
+    norm="rms",
+    num_experts=256,
+    top_k=8,
+    shared_experts=1,
+    moe_ff=2048,
+    first_dense_layers=3,
+    router_scale=True,
+    mtp=True,
+    rope_theta=10000.0,
+    dtype="bfloat16",
+    notes="MLA compressed KV cache; sigmoid router with selection bias; MTP aux head.",
+)

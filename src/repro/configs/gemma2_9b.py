@@ -1,0 +1,30 @@
+"""gemma2-9b [dense] — local+global alternating attention, logit softcaps.
+
+42L d_model=3584 16H (GQA kv=8) head_dim=256 d_ff=14336 vocab=256000
+[arXiv:2408.00118; hf].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="gemma2-9b",
+    family="dense-lm",
+    num_layers=42,
+    d_model=3584,
+    n_heads=16,
+    n_kv=8,
+    head_dim=256,
+    d_ff=14336,
+    vocab=256000,
+    attention="gqa",
+    sliding_window=4096,
+    alt_local_global=True,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    post_norms=True,
+    ffn="geglu",
+    norm="rms",
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    dtype="bfloat16",
+    notes="(1+w) RMSNorm, sqrt(d) embedding scale, query_pre_attn_scalar=d/h.",
+)

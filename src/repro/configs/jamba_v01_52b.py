@@ -1,0 +1,33 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave, MoE 16e top-2.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536 [arXiv:2403.19887; hf].
+Period-8 super-blocks: attention at offset 4, MoE on every 2nd layer.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="jamba-v0.1-52b",
+    family="hybrid-lm",
+    num_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=65536,
+    attention="gqa",
+    use_rope=False,             # Jamba uses no positional encoding
+    ffn="swiglu",
+    norm="rms",
+    num_experts=16,
+    top_k=2,
+    moe_ff=14336,
+    moe_every=2,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    attn_period=8,
+    attn_offset=4,
+    dtype="bfloat16",
+    notes="Sub-quadratic: only 4/32 layers carry a KV cache.",
+)

@@ -1,0 +1,28 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens (backbone only).
+
+48L d_model=1536 24H (MHA kv=24) d_ff=6144 vocab=2048 [arXiv:2306.05284; hf].
+The EnCodec frontend is a STUB: ``input_specs()`` provides precomputed frame
+embeddings; training consumes (embeds, labels), decode uses the codebook
+embedding table.  Sinusoidal absolute positions, LayerNorm, GELU FFN.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="musicgen-medium",
+    family="audio-lm",
+    num_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab=2048,
+    attention="gqa",
+    use_rope=False,
+    ffn="gelu",
+    norm="ln",
+    codebooks=4,
+    frontend="audio-frames",
+    dtype="bfloat16",
+    notes="Backbone only; 4-codebook delay pattern handled by the frontend stub.",
+)

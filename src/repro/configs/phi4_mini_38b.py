@@ -1,0 +1,24 @@
+"""phi4-mini-3.8b [dense] — RoPE (partial 0.75), SwiGLU, GQA, tied embeddings.
+
+32L d_model=3072 24H (GQA kv=8) d_ff=8192 vocab=200064 [arXiv:2412.08905; hf].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="phi4-mini-3.8b",
+    family="dense-lm",
+    num_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab=200064,
+    attention="gqa",
+    partial_rotary=0.75,
+    ffn="swiglu",
+    norm="rms",
+    tie_embeddings=True,
+    rope_theta=10000.0,
+    dtype="bfloat16",
+)

@@ -1,0 +1,28 @@
+"""qwen2-vl-2b [vlm] — M-RoPE, dynamic resolution (vision frontend stubbed).
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936 [arXiv:2409.12191; hf].
+``input_specs()`` provides precomputed patch embeddings + (3, b, s) M-RoPE
+position ids; the ViT frontend is a stub per the assignment.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-vl-2b",
+    family="vlm-lm",
+    num_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    attention="gqa",
+    qkv_bias=True,
+    mrope_sections=(16, 24, 24),
+    ffn="swiglu",
+    norm="rms",
+    tie_embeddings=True,
+    frontend="vision-patches",
+    rope_theta=1000000.0,
+    dtype="bfloat16",
+)

@@ -1,0 +1,24 @@
+"""rwkv6-1.6b 'Finch' [ssm] — attention-free, data-dependent decay.
+
+24L d_model=2048 d_ff=7168 vocab=65536, head_size 64 → 32 heads
+[arXiv:2404.05892; unverified].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="rwkv6-1.6b",
+    family="ssm-lm",
+    num_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv=32,
+    head_dim=64,
+    d_ff=7168,
+    vocab=65536,
+    attention="none",
+    ffn="relu2",
+    norm="ln",
+    rwkv_head_size=64,
+    dtype="bfloat16",
+    notes="WKV6 chunked scan; O(1) decode state (no KV cache).",
+)

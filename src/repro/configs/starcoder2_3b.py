@@ -1,0 +1,24 @@
+"""starcoder2-3b [dense] — GQA kv=2, RoPE, LayerNorm, pointwise-GELU FFN.
+
+30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152 [arXiv:2402.19173; hf].
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="starcoder2-3b",
+    family="dense-lm",
+    num_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab=49152,
+    attention="gqa",
+    qkv_bias=True,
+    ffn="gelu",
+    norm="ln",
+    tie_embeddings=True,
+    rope_theta=999999.4420358813,
+    dtype="bfloat16",
+)

@@ -1,0 +1,193 @@
+"""CIR — the Container Intermediate Representation — and its pre-builder.
+
+A CIR stores the *application* (the architecture config + entrypoint) and the
+*identifiers of its direct dependencies* only (paper §4.1).  Everything
+platform-specific (kernels, sharding plans, compiled steps, materialized
+weights) is resolved by the lazy-builder at deployment time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import hashlib
+import io
+import json
+import time
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from ..configs.base import ArchConfig, FAMILY_MODEL_COMPONENT
+from .component import DependencyItem
+from .registry import UniformComponentService
+
+
+@dataclasses.dataclass
+class CIR:
+    name: str
+    version: str
+    deps: Tuple[DependencyItem, ...]
+    app: Dict[str, Any]                    # the cross-platform application
+    entrypoint: str = "train"              # train | serve
+    workdir: str = "/app"
+    locals: Tuple[Tuple[str, str], ...] = ()   # (path, asset-name) pairs
+    seed: int = 0                          # init RNG seed (weights are lazy!)
+    created: float = 0.0
+
+    # -- serialization: the on-wire image -----------------------------------
+    def to_text(self) -> str:
+        """Human-readable manifest in the paper's §4.1 style."""
+        lines = [f"[NAME] {self.name}", f"[VERSION] {self.version}",
+                 "[DEPENDENCY]"]
+        for d in self.deps:
+            lines.append(f"- [{d.manager}] {d.name} [{d.specifier}]")
+        for path, asset in self.locals:
+            lines.append(f"- [LOCAL] {path} [{asset}]")
+        lines.append(f"[ENTRYPOINT] {self.entrypoint}")
+        lines.append(f"[WORKDIR] {self.workdir}")
+        lines.append(f"[SEED] {self.seed}")
+        return "\n".join(lines)
+
+    def to_bytes(self) -> bytes:
+        """The actual image bytes: gz(manifest + app payload)."""
+        payload = json.dumps({
+            "manifest": self.to_text(),
+            "app": self.app,
+            "created": self.created,
+        }, sort_keys=True).encode()
+        buf = io.BytesIO()
+        # mtime=0 → deterministic bytes (immutability / digest stability)
+        with gzip.GzipFile(fileobj=buf, mode="wb", mtime=0) as f:
+            f.write(payload)
+        return buf.getvalue()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "CIR":
+        payload = json.loads(gzip.decompress(b).decode())
+        return _parse(payload)
+
+    def size_bytes(self) -> int:
+        return len(self.to_bytes())
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.to_bytes()).hexdigest()
+
+    def arch_config(self) -> ArchConfig:
+        return ArchConfig.from_json(self.app["config"])
+
+
+def _parse(payload: Mapping[str, Any]) -> CIR:
+    deps: List[DependencyItem] = []
+    locals_: List[Tuple[str, str]] = []
+    name = version = entry = workdir = ""
+    seed = 0
+    for line in payload["manifest"].splitlines():
+        line = line.strip()
+        if line.startswith("[NAME]"):
+            name = line.split("]", 1)[1].strip()
+        elif line.startswith("[VERSION]"):
+            version = line.split("]", 1)[1].strip()
+        elif line.startswith("[ENTRYPOINT]"):
+            entry = line.split("]", 1)[1].strip()
+        elif line.startswith("[WORKDIR]"):
+            workdir = line.split("]", 1)[1].strip()
+        elif line.startswith("[SEED]"):
+            seed = int(line.split("]", 1)[1].strip())
+        elif line.startswith("- [LOCAL]"):
+            body = line[len("- [LOCAL]"):].strip()
+            path, asset = body.rsplit(" [", 1)
+            locals_.append((path.strip(), asset.rstrip("]")))
+        elif line.startswith("- ["):
+            mgr = line[3:line.index("]")]
+            rest = line[line.index("]") + 1:].strip()
+            n, spec = rest.rsplit(" [", 1)
+            deps.append(DependencyItem(mgr, n.strip(), spec.rstrip("]")))
+    return CIR(name=name, version=version, deps=tuple(deps),
+               app=dict(payload["app"]), entrypoint=entry, workdir=workdir,
+               locals=tuple(locals_), seed=seed,
+               created=payload.get("created", 0.0))
+
+
+# ---------------------------------------------------------------------------
+# Pre-builder
+# ---------------------------------------------------------------------------
+
+class PreBuilder:
+    """Development-platform side (paper §4.1).
+
+    Dependency analysis = the arch config's family implies a model component;
+    the entrypoint implies a runtime component; declared extra deps are taken
+    as-is.  The pre-builder then *filters indirect dependencies*: any declared
+    dep that is reachable from another declared dep's transitive closure in
+    the registry is dropped (the lazy-builder will re-derive it for the
+    actual target platform, possibly differently).
+    """
+
+    def __init__(self, service: Optional[UniformComponentService] = None):
+        self.service = service
+
+    def analyze(self, cfg: ArchConfig, entrypoint: str = "train",
+                with_weights: bool = False) -> List[DependencyItem]:
+        deps: List[DependencyItem] = [
+            DependencyItem("model", FAMILY_MODEL_COMPONENT[cfg.family], "~=1.0"),
+            DependencyItem("runtime",
+                           "train-step" if entrypoint == "train" else "serve-step",
+                           "any"),
+            DependencyItem("data", "pipeline-synthetic", "any")
+            if entrypoint == "train" else
+            DependencyItem("runtime", "request-batcher", "any"),
+        ]
+        if with_weights:
+            deps.append(DependencyItem("asset", f"weights-{cfg.arch_id}", "latest"))
+        if cfg.frontend:
+            deps.append(DependencyItem("asset", f"frontend-{cfg.frontend}", "any"))
+        for m, n, s in cfg.extra_deps:
+            deps.append(DependencyItem(m, n, s))
+        return deps
+
+    def filter_indirect(self, deps: Sequence[DependencyItem]
+                        ) -> List[DependencyItem]:
+        if self.service is None:
+            return list(deps)
+        # transitive closure of each dep's *metadata* dependencies
+        reach: Set[Tuple[str, str]] = set()
+        for d in deps:
+            reach |= self._closure_of(d, depth=0)
+        out: List[DependencyItem] = []
+        for d in deps:
+            if d.key() in reach:
+                continue  # indirect: some other declared dep already implies it
+            out.append(d)
+        return out
+
+    def _closure_of(self, d: DependencyItem, depth: int,
+                    max_depth: int = 12) -> Set[Tuple[str, str]]:
+        if depth > max_depth:
+            return set()
+        out: Set[Tuple[str, str]] = set()
+        try:
+            versions = self.service.vq(d.manager, d.name)
+        except Exception:
+            return out
+        for v in versions[-1:]:   # newest version's metadata is representative
+            for c in self.service.candidates(d.manager, d.name, v):
+                for sub in c.deps:
+                    if sub.key() not in out:
+                        out.add(sub.key())
+                        out |= self._closure_of(sub, depth + 1, max_depth)
+        return out
+
+    def prebuild(self, cfg: ArchConfig, entrypoint: str = "train",
+                 version: str = "1.0", seed: int = 0,
+                 with_weights: Optional[bool] = None) -> CIR:
+        if with_weights is None:
+            with_weights = (entrypoint == "serve")
+        deps = self.analyze(cfg, entrypoint, with_weights)
+        deps = self.filter_indirect(deps)
+        locals_: Tuple[Tuple[str, str], ...] = ()
+        if with_weights:
+            locals_ = ((f"/{cfg.arch_id}", f"weights-{cfg.arch_id}"),)
+        return CIR(
+            name=cfg.arch_id, version=version, deps=tuple(deps),
+            app={"config": cfg.to_json(), "kind": "arch-config"},
+            entrypoint=entrypoint, workdir=f"/{cfg.arch_id}",
+            locals=locals_, seed=seed, created=time.time(),
+        )

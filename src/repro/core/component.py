@@ -1,0 +1,299 @@
+"""Uniform components, versions, specifiers and dependency items.
+
+Every component is uniquely identified by ``(M, n, v, e)`` — manager, name,
+version, environment-variant (paper §3.2).  Metadata carries the dependency
+items ``D`` and the building-context contribution ``C``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import re
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Versions — PEP440-flavoured but deliberately small: N(.N)* with optional
+# pre-release tag.  Enough to express every upstream scheme we manage.
+# ---------------------------------------------------------------------------
+
+_VERSION_RE = re.compile(r"^\s*v?(\d+(?:\.\d+)*)(?:[-.]?(a|b|rc|dev)\.?(\d*))?\s*$")
+
+
+@dataclasses.dataclass(frozen=True, order=False)
+class Version:
+    release: Tuple[int, ...]
+    pre: Tuple[str, int] = ()  # type: ignore[assignment]
+
+    @staticmethod
+    def parse(s: str) -> "Version":
+        m = _VERSION_RE.match(str(s))
+        if not m:
+            raise ValueError(f"unparseable version: {s!r}")
+        release = tuple(int(p) for p in m.group(1).split("."))
+        pre: Tuple = ()
+        if m.group(2):
+            pre = (m.group(2), int(m.group(3) or 0))
+        return Version(release, pre)
+
+    def _key(self, width: int = 8):
+        rel = self.release + (0,) * (width - len(self.release))
+        # pre-releases sort before the release itself
+        pre = self.pre if self.pre else ("z", 0)
+        return (rel, pre)
+
+    def __lt__(self, other: "Version") -> bool:  # type: ignore[override]
+        return self._key() < other._key()
+
+    def __le__(self, other: "Version") -> bool:  # type: ignore[override]
+        return self._key() <= other._key()
+
+    def __gt__(self, other: "Version") -> bool:  # type: ignore[override]
+        return self._key() > other._key()
+
+    def __ge__(self, other: "Version") -> bool:  # type: ignore[override]
+        return self._key() >= other._key()
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, Version) and self._key() == other._key()
+
+    def __hash__(self) -> int:
+        return hash(self._key())
+
+    def truncated(self, n: int) -> Tuple[int, ...]:
+        return self.release[:n]
+
+    def __str__(self) -> str:
+        s = ".".join(str(p) for p in self.release)
+        if self.pre:
+            s += f"{self.pre[0]}{self.pre[1]}"
+        return s
+
+
+# ---------------------------------------------------------------------------
+# Specifiers: ``>=1.2``, ``~=2.0``, ``==1.2.3``, ``!=1.3``, ``<2``, ``latest``,
+# ``any`` and comma-separated conjunctions (``>=1.0,<2.0``).
+# ---------------------------------------------------------------------------
+
+_CLAUSE_RE = re.compile(r"^(==|!=|>=|<=|~=|>|<|=)?\s*(.+)$")
+
+
+class Specifier:
+    def __init__(self, text: str):
+        self.text = (text or "any").strip() or "any"
+        self._clauses: List[Tuple[str, Optional[Version]]] = []
+        for raw in self.text.split(","):
+            raw = raw.strip()
+            if not raw:
+                continue
+            low = raw.lower()
+            if low in ("any", "*"):
+                self._clauses.append(("any", None))
+                continue
+            if low == "latest":
+                self._clauses.append(("latest", None))
+                continue
+            m = _CLAUSE_RE.match(raw)
+            if not m:
+                raise ValueError(f"bad specifier clause: {raw!r}")
+            op = m.group(1) or "=="
+            if op == "=":
+                op = "=="
+            self._clauses.append((op, Version.parse(m.group(2))))
+
+    @property
+    def wants_latest(self) -> bool:
+        return any(op == "latest" for op, _ in self._clauses)
+
+    def matches(self, v: Version) -> bool:
+        for op, ref in self._clauses:
+            if op in ("any", "latest"):
+                continue
+            assert ref is not None
+            if op == "==":
+                # ``==1.2`` matches 1.2.* (prefix match, PEP440-style)
+                if v.truncated(len(ref.release)) != ref.release or (
+                        ref.pre and v.pre != ref.pre):
+                    return False
+            elif op == "!=":
+                if v.truncated(len(ref.release)) == ref.release:
+                    return False
+            elif op == ">=":
+                if not v >= ref:
+                    return False
+            elif op == "<=":
+                if not v <= ref:
+                    return False
+            elif op == ">":
+                if not v > ref:
+                    return False
+            elif op == "<":
+                if not v < ref:
+                    return False
+            elif op == "~=":
+                # compatible release: >=ref and ==ref truncated by one
+                if not v >= ref:
+                    return False
+                if v.truncated(max(1, len(ref.release) - 1)) != ref.release[:-1]:
+                    return False
+        return True
+
+    def intersect_text(self, other: "Specifier") -> str:
+        """Conjunction of two specifiers (used by conflict resolution)."""
+        parts = [p for p in (self.text, other.text)
+                 if p not in ("any", "*")]
+        return ",".join(parts) if parts else "any"
+
+    def __repr__(self) -> str:
+        return f"Specifier({self.text!r})"
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, Specifier) and self.text == other.text
+
+    def __hash__(self) -> int:
+        return hash(self.text)
+
+
+# ---------------------------------------------------------------------------
+# Dependency items d = (M, n, specifier)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DependencyItem:
+    manager: str              # component manager M ("layer", "kernel", ...)
+    name: str                 # n
+    specifier: str = "any"    # raw text
+
+    @property
+    def spec(self) -> Specifier:
+        return Specifier(self.specifier)
+
+    def key(self) -> Tuple[str, str]:
+        return (self.manager, self.name)
+
+    def __str__(self) -> str:
+        return f"[{self.manager}] {self.name} [{self.specifier}]"
+
+
+# ---------------------------------------------------------------------------
+# Environment variants + requirements
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Requirement:
+    """A predicate over the specSheet context, e.g. ('chip', 'in', ['tpu-v5e']).
+
+    ops: eq, ne, in, ge, le, has (membership of value in a context list),
+         true/false (boolean context keys).
+    """
+    key: str
+    op: str
+    value: Any = None
+
+    def satisfied(self, ctx: Mapping[str, Any]) -> bool:
+        have = ctx.get(self.key)
+        if self.op == "eq":
+            return have == self.value
+        if self.op == "ne":
+            return have != self.value
+        if self.op == "in":
+            return have in self.value
+        if self.op == "ge":
+            return have is not None and have >= self.value
+        if self.op == "le":
+            return have is not None and have <= self.value
+        if self.op == "has":
+            return isinstance(have, (list, tuple, set)) and self.value in have
+        if self.op == "true":
+            return bool(have)
+        if self.op == "false":
+            return not bool(have)
+        raise ValueError(f"unknown requirement op {self.op}")
+
+    def to_json(self) -> List[Any]:
+        return [self.key, self.op, self.value]
+
+
+# ---------------------------------------------------------------------------
+# UniformComponent
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class UniformComponent:
+    """Immutable building block (paper §3.2).
+
+    ``payload`` is the factory reference: the name of a python callable in
+    the in-process catalog (the converter output analog).  ``size_bytes`` is
+    the component's wire size — real bytes for asset components (weights),
+    measured source+metadata bytes for module components.
+    """
+    manager: str
+    name: str
+    version: str
+    env: str                                   # environment-variant id
+    deps: Tuple[DependencyItem, ...] = ()
+    context: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    requires: Tuple[Requirement, ...] = ()
+    provides: Tuple[str, ...] = ()             # capability tags
+    payload: str = ""                          # catalog factory reference
+    size_bytes: int = 0
+    perf_score: float = 1.0                    # relative exec-perf rank in-family
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- identity ------------------------------------------------------------
+    @property
+    def vkey(self) -> Version:
+        return Version.parse(self.version)
+
+    def ident(self) -> Tuple[str, str, str, str]:
+        return (self.manager, self.name, self.version, self.env)
+
+    def ident_str(self) -> str:
+        return f"{self.manager}:{self.name}=={self.version}@{self.env}"
+
+    def digest(self) -> str:
+        blob = json.dumps({
+            "id": self.ident(),
+            "deps": [[d.manager, d.name, d.specifier] for d in self.deps],
+            "context": self.context,
+            "payload": self.payload,
+            "provides": list(self.provides),
+        }, sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def env_satisfied(self, ctx: Mapping[str, Any]) -> bool:
+        return all(r.satisfied(ctx) for r in self.requires)
+
+    # -- (de)serialization — the 'converter' archive format -----------------
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "manager": self.manager, "name": self.name,
+            "version": self.version, "env": self.env,
+            "deps": [[d.manager, d.name, d.specifier] for d in self.deps],
+            "context": self.context,
+            "requires": [r.to_json() for r in self.requires],
+            "provides": list(self.provides),
+            "payload": self.payload,
+            "size_bytes": self.size_bytes,
+            "perf_score": self.perf_score,
+            "meta": self.meta,
+        }
+
+    @staticmethod
+    def from_json(d: Mapping[str, Any]) -> "UniformComponent":
+        return UniformComponent(
+            manager=d["manager"], name=d["name"], version=d["version"],
+            env=d["env"],
+            deps=tuple(DependencyItem(*x) for x in d.get("deps", ())),
+            context=dict(d.get("context", {})),
+            requires=tuple(Requirement(*x) for x in d.get("requires", ())),
+            provides=tuple(d.get("provides", ())),
+            payload=d.get("payload", ""),
+            size_bytes=int(d.get("size_bytes", 0)),
+            perf_score=float(d.get("perf_score", 1.0)),
+            meta=dict(d.get("meta", {})),
+        )
+
+
+def component_sort_key(c: UniformComponent):
+    return (c.vkey, c.env)

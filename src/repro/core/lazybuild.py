@@ -1,0 +1,299 @@
+"""Lazy-builder: deployment-time resolution → fetch → assembly (paper §4.2).
+
+The lazy-builder (1) inspects the target platform (specSheet), (2) resolves
+the CIR's declarative direct dependencies to concrete uniform components
+(Algorithms 1+2), (3) fetches missing components against the local store
+(component-level *active sharing*), and (4) assembles them into a runnable
+container instance — here, the composed model + step functions ready to be
+``jit(...).lower(...).compile()``d for the target mesh, plus a version-lock
+manifest for bit-identical rebuilds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .cir import CIR
+from .component import DependencyItem, UniformComponent
+from .registry import UniformComponentService
+from .resolution import Resolution, uniform_dependency_resolution
+from .spec import SpecSheet
+from .store import LocalComponentStore
+
+# Payload catalog: payload-reference -> python factory.  Populated by
+# repro.core.catalog at import time (the 'converted component' bodies).
+PAYLOADS: Dict[str, Callable] = {}
+
+
+def register_payload(name: str):
+    def deco(fn):
+        if name in PAYLOADS and PAYLOADS[name] is not fn:
+            raise ValueError(f"payload {name!r} already registered")
+        PAYLOADS[name] = fn
+        return fn
+    return deco
+
+
+class ComponentBundle:
+    """The selected components of one build, addressable by (manager, name).
+
+    Assembly code pulls concrete variants from here — this is how the model
+    family finds *which* attention/kernel/plan variant Algorithm 1 picked.
+    """
+
+    def __init__(self, resolution: Resolution):
+        self.resolution = resolution
+        self._by_key = dict(resolution.selected_by_key)
+
+    def component(self, manager: str, name: str) -> UniformComponent:
+        return self._by_key[(manager, name)]
+
+    def has(self, manager: str, name: str) -> bool:
+        return (manager, name) in self._by_key
+
+    def payload(self, manager: str, name: str) -> Callable:
+        c = self.component(manager, name)
+        try:
+            return PAYLOADS[c.payload]
+        except KeyError:
+            raise KeyError(
+                f"component {c.ident_str()} references unknown payload "
+                f"{c.payload!r} — is repro.core.catalog imported?") from None
+
+    def payload_of(self, c: UniformComponent) -> Callable:
+        return PAYLOADS[c.payload]
+
+    @property
+    def context(self) -> Dict[str, Any]:
+        return self.resolution.context
+
+    def components(self) -> List[UniformComponent]:
+        return list(self.resolution.components)
+
+
+# ---------------------------------------------------------------------------
+# Lockfile (paper §4.2: "a dedicated version locking file for each platform")
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Lockfile:
+    cir_digest: str
+    platform_id: str
+    seed: int
+    pins: Tuple[Tuple[str, str, str, str], ...]   # (M, n, v, e)
+    digests: Tuple[str, ...]
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "Lockfile":
+        d = json.loads(s)
+        d["pins"] = tuple(tuple(p) for p in d["pins"])
+        d["digests"] = tuple(d["digests"])
+        return Lockfile(**d)
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Build report (feeds every benchmark)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BuildReport:
+    cir_name: str
+    platform_id: str
+    resolve_s: float = 0.0
+    fetch_s: float = 0.0            # compute time spent in fetch bookkeeping
+    assemble_s: float = 0.0
+    bytes_cir: int = 0
+    bytes_fetched: int = 0          # network bytes for missing components
+    bytes_total_components: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    n_components: int = 0
+    restarts: int = 0
+    locked: bool = False
+
+    def network_time(self, bandwidth_bps: float) -> float:
+        """Simulated link time: CIR pull + parallel component fetch."""
+        return (self.bytes_cir + self.bytes_fetched) * 8.0 / bandwidth_bps
+
+    def lazy_build_time(self, bandwidth_bps: float) -> float:
+        # resolution overlaps fetch in the real system (paper §4.3 converters
+        # split metadata from payload); assembly is strictly after.
+        return max(self.resolve_s, self.network_time(bandwidth_bps)) \
+            + self.fetch_s + self.assemble_s
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Container instance
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContainerInstance:
+    """The assembled, runnable unit.
+
+    ``model`` is the family-assembled Model object (init/apply + sharding
+    rules); ``entry`` holds the built entrypoint callables (train_step or
+    prefill/decode) produced by the runtime components.  The launcher gives
+    it a mesh to produce shardings, lower and compile.
+    """
+    cir: CIR
+    spec: SpecSheet
+    bundle: ComponentBundle
+    model: Any
+    entry: Dict[str, Callable]
+    lock: Lockfile
+    report: BuildReport
+
+    @property
+    def arch_id(self) -> str:
+        return self.cir.name
+
+
+class LazyBuilder:
+    def __init__(self, service: UniformComponentService,
+                 store: Optional[LocalComponentStore] = None,
+                 link_bandwidth_bps: float = 500e6):
+        self.service = service
+        self.store = store or LocalComponentStore()
+        self.link_bandwidth_bps = link_bandwidth_bps
+
+    # ------------------------------------------------------------------
+    def build(self, cir: CIR, spec: SpecSheet,
+              mesh: Any = None,
+              overrides: Optional[Mapping[str, Any]] = None,
+              assemble: bool = True) -> ContainerInstance:
+        """The lazy-build: resolve → fetch → assemble → lock."""
+        report = BuildReport(cir_name=cir.name, platform_id=spec.platform_id,
+                             bytes_cir=cir.size_bytes())
+
+        # (1) inspect platform → building context
+        ctx0 = spec.context()
+        ctx0["entrypoint"] = cir.entrypoint
+        if overrides:
+            ctx0.update(overrides)
+
+        # (2) resolve (Algorithms 1 + 2); cached digests feed deployability
+        t0 = time.perf_counter()
+        resolution = uniform_dependency_resolution(
+            cir.deps, self.service, ctx0,
+            cached_digests=self.store.digests(),
+            link_bandwidth=self.link_bandwidth_bps / 8.0)
+        report.resolve_s = time.perf_counter() - t0
+        report.restarts = resolution.restarts
+        report.n_components = len(resolution.components)
+
+        # (3) fetch missing components — component-level active sharing
+        t0 = time.perf_counter()
+        for c in resolution.components:
+            report.bytes_total_components += c.size_bytes
+            if self.store.has(c):
+                report.cache_hits += 1
+                self.store.put(c)   # count the hit in store stats
+            else:
+                self.service.fetch(c)
+                report.bytes_fetched += c.size_bytes
+                report.cache_misses += 1
+                self.store.put(c)
+        self.store.record_build(f"{cir.name}@{spec.platform_id}",
+                                resolution.components)
+        report.fetch_s = time.perf_counter() - t0
+
+        # (4) assemble: overlay components into model + entry steps
+        bundle = ComponentBundle(resolution)
+        t0 = time.perf_counter()
+        model, entry = (None, {})
+        if assemble:
+            model, entry = self._assemble(cir, spec, bundle, mesh)
+        report.assemble_s = time.perf_counter() - t0
+
+        lock = Lockfile(
+            cir_digest=cir.digest(), platform_id=spec.platform_id,
+            seed=cir.seed,
+            pins=tuple(c.ident() for c in resolution.components),
+            digests=tuple(c.digest() for c in resolution.components))
+
+        return ContainerInstance(cir=cir, spec=spec, bundle=bundle,
+                                 model=model, entry=entry, lock=lock,
+                                 report=report)
+
+    # ------------------------------------------------------------------
+    def build_from_lock(self, cir: CIR, lock: Lockfile, spec: SpecSheet,
+                        mesh: Any = None,
+                        assemble: bool = True) -> ContainerInstance:
+        """CIR-locked rebuild: CQ-only (no VS/ES), deterministic and
+        bit-identical (paper §3.3, §5.4 CIR-locked)."""
+        if lock.cir_digest != cir.digest():
+            raise ValueError("lockfile does not match this CIR")
+        report = BuildReport(cir_name=cir.name, platform_id=spec.platform_id,
+                             bytes_cir=cir.size_bytes(), locked=True)
+        t0 = time.perf_counter()
+        comps = [self.service.cq(*pin) for pin in lock.pins]
+        for c, dg in zip(comps, lock.digests):
+            if c.digest() != dg:
+                raise ValueError(f"immutability violation for {c.ident_str()}")
+        report.resolve_s = time.perf_counter() - t0
+        report.n_components = len(comps)
+
+        t0 = time.perf_counter()
+        for c in comps:
+            report.bytes_total_components += c.size_bytes
+            if self.store.has(c):
+                report.cache_hits += 1
+            else:
+                self.service.fetch(c)
+                report.bytes_fetched += c.size_bytes
+                report.cache_misses += 1
+            self.store.put(c)
+        report.fetch_s = time.perf_counter() - t0
+
+        # Rebuild a Resolution facade for assembly
+        res = Resolution(components=comps, context={**spec.context(),
+                                                    "entrypoint": cir.entrypoint},
+                         tree=None, restarts=0, learned={},
+                         selected_by_key={(c.manager, c.name): c for c in comps})
+        bundle = ComponentBundle(res)
+        t0 = time.perf_counter()
+        model, entry = (None, {})
+        if assemble:
+            model, entry = self._assemble(cir, spec, bundle, mesh)
+        report.assemble_s = time.perf_counter() - t0
+        return ContainerInstance(cir=cir, spec=spec, bundle=bundle,
+                                 model=model, entry=entry, lock=lock,
+                                 report=report)
+
+    # ------------------------------------------------------------------
+    def _assemble(self, cir: CIR, spec: SpecSheet, bundle: ComponentBundle,
+                  mesh: Any) -> Tuple[Any, Dict[str, Callable]]:
+        """Uniform Component Assembler: the OverlayFS-mount analogue.
+
+        The model-family component's payload composes the layer/kernel
+        components; runtime components wrap the model into step functions.
+        """
+        cfg = cir.arch_config()
+        # the model family is whichever 'model' manager component was selected
+        model_comps = [c for c in bundle.components() if c.manager == "model"]
+        if not model_comps:
+            raise ValueError("no model family component resolved")
+        family = model_comps[0]
+        model = bundle.payload_of(family)(cfg, bundle.context, bundle)
+
+        entry: Dict[str, Callable] = {}
+        for c in bundle.components():
+            if c.manager not in ("runtime", "data"):
+                continue
+            builder = bundle.payload_of(c)
+            built = builder(model, cfg, bundle.context, bundle, mesh=mesh)
+            if isinstance(built, Mapping):
+                entry.update(built)
+        return model, entry

@@ -1,0 +1,204 @@
+"""Uniform Component Registry + upstream sources + converters (paper §4.3).
+
+The registry answers the three queries of Algorithm 1:
+
+    VQ : (M, n)       -> V      (available versions)
+    EQ : (M, n, v)    -> E      (environment variants of a version)
+    CQ : (M, n, v, e) -> c      (the component itself)
+
+Upstream sources model PyPI / Debian-snapshot / DockerHub: in this framework
+they are generators that *convert* raw catalog entries (python module
+factories, generated weight assets, HF-style config dicts) into uniform
+components on demand — the paper's component converters.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+from .component import (DependencyItem, Requirement, UniformComponent,
+                        Version, component_sort_key)
+
+
+class RegistryError(KeyError):
+    pass
+
+
+class UniformComponentRegistry:
+    """In-memory + optional on-disk index of uniform components."""
+
+    def __init__(self, path: Optional[str] = None):
+        self._by_mn: Dict[Tuple[str, str], Dict[str, Dict[str, UniformComponent]]] = {}
+        self._lock = threading.Lock()
+        self.path = path
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- registration --------------------------------------------------------
+    def register(self, c: UniformComponent, overwrite: bool = False) -> None:
+        with self._lock:
+            vs = self._by_mn.setdefault((c.manager, c.name), {})
+            es = vs.setdefault(c.version, {})
+            if c.env in es and not overwrite:
+                # components are immutable: re-registration must be identical
+                if es[c.env].digest() != c.digest():
+                    raise RegistryError(
+                        f"immutable component re-registered with different "
+                        f"content: {c.ident_str()}")
+                return
+            es[c.env] = c
+
+    def register_all(self, comps: Iterable[UniformComponent]) -> None:
+        for c in comps:
+            self.register(c)
+
+    # -- the three queries ----------------------------------------------------
+    def vq(self, manager: str, name: str) -> List[str]:
+        vs = self._by_mn.get((manager, name), {})
+        return sorted(vs.keys(), key=Version.parse)
+
+    def eq(self, manager: str, name: str, version: str) -> List[str]:
+        vs = self._by_mn.get((manager, name), {})
+        return sorted(vs.get(version, {}).keys())
+
+    def cq(self, manager: str, name: str, version: str, env: str
+           ) -> UniformComponent:
+        try:
+            return self._by_mn[(manager, name)][version][env]
+        except KeyError:
+            raise RegistryError(
+                f"no component {manager}:{name}=={version}@{env}") from None
+
+    # -- bulk views ------------------------------------------------------------
+    def candidates(self, manager: str, name: str, version: str
+                   ) -> List[UniformComponent]:
+        vs = self._by_mn.get((manager, name), {})
+        return sorted(vs.get(version, {}).values(), key=component_sort_key)
+
+    def all_components(self) -> List[UniformComponent]:
+        out: List[UniformComponent] = []
+        for vs in self._by_mn.values():
+            for es in vs.values():
+                out.extend(es.values())
+        return out
+
+    def names(self, manager: Optional[str] = None) -> List[Tuple[str, str]]:
+        keys = list(self._by_mn.keys())
+        if manager is not None:
+            keys = [k for k in keys if k[0] == manager]
+        return sorted(keys)
+
+    def __len__(self) -> int:
+        return sum(len(es) for vs in self._by_mn.values()
+                   for es in vs.values())
+
+    # -- persistence ------------------------------------------------------------
+    def dump(self, path: Optional[str] = None) -> None:
+        path = path or self.path
+        assert path, "no registry path"
+        data = [c.to_json() for c in self.all_components()]
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f)
+        os.replace(tmp, path)
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            data = json.load(f)
+        for d in data:
+            self.register(UniformComponent.from_json(d), overwrite=True)
+
+
+# ---------------------------------------------------------------------------
+# Upstream sources + converters
+# ---------------------------------------------------------------------------
+
+class UpstreamSource:
+    """Models one upstream ecosystem (PyPI / Debian / DockerHub analogue).
+
+    ``lister``  : () -> iterable of raw entries
+    ``converter``: raw entry -> [UniformComponent]  (the paper's converter)
+    """
+
+    def __init__(self, name: str,
+                 lister: Callable[[], Iterable],
+                 converter: Callable[[object], Sequence[UniformComponent]]):
+        self.name = name
+        self.lister = lister
+        self.converter = converter
+
+    def convert_all(self) -> List[UniformComponent]:
+        out: List[UniformComponent] = []
+        for raw in self.lister():
+            out.extend(self.converter(raw))
+        return out
+
+    def convert_matching(self, manager: str, name: str
+                         ) -> List[UniformComponent]:
+        out: List[UniformComponent] = []
+        for raw in self.lister():
+            for c in self.converter(raw):
+                if c.manager == manager and c.name == name:
+                    out.append(c)
+        return out
+
+
+class UniformComponentService:
+    """Registry-first, upstream-fallback component service (paper Fig. 5).
+
+    Network usage is *byte-accounted*: every component handed to a client is
+    charged its ``size_bytes`` so benchmarks can model links from 10 Mbps to
+    1 Gbps without real networking.
+    """
+
+    def __init__(self, registry: UniformComponentRegistry,
+                 upstreams: Sequence[UpstreamSource] = ()):
+        self.registry = registry
+        self.upstreams = list(upstreams)
+        self.bytes_served = 0
+        self.requests = 0
+        self.conversions = 0
+
+    # -- queries with on-demand conversion -----------------------------------
+    def vq(self, manager: str, name: str) -> List[str]:
+        vs = self.registry.vq(manager, name)
+        if not vs:
+            self._pull_upstream(manager, name)
+            vs = self.registry.vq(manager, name)
+        return vs
+
+    def eq(self, manager: str, name: str, version: str) -> List[str]:
+        es = self.registry.eq(manager, name, version)
+        if not es:
+            self._pull_upstream(manager, name)
+            es = self.registry.eq(manager, name, version)
+        return es
+
+    def cq(self, manager: str, name: str, version: str, env: str
+           ) -> UniformComponent:
+        try:
+            return self.registry.cq(manager, name, version, env)
+        except RegistryError:
+            # paper Fig. 5: registry miss → fetch + convert from upstream
+            self._pull_upstream(manager, name)
+            return self.registry.cq(manager, name, version, env)
+
+    def candidates(self, manager: str, name: str, version: str
+                   ) -> List[UniformComponent]:
+        return self.registry.candidates(manager, name, version)
+
+    def fetch(self, c: UniformComponent) -> UniformComponent:
+        """'Download' a component: account its bytes."""
+        self.requests += 1
+        self.bytes_served += c.size_bytes
+        return c
+
+    def _pull_upstream(self, manager: str, name: str) -> None:
+        for up in self.upstreams:
+            converted = up.convert_matching(manager, name)
+            if converted:
+                self.conversions += len(converted)
+                self.registry.register_all(converted)
+                return

@@ -1,0 +1,191 @@
+"""Algorithm 2 — Uniform Dependency Resolution.
+
+BFS over the dependency tree, with a *building context* ``C`` flowing across
+managers (the paper's cross-manager compatibility mechanism), and
+conflict-driven constraint learning with deterministic restarts (a compact
+CDCL in the style the paper cites [14]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .component import DependencyItem, Specifier, UniformComponent, Version
+from .registry import UniformComponentService
+from .selection import (DeployabilityEvaluator, SelectionError,
+                        uniform_component_selection)
+
+
+class ResolutionError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class Node:
+    dep: DependencyItem
+    component: Optional[UniformComponent] = None
+    children: List["Node"] = dataclasses.field(default_factory=list)
+    reused: bool = False
+
+    def walk(self):
+        yield self
+        for ch in self.children:
+            yield from ch.walk()
+
+
+# Manager-specific "getSpec(C)" hooks: derive extra version constraints from
+# the building context (e.g. interpreter version for pip in the paper; dtype
+# or mesh divisibility facts here).  Registered by the catalog.
+_CONTEXT_SPEC_HOOKS: Dict[str, Callable[[str, Mapping[str, Any]], Optional[str]]] = {}
+
+
+def register_context_spec_hook(
+        manager: str,
+        hook: Callable[[str, Mapping[str, Any]], Optional[str]]) -> None:
+    _CONTEXT_SPEC_HOOKS[manager] = hook
+
+
+def _get_spec(dep: DependencyItem, ctx: Mapping[str, Any]) -> Optional[str]:
+    hook = _CONTEXT_SPEC_HOOKS.get(dep.manager)
+    return hook(dep.name, ctx) if hook else None
+
+
+@dataclasses.dataclass
+class Resolution:
+    components: List[UniformComponent]       # L, BFS order, deduped
+    context: Dict[str, Any]                  # final building context
+    tree: Node
+    restarts: int
+    learned: Dict[Tuple[str, str], str]      # learned version constraints
+    selected_by_key: Dict[Tuple[str, str], UniformComponent] = \
+        dataclasses.field(default_factory=dict)
+
+    def explain(self) -> str:
+        lines: List[str] = []
+
+        def rec(n: Node, depth: int):
+            tag = ""
+            if n.reused:
+                tag = "  (reused)"
+            cid = n.component.ident_str() if n.component else "<unresolved>"
+            lines.append("  " * depth + f"{n.dep} -> {cid}{tag}")
+            for ch in n.children:
+                rec(ch, depth + 1)
+
+        for ch in self.tree.children:
+            rec(ch, 0)
+        return "\n".join(lines)
+
+
+def uniform_dependency_resolution(
+        deps: Sequence[DependencyItem],
+        service: UniformComponentService,
+        host_context: Mapping[str, Any],
+        cached_digests: Optional[set] = None,
+        link_bandwidth: float = 500e6 / 8,
+        max_restarts: int = 32,
+        max_nodes: int = 4096,
+) -> Resolution:
+    """The paper's Algorithm 2 with restart-based conflict learning.
+
+    A *conflict* arises when a newly selected component requires (M, n) at a
+    version incompatible with the component already chosen for (M, n).  We
+    learn the conjunction of every specifier seen for (M, n) and restart;
+    selection under the learned constraint either converges or proves
+    unsatisfiability (SelectionError -> ResolutionError).
+    """
+    learned: Dict[Tuple[str, str], str] = {}
+    restarts = 0
+
+    while True:
+        try:
+            return _resolve_once(deps, service, host_context, learned,
+                                 cached_digests, link_bandwidth, restarts,
+                                 max_nodes)
+        except _Conflict as cf:
+            restarts += 1
+            if restarts > max_restarts:
+                raise ResolutionError(
+                    f"conflict resolution did not converge after "
+                    f"{max_restarts} restarts: {cf}") from None
+            key = cf.key
+            merged = Specifier(learned.get(key, "any"))
+            for s in cf.specs:
+                merged = Specifier(merged.intersect_text(Specifier(s)))
+            learned[key] = merged.text
+        except SelectionError as e:
+            raise ResolutionError(str(e)) from e
+
+
+class _Conflict(Exception):
+    def __init__(self, key: Tuple[str, str], specs: Sequence[str]):
+        super().__init__(f"{key[0]}:{key[1]} constrained by {list(specs)}")
+        self.key = key
+        self.specs = list(specs)
+
+
+def _resolve_once(deps, service, host_context, learned, cached_digests,
+                  link_bandwidth, restart_idx, max_nodes) -> Resolution:
+    ctx: Dict[str, Any] = dict(host_context)
+    root = Node(DependencyItem("root", "root", "any"))
+    for d in deps:
+        root.children.append(Node(d))
+
+    selected: Dict[Tuple[str, str], UniformComponent] = {}
+    seen_specs: Dict[Tuple[str, str], List[str]] = {}
+    order: List[UniformComponent] = []
+
+    queue: deque[Node] = deque(root.children)
+    visited = 0
+    while queue:
+        node = queue.popleft()
+        visited += 1
+        if visited > max_nodes:
+            raise ResolutionError(f"dependency tree exceeded {max_nodes} nodes")
+        d = node.dep
+        key = d.key()
+        seen_specs.setdefault(key, []).append(d.specifier)
+
+        # node.d.SatisfiedBy(L): reuse if the already-selected component for
+        # this (M, n) matches this node's specifier.
+        if key in selected:
+            prev = selected[key]
+            if d.spec.matches(Version.parse(prev.version)):
+                node.component = prev
+                node.reused = True
+                continue
+            # incompatible requirement on an already-pinned component
+            raise _Conflict(key, seen_specs[key])
+
+        extra = learned.get(key)
+        ctx_spec = _get_spec(d, ctx)
+        if ctx_spec:
+            extra = (Specifier(extra).intersect_text(Specifier(ctx_spec))
+                     if extra else ctx_spec)
+
+        evaluator = DeployabilityEvaluator(ctx, cached_digests, link_bandwidth)
+        cs = uniform_component_selection(d, service, evaluator,
+                                         extra_constraint=extra)
+
+        # hasConflict(): the fresh selection may clash with learned constraints
+        # raised by *later* specs of the same key — handled on revisit above.
+        node.component = cs
+        selected[key] = cs
+        order.append(cs)
+
+        # CollectContext: merge the component's context contribution.
+        for k, v in cs.context.items():
+            if k in ctx and ctx[k] != v and not k.startswith("_"):
+                # context clash across managers is also a conflict — learn it
+                raise _Conflict(key, seen_specs[key] + [f"=={cs.version}"])
+            ctx[k] = v
+
+        for dep in cs.deps:
+            child = Node(dep)
+            node.children.append(child)
+            queue.append(child)
+
+    return Resolution(components=order, context=ctx, tree=root,
+                      restarts=restart_idx, learned=dict(learned),
+                      selected_by_key=selected)

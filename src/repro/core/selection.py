@@ -1,0 +1,150 @@
+"""Algorithm 1 — Uniform Component Selection, with the deployability metric.
+
+    Input:  dependency item d = (M, n, specifier), building context (from the
+            specSheet + resolution so far), local store (cache visibility).
+    Output: uniform component c.
+
+Version selection VS picks the best version matching the specifier; the
+environment selection ES ranks environment variants by *deployability*:
+"local caching, component size, download time, and execution performance"
+(paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from .component import (DependencyItem, Specifier, UniformComponent, Version)
+from .registry import UniformComponentService
+
+
+class SelectionError(Exception):
+    def __init__(self, d: DependencyItem, msg: str):
+        super().__init__(f"no component satisfies {d}: {msg}")
+        self.dep = d
+
+
+# ---------------------------------------------------------------------------
+# Deployability evaluator
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Deployability:
+    score: float
+    hard_ok: bool
+    parts: Dict[str, float]
+
+
+class DeployabilityEvaluator:
+    """Scores a candidate environment-variant against a specSheet context.
+
+    Hard gate: every ``Requirement`` must hold.  Soft score combines:
+      + cache locality  (component already in the local store)
+      + download time   (size / link bandwidth; smaller is better)
+      + execution perf  (per-variant relative score, e.g. pallas > lax > naive
+                         when on TPU; reversed weighting when interpreting)
+      + specificity     (variants that *state* more satisfied requirements
+                         outrank catch-all 'generic' variants)
+    """
+
+    def __init__(self, ctx: Mapping[str, Any],
+                 cached_digests: Optional[set] = None,
+                 link_bandwidth: float = 500e6 / 8):  # 500 Mbps default
+        self.ctx = ctx
+        self.cached = cached_digests or set()
+        self.link_bandwidth = max(link_bandwidth, 1.0)
+
+    def evaluate(self, c: UniformComponent) -> Deployability:
+        if not c.env_satisfied(self.ctx):
+            return Deployability(float("-inf"), False, {"hard": 0.0})
+        parts: Dict[str, float] = {}
+        # download time in seconds (1 GiB @500Mbps ≈ 17 s); a locally cached
+        # component costs nothing — the cache bonus is exactly the download
+        # it avoids (+ a small deterministic tie-break), so cache locality
+        # dominates for GB-scale components and is negligible for KB ones.
+        dl = min(c.size_bytes / self.link_bandwidth, 3600.0) / 10.0
+        if c.digest() in self.cached:
+            parts["cache"] = 0.05          # deterministic tie-break
+            parts["download"] = 0.0        # nothing to pull
+        else:
+            parts["cache"] = 0.0
+            parts["download"] = -dl
+        # execution performance rank (catalog-assigned, per family)
+        parts["perf"] = 3.0 * float(c.perf_score)
+        # specificity: prefer variants that positively matched requirements
+        parts["specificity"] = 0.25 * len(c.requires)
+        return Deployability(sum(parts.values()), True, parts)
+
+
+# ---------------------------------------------------------------------------
+# VS / ES
+# ---------------------------------------------------------------------------
+
+def version_select(versions: Sequence[str], specifier: str) -> Optional[str]:
+    """VS: highest version matching the specifier (or highest overall for
+    'latest'/'any')."""
+    spec = Specifier(specifier)
+    ok = [v for v in versions if spec.matches(Version.parse(v))]
+    if not ok:
+        return None
+    return max(ok, key=Version.parse)
+
+
+def env_select(cands: Sequence[UniformComponent],
+               evaluator: DeployabilityEvaluator
+               ) -> Tuple[Optional[UniformComponent], Dict[str, float]]:
+    """ES: highest-deployability variant; deterministic tie-break on env id."""
+    best: Optional[UniformComponent] = None
+    best_d: Optional[Deployability] = None
+    scores: Dict[str, float] = {}
+    for c in sorted(cands, key=lambda c: c.env):
+        d = evaluator.evaluate(c)
+        scores[c.env] = d.score
+        if not d.hard_ok:
+            continue
+        if best_d is None or d.score > best_d.score:
+            best, best_d = c, d
+    return best, scores
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1
+# ---------------------------------------------------------------------------
+
+def uniform_component_selection(
+        d: DependencyItem,
+        service: UniformComponentService,
+        evaluator: DeployabilityEvaluator,
+        extra_constraint: Optional[str] = None,
+) -> UniformComponent:
+    """The paper's Algorithm 1, literally:
+
+        V <- VQ(M, n)
+        repeat:
+            v <- VS(V, specifier);  error if empty
+            E <- EQ(M, n, v)
+            e <- ES(E, specSheet)
+            if e empty: V <- V \\ {v}
+        until e non-empty
+        c <- CQ(M, n, v, e)
+    """
+    spec_text = d.specifier
+    if extra_constraint:
+        spec_text = Specifier(spec_text).intersect_text(Specifier(extra_constraint))
+    versions = list(service.vq(d.manager, d.name))
+    if not versions:
+        raise SelectionError(d, "unknown component (no versions upstream)")
+    remaining = list(versions)
+    while True:
+        v = version_select(remaining, spec_text)
+        if v is None:
+            raise SelectionError(
+                d, f"no version in {versions} matches {spec_text!r} "
+                   f"with a deployable environment variant")
+        cands = service.candidates(d.manager, d.name, v)
+        c, _scores = env_select(cands, evaluator)
+        if c is None:
+            # current v has no suitable environment variant: V <- V \ v
+            remaining.remove(v)
+            continue
+        return service.cq(d.manager, d.name, v, c.env)

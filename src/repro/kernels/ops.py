@@ -1,0 +1,79 @@
+"""jit'd wrappers adapting the Pallas kernels to the model-layer interfaces.
+
+These are the payloads of the ``kernel/*`` uniform components with
+``env='tpu-pallas'`` / ``env='cpu-interpret'``: the lazy-builder's
+environment selection decides whether the model's ATTN_KERNELS /
+WKV_IMPLS slots point here (Pallas) or to the lax/jnp variants.
+
+On a backend without a TPU, ``interpret=True`` executes the kernel body in
+Python via the Pallas interpreter — bit-accurate for correctness tests,
+useless for speed; that asymmetry is exactly the deployability trade-off
+Algorithm 1 scores.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .rwkv6_scan import wkv6_pallas
+
+_INTERPRET = True   # flipped by the catalog when specSheet.backend == 'tpu'
+
+
+def set_interpret(value: bool) -> None:
+    global _INTERPRET
+    _INTERPRET = bool(value)
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if not pad:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def pallas_attention(q, k, v, *, scale, causal=True, window=0, softcap=0.0,
+                     q_offset=0, kv_len=None, block_q=512, block_k=512):
+    """ATTN_KERNELS-compatible wrapper around the Pallas flash kernel.
+
+    Falls back to the blocked-lax path for ragged decode shapes (q_offset /
+    kv_len), which the train/prefill kernel does not model.
+    """
+    if q_offset != 0 or kv_len is not None:
+        from ..models.attention import lax_flash_attention
+        return lax_flash_attention(q, k, v, scale=scale, causal=causal,
+                                   window=window, softcap=softcap,
+                                   q_offset=q_offset, kv_len=kv_len)
+    sq, skv = q.shape[2], k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    if sq % bq or skv % bk:
+        from ..models.attention import naive_attention
+        return naive_attention(q, k, v, scale=scale, causal=causal,
+                               window=window, softcap=softcap)
+    return flash_attention(q, k, v, scale=scale, causal=causal,
+                           window=window, softcap=softcap,
+                           block_q=bq, block_k=bk, interpret=_INTERPRET)
+
+
+def pallas_wkv6(r, k, v, w, u, state=None, chunk: int = 64):
+    """WKV_IMPLS-compatible wrapper; sequential fallback for odd lengths."""
+    s = r.shape[2]
+    if s % min(chunk, s):
+        from ..models.ssm import wkv6_sequential
+        return wkv6_sequential(r, k, v, w, u, state)
+    y, s_out = wkv6_pallas(r, k, v, w, u, state,
+                           chunk=min(chunk, s), interpret=_INTERPRET)
+    return y, s_out
+
+
+def pallas_rmsnorm(x, w, eps: float = 1e-6, plus_one: bool = False):
+    from .rmsnorm import rmsnorm_pallas
+    return rmsnorm_pallas(x, w, eps=eps, plus_one=plus_one,
+                          interpret=_INTERPRET)

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel for the chunked WKV6 recurrence (RWKV6 'Finch').
+
+TPU adaptation of the (GPU, element-parallel) official kernel: instead of one
+thread per channel running the recurrence serially, the sequence is split
+into chunks of L tokens.  Within a chunk everything is (L, K)/(L, V) matmuls
+on the MXU; across chunks only the (K, V) state is carried — it lives in
+VMEM scratch and persists over the sequential chunk grid dimension.
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T         with 0 < w < 1
+
+Every exponential computed here has exponent ≤ 0 (decays multiply), so the
+chunked form is overflow-safe in f32 regardless of sequence length.
+
+grid = (batch, heads, n_chunks); chunk dim is innermost/sequential.
+Blocks: r/k/w (1, 1, L, K), v (1, 1, L, V), u (1, K) per head,
+state scratch (K, V) f32.  L defaults to 64 — MXU-aligned, and the
+(L, L) intra-chunk matrix stays tiny in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref,
+                 y_ref, sout_ref, S_scr, *, L: int, nchunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        S_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)           # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)           # (L, K)
+    v = v_ref[0, 0].astype(jnp.float32)           # (L, V)
+    lw = lw_ref[0, 0].astype(jnp.float32)         # (L, K) log-decay (≤ 0)
+    u = u_ref[0].astype(jnp.float32)              # (K,)
+    S = S_scr[...]                                 # (K, V)
+
+    sw = jnp.cumsum(lw, axis=0) - lw              # exclusive cumsum
+    sw_end = sw[-1] + lw[-1]                      # total chunk decay (K,)
+
+    # intra-chunk: exponent(t, j, k) = sw_t - sw_j - lw_j  (≤ 0 for j < t)
+    expo = sw[:, None, :] - sw[None, :, :] - lw[None, :, :]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    tri = (tj < ti)[:, :, None]                   # strictly causal
+    decay = jnp.where(tri, jnp.exp(jnp.minimum(expo, 0.0)), 0.0)
+    A = jnp.einsum("tk,jk,tjk->tj", r, k, decay)  # (L, L)
+    y = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    # current-token bonus: diag(u)
+    y += jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True) * v
+    # inter-chunk: query the carried state
+    q = r * jnp.exp(sw)
+    y += jax.lax.dot_general(q, S, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    # state update: S' = diag(exp(sw_end)) S + Σ_j (k_j · e^{sw_end-sw_j-lw_j}) v_j^T
+    k2 = k * jnp.exp(sw_end[None, :] - sw - lw)
+    S_new = jnp.exp(sw_end)[:, None] * S + jax.lax.dot_general(
+        k2, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    S_scr[...] = S_new
+    y_ref[0, 0, :, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ic == nchunks - 1)
+    def _final():
+        sout_ref[0, 0, :, :] = S_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_pallas(r, k, v, w, u, state=None, *, chunk: int = 64,
+                interpret: bool = True):
+    """r,k,w: (b, h, s, K); v: (b, h, s, V); u: (h, K).
+    Returns (y (b, h, s, V), final_state (b, h, K, V) f32)."""
+    b, h, s, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, (s, L)
+    n = s // L
+    if state is None:
+        state = jnp.zeros((b, h, K, V), jnp.float32)
+    lw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+
+    kernel = functools.partial(_wkv6_kernel, L=L, nchunks=n)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, n),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, K), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, L, V), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, K), lambda ib, ih, ic: (ih, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, V), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, K, V), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, V), v.dtype),
+            jax.ShapeDtypeStruct((b, h, K, V), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, V), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, lw, u, state)
+    return y, s_out

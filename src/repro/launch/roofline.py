@@ -1,0 +1,127 @@
+"""Roofline analysis over dry-run artifacts.
+
+Per (arch × shape × mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s       [s]
+    memory term     = HLO_bytes_per_device / HBM_bw            [s]
+    collective term = collective_bytes_per_device / (links·bw) [s]
+
+Hardware constants (TPU v5e target): 197 TFLOP/s bf16 per chip, 819 GB/s
+HBM, ~50 GB/s per ICI link.  Collectives overlap across a chip's links only
+partially in the worst case, so the collective term conservatively charges
+one link (documented; ICI-rich topologies only improve it).  Inter-pod
+(DCI) bytes are charged separately at the DCI bandwidth when a 'pod' axis
+exists.
+
+MODEL_FLOPS uses the standard estimators:
+    train   : 6·N·T      (N = params, active for MoE; T = tokens)
+    prefill : 2·N·T
+    decode  : 2·N·B      (one token per sequence)
+plus the attention term where it matters.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from ..configs import ARCHS
+from .mesh import SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s / link
+DCI_BW = 12.5e9              # B/s / chip across pods (4x25GbE per 4-chip host)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "artifacts", "dryrun")
+
+
+def model_flops_per_device(arch_id: str, shape_name: str, chips: int
+                           ) -> float:
+    cfg = ARCHS[arch_id]
+    sh = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if sh.kind == "train":
+        tokens = sh.seq_len * sh.global_batch
+        return 6.0 * n_active * tokens / chips
+    if sh.kind == "prefill":
+        tokens = sh.seq_len * sh.global_batch
+        return 2.0 * n_active * tokens / chips
+    return 2.0 * n_active * sh.global_batch / chips
+
+
+def analyze(artifact: Dict[str, Any]) -> Dict[str, Any]:
+    arch, shape = artifact["arch"], artifact["shape"]
+    chips = artifact["chips"]
+    hs = artifact["hlo_stats"]
+    t_compute = hs["flops_per_device"] / PEAK_FLOPS
+    t_memory = hs["hbm_bytes_per_device"] / HBM_BW
+    t_coll = hs["collective_bytes_per_device"] / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(arch, shape, chips)
+    useful = mf / hs["flops_per_device"] if hs["flops_per_device"] else 0.0
+    # roofline fraction: useful model flops per second achievable given the
+    # bottleneck, as a fraction of peak
+    step_time = max(terms.values())
+    achievable = mf / step_time if step_time else 0.0
+    return {
+        "arch": arch, "shape": shape, "mesh": artifact["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "hlo_flops_per_device": hs["flops_per_device"],
+        "useful_flops_ratio": useful,
+        "roofline_fraction": achievable / PEAK_FLOPS,
+        "peak_bytes_per_device": artifact["memory"]["peak_bytes"],
+        "by_collective": hs.get("by_collective", {}),
+    }
+
+
+def load_artifacts(pattern: str = "*") -> List[Dict[str, Any]]:
+    out = []
+    for fn in sorted(glob.glob(os.path.join(ARTIFACT_DIR,
+                                            pattern + ".json"))):
+        with open(fn) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "dominant | MODEL/HLO flops | roofline frac | HBM GiB/chip |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | {r['dominant']} "
+            f"| {r['useful_flops_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} "
+            f"| {r['peak_bytes_per_device']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pattern", default="*")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args(argv)
+    arts = load_artifacts(args.pattern)
+    rows = [analyze(a) for a in arts if "skipped" not in a]
+    if args.json:
+        print(json.dumps(rows, indent=1))
+    else:
+        print(fmt_table(rows))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,4 @@
+"""repro.models — the model zoo substrate (functional param-dict modules)."""
+from .transformer import Model, Stack, Variants, build_model  # noqa: F401
+from .sharding import (RULE_SETS, ShardingPlan, current_plan, shard,  # noqa: F401
+                       use_plan, zero1_axes)

@@ -1,0 +1,192 @@
+"""FFN variants: gated (SwiGLU/GeGLU) and pointwise (GELU) MLPs, plus MoE.
+
+MoE uses capacity-based *grouped-GEMM* dispatch: per-expert top-C token
+selection (stable lax.top_k), a single batched einsum over the expert axis,
+and scatter-add combine.  With the expert axis sharded over 'model' (EP),
+GSPMD runs each shard's experts locally and all-reduces the combine — the
+collective pattern of expert parallelism, with *honest* FLOPs
+(≈ tokens × top_k × capacity_factor × expert FLOPs, no one-hot einsums).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import P, SpecTree, gelu
+from .sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+
+def ffn_spec(cfg, d_ff: Optional[int] = None) -> SpecTree:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.ffn in ("swiglu", "geglu"):
+        return {"w_gate": P((d, f), ("embed", "mlp")),
+                "w_up": P((d, f), ("embed", "mlp")),
+                "w_down": P((f, d), ("mlp", "embed"))}
+    return {"w_up": P((d, f), ("embed", "mlp")),
+            "b_up": P((f,), ("mlp",), "zeros"),
+            "w_down": P((f, d), ("mlp", "embed")),
+            "b_down": P((d,), ("embed",), "zeros")}
+
+
+def ffn_apply(params, x, cfg):
+    if cfg.ffn in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(x.dtype))
+        act = jax.nn.silu(g) if cfg.ffn == "swiglu" else gelu(g)
+        h = act * u
+    else:
+        h = gelu(jnp.einsum("...d,df->...f", x,
+                            params["w_up"].astype(x.dtype))
+                 + params["b_up"].astype(x.dtype))
+    if h.ndim == 3:
+        h = shard(h, "act_batch", "act_seq", "act_mlp")
+    y = jnp.einsum("...f,fd->...d", h, params["w_down"].astype(x.dtype))
+    if "b_down" in params:
+        y = y + params["b_down"].astype(x.dtype)
+    if y.ndim == 3:
+        y = shard(y, "act_batch", "act_seq", "act_embed")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def moe_spec(cfg) -> SpecTree:
+    d, f, E = cfg.d_model, cfg.moe_ff, cfg.num_experts
+    gated = cfg.ffn in ("swiglu", "geglu")
+    sp: SpecTree = {
+        "router": P((d, E), ("embed", "expert"), "small"),
+        "w_up": P((E, d, f), ("expert", "embed", "expert_mlp")),
+        "w_down": P((E, f, d), ("expert", "expert_mlp", "embed")),
+    }
+    if gated:
+        sp["w_gate"] = P((E, d, f), ("expert", "embed", "expert_mlp"))
+    if cfg.router_scale:
+        sp["router_bias"] = P((E,), ("expert",), "zeros")
+    if cfg.shared_experts:
+        sp["shared"] = ffn_spec(cfg, cfg.moe_ff * cfg.shared_experts)
+    return sp
+
+
+def _route(params, xf, cfg):
+    """xf: (T, d) → top-k ids (T, k), weights (T, k), router probs (T, E)."""
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if cfg.router_scale:        # deepseek-v3: sigmoid scores + selection bias
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + params["router_bias"][None, :]
+        _, ids = jax.lax.top_k(sel, cfg.top_k)
+        w = jnp.take_along_axis(scores, ids, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(jnp.sum(scores, -1, keepdims=True), 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        w, ids = jax.lax.top_k(probs, cfg.top_k)
+        w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+    return ids, w, probs
+
+
+def _aux_loss(ids, probs, cfg):
+    """Switch-style load-balance loss."""
+    E = cfg.num_experts
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)      # (T, k, E)
+    frac = jnp.mean(jnp.sum(onehot, axis=1), axis=0)        # tokens per expert
+    imp = jnp.mean(probs, axis=0)
+    return E * jnp.sum(frac * imp)
+
+
+def moe_grouped(params, x, cfg, capacity_factor: float = 1.25,
+                combine_dtype: str = "f32", slot_dp_shard: bool = False):
+    """Grouped-GEMM capacity MoE.  x: (b, s, d) → (y, aux_loss).
+
+    ``combine_dtype='bf16'`` keeps dispatch/combine slot tensors in the
+    activation dtype end-to-end (halves the slot-space HBM traffic and the
+    combine all-reduce bytes); 'f32' is the conservative default.
+    ``slot_dp_shard`` additionally shards the capacity dim of the slot
+    tensors over the data axes, steering GSPMD from replicated-slot
+    all-reduces toward all-to-all-style exchange."""
+    b, s, d = x.shape
+    T = b * s
+    E, k, f = cfg.num_experts, cfg.top_k, cfg.moe_ff
+    gated = "w_gate" in params
+    xf = x.reshape(T, d)
+
+    ids, w, probs = _route(params, xf, cfg)
+    aux = _aux_loss(ids, probs, cfg)
+
+    C = max(8, int(math.ceil(T * k * capacity_factor / E)))
+    C = min(T, ((C + 7) // 8) * 8)
+
+    # per-expert membership score + routing weight  (E, T)
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.float32)       # (T, k, E)
+    member = jnp.max(onehot, axis=1).T                        # (E, T) in {0,1}
+    wmat = jnp.einsum("tke,tk->et", onehot, w)                # (E, T)
+
+    # stable top-C token pick per expert (ties keep lowest index = FIFO)
+    member = shard(member, "act_expert", None)
+    gate_vals, idx = jax.lax.top_k(member, C)                 # (E, C)
+    idx = shard(idx, "act_expert", None)
+    gate = jnp.take_along_axis(wmat, idx, axis=1) * gate_vals  # 0 for padding
+
+    slot_c = "act_batch" if slot_dp_shard else None
+    xg = jnp.take(xf, idx.reshape(-1), axis=0).reshape(E, C, d)
+    xg = shard(xg, "act_expert", slot_c, None)
+    up = jnp.einsum("ecd,edf->ecf", xg, params["w_up"].astype(xg.dtype))
+    if gated:
+        g = jnp.einsum("ecd,edf->ecf", xg, params["w_gate"].astype(xg.dtype))
+        act = jax.nn.silu(g) if cfg.ffn == "swiglu" else gelu(g)
+        h = act * up
+    else:
+        h = gelu(up)
+    yo = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(h.dtype))
+    if combine_dtype == "bf16":
+        yo = yo.astype(x.dtype) * gate[..., None].astype(x.dtype)
+    else:
+        yo = yo.astype(jnp.float32) * gate[..., None]
+    if slot_dp_shard:
+        yo = shard(yo, "act_expert", "act_batch", None)
+
+    y = jnp.zeros((T, d), yo.dtype).at[idx.reshape(-1)].add(
+        yo.reshape(E * C, d)).astype(x.dtype)
+    y = shard(y.reshape(b, s, d), "act_batch", "act_seq", "act_embed")
+
+    if cfg.shared_experts:
+        y = y + ffn_apply(params["shared"], x, cfg)
+    return y, aux
+
+
+def moe_dense(params, x, cfg):
+    """Small-scale oracle: every expert on every token, gate-weighted.
+    Selected only for tiny smoke configs (deployability gates on size)."""
+    b, s, d = x.shape
+    T = b * s
+    xf = x.reshape(T, d)
+    ids, w, probs = _route(params, xf, cfg)
+    aux = _aux_loss(ids, probs, cfg)
+    E = cfg.num_experts
+    gmat = jnp.zeros((T, E), jnp.float32).at[
+        jnp.arange(T)[:, None], ids].set(w)                  # (T, E)
+    up = jnp.einsum("td,edf->etf", xf, params["w_up"].astype(xf.dtype))
+    if "w_gate" in params:
+        g = jnp.einsum("td,edf->etf", xf, params["w_gate"].astype(xf.dtype))
+        act = jax.nn.silu(g) if cfg.ffn == "swiglu" else gelu(g)
+        h = act * up
+    else:
+        h = gelu(up)
+    yo = jnp.einsum("etf,efd->etd", h, params["w_down"].astype(h.dtype))
+    y = jnp.einsum("etd,te->td", yo.astype(jnp.float32), gmat)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    if cfg.shared_experts:
+        y = y + ffn_apply(params["shared"], x, cfg)
+    return y, aux
+
+
+MOE_IMPLS = {"grouped": moe_grouped, "dense": moe_dense}

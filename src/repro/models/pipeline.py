@@ -1,0 +1,104 @@
+"""GPipe-style pipeline parallelism as a composable combinator.
+
+``pipeline_apply`` runs a per-layer function over S pipeline stages laid
+out along one mesh axis, streaming M microbatches through a shard_map +
+``jax.lax.ppermute`` schedule.  It is registered as the
+``parallel/pipeline`` uniform component (opt-in via the ``workload =
+'pipeline'`` override): the production cells use DP×TP which dominates at
+the assigned sizes, but the combinator is the building block a
+depth-starved topology (many pods, few chips each) would select.
+
+Schedule (forward only; the driver wraps it in jax.grad as usual):
+  T = M + S - 1 ticks.  At tick t, stage s processes microbatch t - s
+  (when 0 ≤ t - s < M); between ticks, activations rotate one stage along
+  the axis with ppermute.  Bubble fraction = (S-1)/T, the GPipe bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def pipeline_apply(layer_fn: Callable, stage_params, x, *, mesh: Mesh,
+                   axis: str = "model", microbatches: int = None):
+    """Apply ``layers_per_stage × n_stages`` layers to ``x`` via pipeline
+    stages on mesh axis ``axis``.
+
+    layer_fn      : (params_one_layer, x) -> x
+    stage_params  : pytree with leading dims (n_stages, layers_per_stage)
+                    — stage dim sharded over ``axis``
+    x             : (batch, ...) activations; batch % microbatches == 0
+    Returns x after all layers, same sharding as the input.
+    """
+    S = mesh.shape[axis]
+    M = microbatches or S
+    B = x.shape[0]
+    assert B % M == 0, (B, M)
+
+    in_specs = (
+        jax.tree.map(lambda _: P(axis), stage_params,
+                     is_leaf=lambda l: hasattr(l, "shape")),
+        P(),             # x replicated into the pipeline entry
+    )
+    out_specs = P()
+
+    def run(params_local, x_full):
+        # params_local: (1, layers_per_stage, ...) — this stage's layers
+        p_stage = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        mb = x_full.reshape((M, B // M) + x_full.shape[1:])
+
+        def stage_compute(xb):
+            def body(h, p_layer):
+                return layer_fn(p_layer, h), None
+            h, _ = jax.lax.scan(body, xb, p_stage)
+            return h
+
+        # state: the activation each stage currently holds
+        state = jnp.zeros_like(mb[0])
+        out = jnp.zeros_like(mb)
+        T = M + S - 1
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def tick(t, carry):
+            state, out = carry
+            m_in = t                      # microbatch entering stage 0
+            # stage 0 ingests a fresh microbatch while it has supply
+            take = jnp.logical_and(stage == 0, m_in < M)
+            fresh = jax.lax.dynamic_index_in_dim(
+                mb, jnp.clip(m_in, 0, M - 1), keepdims=False)
+            state = jnp.where(take, fresh, state)
+            # every stage processes what it holds (bubble ticks compute
+            # throwaway values on zeros — the GPipe bubble)
+            state = stage_compute(state)
+            # last stage emits microbatch t - (S - 1)
+            m_out = t - (S - 1)
+            emit = jnp.logical_and(stage == S - 1,
+                                   jnp.logical_and(m_out >= 0, m_out < M))
+            out = jax.lax.cond(
+                emit,
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, state, jnp.clip(m_out, 0, M - 1), 0),
+                lambda o: o, out)
+            # rotate activations to the next stage
+            state = jax.lax.ppermute(state, axis, perm)
+            return state, out
+
+        _, out = jax.lax.fori_loop(0, T, tick, (state, out))
+        # only stage S-1 wrote emitted values (zeros elsewhere): psum
+        # broadcasts them to every stage
+        out = jax.lax.psum(out, axis)
+        return out.reshape((B,) + x_full.shape[1:])
+
+    fn = shard_map(run, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    return fn(stage_params, x)
+
+
+def bubble_fraction(n_stages: int, microbatches: int) -> float:
+    return (n_stages - 1) / (microbatches + n_stages - 1)

@@ -1,0 +1,284 @@
+"""Optimizer substrate: AdamW with sharded/quantized moments, cosine+warmup
+schedule, global-norm clipping, microbatch accumulation, and int8
+error-feedback gradient compression.
+
+Distributed-optimization notes (1000+-node posture):
+  * ZeRO-1: moment tensors get an extra batch-axis sharding via
+    ``sharding.zero1_axes`` — the optimizer state never replicates.
+  * 8-bit moments (block-wise absmax quantization, 128-wide blocks) cut
+    optimizer HBM 4x — what makes deepseek-v3-scale training fit per chip.
+  * int8 error-feedback compression bounds the bytes a cross-pod (DCI)
+    gradient exchange would move; the quantization error is carried forward
+    so the update stays unbiased in the long run (EF-SGD style).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Block-wise int8 quantization (moments + gradient compression)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 128
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x (f32) -> (int8 codes shaped LIKE x, f32 block scales).
+
+    Blocks run along the LAST dim only, so the codes tensor keeps the
+    param's shape — and therefore its sharding.  (A flattened layout breaks
+    the moment↔param sharding correspondence and forces SPMD into full
+    rematerialization — measured at 4.9 TiB/device temps on deepseek-v3.)
+    """
+    xf = x.astype(jnp.float32)
+    orig_shape = xf.shape
+    if xf.ndim == 0:
+        xf = xf[None]
+    last = xf.shape[-1]
+    pad = (-last) % _BLOCK
+    if pad:
+        widths = [(0, 0)] * (xf.ndim - 1) + [(0, pad)]
+        xp = jnp.pad(xf, widths)
+    else:
+        xp = xf
+    nblk = xp.shape[-1] // _BLOCK
+    blk = xp.reshape(xp.shape[:-1] + (nblk, _BLOCK))
+    scale = jnp.max(jnp.abs(blk), axis=-1) / 127.0          # (..., nblk)
+    codes = jnp.round(blk / jnp.maximum(scale[..., None], 1e-12))
+    codes = codes.reshape(xp.shape).astype(jnp.int8)
+    if pad:
+        codes = codes[..., :last]
+    codes = codes.reshape(orig_shape)
+    if not orig_shape:
+        scale = scale.reshape(())
+    return codes, scale
+
+
+def _dq8(codes: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    cf = codes.astype(jnp.float32)
+    if cf.ndim == 0:
+        return (cf * scale).reshape(shape)
+    last = cf.shape[-1]
+    pad = (-last) % _BLOCK
+    if pad:
+        widths = [(0, 0)] * (cf.ndim - 1) + [(0, pad)]
+        cf = jnp.pad(cf, widths)
+    nblk = cf.shape[-1] // _BLOCK
+    blk = cf.reshape(cf.shape[:-1] + (nblk, _BLOCK))
+    y = (blk * scale[..., None]).reshape(cf.shape)
+    if pad:
+        y = y[..., :last]
+    return y.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdamWConfig:
+    lr: Callable = cosine_schedule(3e-4, 100, 10000)
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moments: str = "f32"           # f32 | bf16 | int8
+
+
+def _moment_init(leaf, kind: str):
+    if kind == "int8":
+        z = jnp.zeros(leaf.shape, jnp.float32)
+        c, s = _q8(z)
+        return {"q": c, "s": s, "_shape": None}  # shape kept statically
+    dt = jnp.bfloat16 if kind == "bf16" else jnp.float32
+    return jnp.zeros(leaf.shape, dt)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    if cfg.moments == "int8":
+        m = jax.tree.map(lambda p: dict(q=_q8(jnp.zeros_like(p, jnp.float32))[0],
+                                        s=_q8(jnp.zeros_like(p, jnp.float32))[1]),
+                         params)
+        v = jax.tree.map(lambda p: dict(q=_q8(jnp.zeros_like(p, jnp.float32))[0],
+                                        s=_q8(jnp.zeros_like(p, jnp.float32))[1]),
+                         params)
+    else:
+        dt = jnp.bfloat16 if cfg.moments == "bf16" else jnp.float32
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+        v = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return {"step": jnp.zeros((), jnp.int32), "m": m, "v": v}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cfg.lr(step)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12)) \
+        if cfg.clip_norm else 1.0
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        if cfg.moments == "int8":
+            mf = _dq8(m["q"], m["s"], p.shape)
+            vf = _dq8(v["q"], v["s"], p.shape)
+        else:
+            mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+        mf = b1 * mf + (1 - b1) * g
+        vf = b2 * vf + (1 - b2) * jnp.square(g)
+        mh, vh = mf / bc1, vf / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if cfg.moments == "int8":
+            qm, sm = _q8(mf)
+            qv, sv = _q8(vf)
+            return new_p, dict(q=qm, s=sm), dict(q=qv, s=sv)
+        dt = m.dtype
+        return new_p, mf.astype(dt), vf.astype(dt)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    is_moment = lambda x: isinstance(x, dict) and set(x) == {"q", "s"}
+    flat_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_moment)[0]
+    flat_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_moment)[0]
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, \
+        {"grad_norm": gn, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback gradient compression (cross-pod DCI hop)
+# ---------------------------------------------------------------------------
+
+def ef_compress_init(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress(grads, err):
+    """Returns (compressed-and-decompressed grads, new error state).
+
+    What actually crosses the wire in a real deployment is (int8 codes +
+    f32/block scales) = ~25% of f32 bytes; we model that in the roofline's
+    DCI term.  The residual is carried so the sequence of updates is
+    unbiased (error feedback)."""
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = _q8(gf)
+        deq = _dq8(q, s, gf.shape)
+        return deq.astype(g.dtype), gf - deq
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(err)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(tdef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(tdef, [o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# Train-state + step builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainStepConfig:
+    microbatch: int = 0            # 0 = whole batch at once
+    compress: bool = False         # int8 EF on gradients
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def train_state_init(model, key, opt_cfg: AdamWConfig,
+                     compress: bool = False):
+    params = model.init(key)
+    state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+    if compress:
+        state["ef_err"] = ef_compress_init(params)
+    return state
+
+
+def build_train_step(model, ts_cfg: TrainStepConfig):
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if ts_cfg.microbatch and ts_cfg.microbatch > 1:
+            n = ts_cfg.microbatch
+            B = batch["tokens"].shape[0] if "tokens" in batch else \
+                next(iter(batch.values())).shape[0]
+
+            def mb_slice(x, i):
+                # slice the BATCH axis: leaves are (B, ...) or — for
+                # M-RoPE positions — (3, B, S)
+                if x.shape[0] == B:
+                    return x.reshape((n, -1) + x.shape[1:])[i]
+                if x.ndim >= 2 and x.shape[1] == B:
+                    return x.reshape(
+                        (x.shape[0], n, -1) + x.shape[2:])[:, i]
+                return x
+
+            def micro(i, carry):
+                g_acc, l_acc, m_acc = carry
+                mb = jax.tree.map(lambda x: mb_slice(x, i), batch)
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(lambda a, b: a + b / n, g_acc, g)
+                return g_acc, l_acc + l / n, jax.tree.map(
+                    lambda a, b: a + b / n, m_acc, m)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            # metrics template via eval_shape: no extra fwd/bwd compute
+            mb0 = jax.tree.map(lambda x: mb_slice(x, 0), batch)
+            _, m_shape = jax.eval_shape(loss_fn, params, mb0)
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m_shape)
+            grads, loss, metrics = jax.lax.fori_loop(
+                0, n, micro, (g0, jnp.zeros(()), m0))
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        new_state = dict(state)
+        if ts_cfg.compress:
+            grads, new_err = ef_compress(grads, state["ef_err"])
+            new_state["ef_err"] = new_err
+        new_p, new_opt, om = adamw_update(params, grads, state["opt"],
+                                          ts_cfg.adamw)
+        new_state["params"] = new_p
+        new_state["opt"] = new_opt
+        metrics = dict(metrics, loss=loss, **om)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,23 @@
+import jax
+import pytest
+
+# Smoke tests and benches must see the real single-CPU device; ONLY the
+# dry-run (a subprocess) forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def service():
+    from repro.core import catalog
+    return catalog.build_service()
+
+
+@pytest.fixture(scope="session")
+def smoke_mesh():
+    from repro.launch.mesh import make_smoke_mesh
+    return make_smoke_mesh(1)
+
+
+@pytest.fixture(scope="session")
+def cpu_spec():
+    from repro.core import cpu_smoke
+    return cpu_smoke()

@@ -1,0 +1,54 @@
+"""CIR format + pre-builder: round-trip, digests, indirect-dep filtering."""
+from repro.configs import ARCHS
+from repro.core import CIR, PreBuilder
+from repro.core.component import DependencyItem as D
+
+
+def test_cir_roundtrip_and_digest_stability(service):
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train", seed=7)
+    blob = cir.to_bytes()
+    cir2 = CIR.from_bytes(blob)
+    assert cir2.name == cir.name
+    assert cir2.seed == 7
+    assert cir2.deps == cir.deps
+    assert cir2.arch_config().d_model == ARCHS["gemma2-9b"].d_model
+    # digest is over deterministic bytes (mtime=0 gzip)
+    assert cir.digest() == CIR.from_bytes(blob).digest()
+
+
+def test_cir_is_lightweight(service):
+    """The paper's 95% claim: a CIR is KBs; the environment it expands to is
+    hundreds of MBs+ of components."""
+    pb = PreBuilder(service)
+    for arch_id in ("gemma2-9b", "deepseek-v3-671b", "rwkv6-1.6b"):
+        cir = pb.prebuild(ARCHS[arch_id], entrypoint="train")
+        assert cir.size_bytes() < 16 * 1024, arch_id
+
+
+def test_manifest_text_format(service):
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["qwen2-vl-2b"], entrypoint="serve")
+    txt = cir.to_text()
+    assert "[NAME] qwen2-vl-2b" in txt
+    assert "[DEPENDENCY]" in txt
+    assert "- [model] decoder-vlm" in txt
+    assert "- [asset] weights-qwen2-vl-2b [latest]" in txt
+    assert "[ENTRYPOINT] serve" in txt
+
+
+def test_prebuilder_filters_indirect_deps(service):
+    """Declared deps reachable from another declared dep's transitive
+    metadata closure are dropped (paper §4.1 'filters out the indirect
+    dependencies')."""
+    pb = PreBuilder(service)
+    cfg = ARCHS["starcoder2-3b"]
+    deps = pb.analyze(cfg, "train")
+    # user also (redundantly) declares what the model family already implies
+    deps = deps + [D("kernel", "attention", "any"),
+                   D("env", "runtime-base", "any")]
+    kept = pb.filter_indirect(deps)
+    kept_keys = {d.key() for d in kept}
+    assert ("kernel", "attention") not in kept_keys
+    assert ("env", "runtime-base") not in kept_keys
+    assert ("model", "decoder-dense") in kept_keys

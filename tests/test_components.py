@@ -1,0 +1,128 @@
+"""Unit + property tests for versions, specifiers, requirements, components."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.component import (DependencyItem, Requirement, Specifier,
+                                  UniformComponent, Version)
+
+
+# ---------------------------------------------------------------------------
+# Version
+# ---------------------------------------------------------------------------
+
+def test_version_parse_basics():
+    assert Version.parse("1.2.3").release == (1, 2, 3)
+    assert Version.parse("v2.0").release == (2, 0)
+    assert Version.parse("1.0rc1").pre == ("rc", 1)
+    with pytest.raises(ValueError):
+        Version.parse("not-a-version")
+
+
+def test_version_ordering():
+    vs = ["0.9", "1.0a1", "1.0", "1.0.1", "1.1", "2.0"]
+    parsed = [Version.parse(v) for v in vs]
+    assert parsed == sorted(parsed)
+
+
+_version_strat = st.builds(
+    lambda parts, pre: ".".join(map(str, parts)) + (pre or ""),
+    st.lists(st.integers(0, 30), min_size=1, max_size=4),
+    st.sampled_from(["", "a1", "b2", "rc1", "rc0"]))
+
+
+@given(_version_strat, _version_strat, _version_strat)
+@settings(max_examples=200, deadline=None)
+def test_version_total_order_properties(a, b, c):
+    va, vb, vc = Version.parse(a), Version.parse(b), Version.parse(c)
+    # totality + antisymmetry
+    assert (va <= vb) or (vb <= va)
+    if va <= vb and vb <= va:
+        assert va == vb
+    # transitivity
+    if va <= vb and vb <= vc:
+        assert va <= vc
+    # hash consistency
+    if va == vb:
+        assert hash(va) == hash(vb)
+
+
+# ---------------------------------------------------------------------------
+# Specifier
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec,version,expected", [
+    (">=1.0", "1.0", True),
+    (">=1.0", "0.9", False),
+    ("~=2.0", "2.5", True),
+    ("~=2.0", "3.0", False),
+    ("==1.2", "1.2.7", True),      # prefix match, PEP440-style
+    ("==1.2", "1.3.0", False),
+    ("!=1.3", "1.3.1", False),
+    (">=1.0,<2.0", "1.5", True),
+    (">=1.0,<2.0", "2.0", False),
+    ("any", "0.0.1", True),
+    ("latest", "9.9", True),
+])
+def test_specifier_matches(spec, version, expected):
+    assert Specifier(spec).matches(Version.parse(version)) is expected
+
+
+@given(st.sampled_from([">=1.0", "<3", "~=2.0", "any", "==2.1"]),
+       st.sampled_from(["<2.5", ">=2.0", "any", "!=2.2"]),
+       _version_strat)
+@settings(max_examples=200, deadline=None)
+def test_specifier_intersection_is_conjunction(s1, s2, v):
+    """x matches intersect(a, b)  <=>  x matches a AND x matches b."""
+    a, b = Specifier(s1), Specifier(s2)
+    both = Specifier(a.intersect_text(b))
+    ver = Version.parse(v)
+    assert both.matches(ver) == (a.matches(ver) and b.matches(ver))
+
+
+# ---------------------------------------------------------------------------
+# Requirement
+# ---------------------------------------------------------------------------
+
+def test_requirement_ops():
+    ctx = {"chip": "tpu-v5e", "mesh.chips": 256, "dtypes": ["bf16", "f32"],
+           "interpret": True}
+    assert Requirement("chip", "eq", "tpu-v5e").satisfied(ctx)
+    assert Requirement("chip", "in", ["tpu-v5e", "tpu-v5p"]).satisfied(ctx)
+    assert Requirement("mesh.chips", "ge", 256).satisfied(ctx)
+    assert not Requirement("mesh.chips", "le", 16).satisfied(ctx)
+    assert Requirement("dtypes", "has", "bf16").satisfied(ctx)
+    assert Requirement("interpret", "true").satisfied(ctx)
+    assert not Requirement("interpret", "false").satisfied(ctx)
+    assert Requirement("missing", "false").satisfied(ctx)
+
+
+# ---------------------------------------------------------------------------
+# UniformComponent immutability/digest
+# ---------------------------------------------------------------------------
+
+def _mk(version="1.0.0", env="generic", payload="p", deps=()):
+    return UniformComponent(
+        manager="kernel", name="thing", version=version, env=env,
+        deps=tuple(DependencyItem(*d) for d in deps), payload=payload,
+        size_bytes=10)
+
+
+def test_digest_stable_and_content_sensitive():
+    a = _mk()
+    b = _mk()
+    assert a.digest() == b.digest()
+    assert _mk(payload="other").digest() != a.digest()
+    assert _mk(deps=[("env", "base", "any")]).digest() != a.digest()
+
+
+def test_json_roundtrip():
+    c = UniformComponent(
+        manager="model", name="decoder-moe", version="1.1.0", env="generic",
+        deps=(DependencyItem("kernel", "attention", "~=1.0"),),
+        context={"kernel.api": "1"},
+        requires=(Requirement("chip", "eq", "tpu-v5e"),),
+        provides=("model",), payload="model.decoder", size_bytes=123,
+        perf_score=1.2, meta={"x": 1})
+    c2 = UniformComponent.from_json(c.to_json())
+    assert c2.digest() == c.digest()
+    assert c2.requires[0].satisfied({"chip": "tpu-v5e"})

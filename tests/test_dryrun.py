@@ -1,0 +1,74 @@
+"""Multi-pod dry-run smoke: one cheap cell on each production mesh, in a
+subprocess (XLA_FLAGS must precede jax init, so it cannot run in-process).
+The full 40-cell sweep artifacts live in artifacts/dryrun/."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun"] + args,
+        capture_output=True, text=True, env=env, cwd=REPO, timeout=1200)
+
+
+@pytest.mark.slow
+def test_dryrun_single_pod_cell():
+    r = _run(["--arch", "rwkv6-1.6b", "--shape", "long_500k"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "0 failures" in r.stdout
+    art = os.path.join(REPO, "artifacts", "dryrun",
+                       "rwkv6-1.6b__long_500k__16x16.json")
+    assert os.path.exists(art)
+    with open(art) as f:
+        a = json.load(f)
+    assert a["chips"] == 256
+    assert a["hlo_stats"]["flops_per_device"] > 0
+    assert a["memory"]["peak_bytes"] < 16 * 2**30     # fits v5e HBM
+
+
+@pytest.mark.slow
+def test_dryrun_multi_pod_cell():
+    r = _run(["--arch", "rwkv6-1.6b", "--shape", "long_500k",
+              "--multi-pod"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    art = os.path.join(REPO, "artifacts", "dryrun",
+                       "rwkv6-1.6b__long_500k__2x16x16.json")
+    with open(art) as f:
+        a = json.load(f)
+    assert a["chips"] == 512
+    assert a["mesh"] == "2x16x16"
+
+
+def test_shape_applicability_rules():
+    from repro.configs import ARCHS
+    from repro.launch.mesh import SHAPES, applicable, live_cells
+    # full-attention archs skip long_500k
+    ok, why = applicable(ARCHS["codeqwen1.5-7b"], SHAPES["long_500k"])
+    assert not ok and "full-attention" in why
+    for aid in ("gemma2-9b", "rwkv6-1.6b", "jamba-v0.1-52b"):
+        ok, _ = applicable(ARCHS[aid], SHAPES["long_500k"])
+        assert ok, aid
+    cells = live_cells(list(ARCHS), ARCHS)
+    assert len(cells) == 33      # 10x3 + 3 long-context
+
+
+def test_grad_accum_suggestion_scales_with_model():
+    from repro.configs import ARCHS
+    from repro.core import tpu_single_pod
+    from repro.launch.mesh import SHAPES, suggest_grad_accum
+    spec = tpu_single_pod()
+    small = suggest_grad_accum(ARCHS["starcoder2-3b"], SHAPES["train_4k"],
+                               spec)
+    big = suggest_grad_accum(ARCHS["deepseek-v3-671b"], SHAPES["train_4k"],
+                             spec)
+    assert big >= small >= 2
+    assert suggest_grad_accum(ARCHS["starcoder2-3b"],
+                              SHAPES["decode_32k"], spec) == 0

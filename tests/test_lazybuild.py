@@ -1,0 +1,109 @@
+"""Lazy-builder: byte accounting, active sharing, lock determinism,
+cross-platform variant selection — the paper's core claims as tests."""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (LazyBuilder, LocalComponentStore, PreBuilder,
+                        cpu_smoke, gpu_server, tpu_multi_pod, tpu_single_pod)
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def test_image_size_reduction(service, pb):
+    """CIR bytes << legacy bundle bytes (Fig. 6's ~95%+)."""
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    lb = LazyBuilder(service)
+    inst = lb.build(cir, tpu_single_pod(), assemble=False)
+    legacy = inst.report.bytes_total_components
+    assert cir.size_bytes() < 0.05 * legacy
+
+
+def test_active_sharing_across_archs(service):
+    """Second build on the same platform fetches only arch-specific bytes —
+    the component store is shared (paper §5.7 active sharing)."""
+    store = LocalComponentStore()
+    lb = LazyBuilder(service, store)
+    pb = PreBuilder(service)
+    spec = tpu_single_pod()
+    r1 = lb.build(pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train"),
+                  spec, assemble=False).report
+    r2 = lb.build(pb.prebuild(ARCHS["phi4-mini-3.8b"], entrypoint="train"),
+                  spec, assemble=False).report
+    assert r1.cache_misses > 0
+    # phi4 build reuses every shared component (env, kernels, runtime, …)
+    assert r2.bytes_fetched < 0.05 * r1.bytes_fetched
+    assert r2.cache_hits > 0
+
+
+def test_rebuild_same_platform_is_deterministic(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["jamba-v0.1-52b"], entrypoint="train")
+    spec = tpu_multi_pod()
+    l1 = lb.build(cir, spec, assemble=False).lock
+    l2 = lb.build(cir, spec, assemble=False).lock
+    assert l1.to_json() == l2.to_json()
+    assert l1.digest() == l2.digest()
+
+
+def test_locked_rebuild_bit_identical_and_immutable(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["dbrx-132b"], entrypoint="train")
+    spec = tpu_single_pod()
+    inst = lb.build(cir, spec, assemble=False)
+    inst2 = lb.build_from_lock(cir, inst.lock, spec, assemble=False)
+    assert [c.digest() for c in inst2.bundle.components()] == \
+        list(inst.lock.digests)
+    # a lock from a different CIR must be rejected
+    other = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    with pytest.raises(ValueError):
+        lb.build_from_lock(other, inst.lock, spec, assemble=False)
+
+
+def test_cross_platform_variant_selection(service, pb):
+    """One CIR, three platforms, different concrete components (Fig. 1)."""
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["codeqwen1.5-7b"], entrypoint="train")
+    picks = {}
+    for spec in (tpu_single_pod(), cpu_smoke(), gpu_server()):
+        inst = lb.build(cir, spec, assemble=False)
+        picks[spec.platform_id] = {
+            (c.manager, c.name): c.env for c in inst.bundle.components()}
+    tpu, cpu, gpu = picks.values()
+    assert tpu[("env", "runtime-base")] == "tpu-v5e"
+    assert cpu[("env", "runtime-base")] == "cpu-host"
+    assert gpu[("env", "runtime-base")] == "gpu-a100"
+    assert tpu[("parallel", "plan")] == "fsdp-tp"       # 16x16 pod
+    assert cpu[("parallel", "plan")] == "tp"            # single device
+
+
+def test_workload_override_changes_plan(service, pb):
+    """Deployment-time workload facts steer environment selection — the
+    paper's 'architecture-aware optimizations during deployment-time'."""
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="serve")
+    spec = tpu_single_pod()
+    plain = lb.build(cir, spec, assemble=False,
+                     overrides={"workload": "prefill"})
+    dec = lb.build(cir, spec, assemble=False,
+                   overrides={"workload": "decode"})
+    lng = lb.build(cir, spec, assemble=False,
+                   overrides={"workload": "long-decode"})
+    get = lambda i: {(c.manager, c.name): c.env
+                     for c in i.bundle.components()}[("parallel", "plan")]
+    assert get(plain) == "fsdp-tp"
+    assert get(dec) == "decode"
+    assert get(lng) == "sp-decode"
+
+
+def test_multipod_selects_dci_compression(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    single = lb.build(cir, tpu_single_pod(), assemble=False)
+    multi = lb.build(cir, tpu_multi_pod(), assemble=False)
+    env_of = lambda i: {(c.manager, c.name): c.env
+                        for c in i.bundle.components()}
+    assert env_of(single)[("runtime", "train-step")] == "standard"
+    assert env_of(multi)[("runtime", "train-step")] == "compressed-dci"

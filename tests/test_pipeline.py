@@ -1,0 +1,58 @@
+"""Pipeline-parallel combinator: numeric equivalence vs sequential layers.
+
+Needs 4 devices → subprocess with forced host device count (slow)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import AxisType
+    from repro.models.pipeline import pipeline_apply, bubble_fraction
+
+    mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+    S, LPS, B, D = 4, 2, 8, 16
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (S, LPS, D, D)) * 0.3
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
+
+    def layer_fn(w, h):
+        return jnp.tanh(h @ w)
+
+    with mesh:
+        out = pipeline_apply(layer_fn, ws, x, mesh=mesh, axis="model",
+                             microbatches=4)
+
+    ref = x
+    for s in range(S):
+        for l in range(LPS):
+            ref = layer_fn(ws[s, l], ref)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    assert abs(bubble_fraction(4, 4) - 3/7) < 1e-9
+    print("PIPELINE-OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SCRIPT], capture_output=True,
+                       text=True, env=env, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "PIPELINE-OK" in r.stdout
+
+
+def test_pipeline_component_registered(service):
+    vs = service.vq("parallel", "pipeline")
+    assert vs == ["1.0.0"]
+    c = service.cq("parallel", "pipeline", "1.0.0", "gpipe")
+    assert c.requires[0].key == "workload"

@@ -1,0 +1,162 @@
+"""Algorithm 2 (uniform dependency resolution): BFS tree, reuse, context
+flow, conflict-driven learning, determinism (property-based)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.component import DependencyItem as D
+from repro.core.component import UniformComponent as C
+from repro.core.registry import (UniformComponentRegistry,
+                                 UniformComponentService)
+from repro.core.resolution import (ResolutionError,
+                                   uniform_dependency_resolution)
+
+
+def _svc(components):
+    reg = UniformComponentRegistry()
+    reg.register_all(components)
+    return UniformComponentService(reg)
+
+
+def _c(mgr, name, version, deps=(), env="generic", context=None, size=10):
+    return C(manager=mgr, name=name, version=version, env=env,
+             deps=tuple(D(*d) for d in deps),
+             context=dict(context or {}), payload="p", size_bytes=size)
+
+
+def test_bfs_and_reuse():
+    svc = _svc([
+        _c("app", "a", "1.0", deps=[("lib", "x", ">=1.0"),
+                                    ("lib", "y", "any")]),
+        _c("lib", "x", "1.5", deps=[("lib", "z", "any")]),
+        _c("lib", "y", "1.0", deps=[("lib", "z", "any")]),
+        _c("lib", "z", "3.0"),
+    ])
+    res = uniform_dependency_resolution([D("app", "a", "any")], svc, {})
+    names = [(c.manager, c.name) for c in res.components]
+    assert names == [("app", "a"), ("lib", "x"), ("lib", "y"), ("lib", "z")]
+    # z appears once in L even though both x and y depend on it
+    assert len([n for n in names if n == ("lib", "z")]) == 1
+    # the explain tree marks the second z node reused
+    assert "(reused)" in res.explain()
+
+
+def test_conflict_learning_restarts_converge():
+    """a needs x==2.*; b needs x<2 — per-BFS a pins x=2.0 first, then b's
+    spec conflicts; impossible overall → ResolutionError.  But if a accepts
+    x 1.x too (>=1), learning '<2' must converge to x=1.9."""
+    svc = _svc([
+        _c("app", "a", "1.0", deps=[("lib", "x", ">=1")]),
+        _c("app", "b", "1.0", deps=[("lib", "x", "<2")]),
+        _c("lib", "x", "1.9"),
+        _c("lib", "x", "2.0"),
+    ])
+    res = uniform_dependency_resolution(
+        [D("app", "a", "any"), D("app", "b", "any")], svc, {})
+    x = [c for c in res.components if c.name == "x"]
+    assert len(x) == 1 and x[0].version == "1.9"
+    assert res.restarts >= 1
+
+
+def test_unsatisfiable_conflict_raises():
+    svc = _svc([
+        _c("app", "a", "1.0", deps=[("lib", "x", ">=2")]),
+        _c("app", "b", "1.0", deps=[("lib", "x", "<2")]),
+        _c("lib", "x", "1.9"),
+        _c("lib", "x", "2.0"),
+    ])
+    with pytest.raises(ResolutionError):
+        uniform_dependency_resolution(
+            [D("app", "a", "any"), D("app", "b", "any")], svc, {})
+
+
+def test_context_flows_across_managers():
+    """The paper's cross-manager mechanism: component context feeds later
+    selections through registered getSpec hooks."""
+    from repro.core.resolution import register_context_spec_hook
+    svc = _svc([
+        _c("model", "m", "1.0", deps=[("kernel", "k", "any")],
+           context={"api": "1"}),
+        _c("kernel", "k", "1.5"),
+        _c("kernel", "k", "2.0"),
+    ])
+    register_context_spec_hook(
+        "kernel", lambda name, ctx: f"~={ctx['api']}.0" if "api" in ctx
+        else None)
+    try:
+        res = uniform_dependency_resolution([D("model", "m", "any")], svc, {})
+        k = [c for c in res.components if c.name == "k"][0]
+        assert k.version == "1.5"     # pinned to 1.x by the model's context
+    finally:
+        register_context_spec_hook("kernel", lambda name, ctx: None)
+
+
+def test_context_clash_is_conflict():
+    svc = _svc([
+        _c("app", "a", "1.0", context={"flag": 1}),
+        _c("app", "b", "1.0", context={"flag": 2}),
+    ])
+    with pytest.raises(ResolutionError):
+        uniform_dependency_resolution(
+            [D("app", "a", "any"), D("app", "b", "any")], svc, {},
+            max_restarts=2)
+
+
+# ---------------------------------------------------------------------------
+# Property: determinism — identical inputs → identical pins (paper §3.3)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _random_registry(draw):
+    n_libs = draw(st.integers(1, 4))
+    comps = []
+    lib_names = [f"l{i}" for i in range(n_libs)]
+    for ln in lib_names:
+        for v in draw(st.lists(st.sampled_from(
+                ["1.0", "1.5", "2.0", "2.5"]), min_size=1, max_size=3,
+                unique=True)):
+            comps.append(_c("lib", ln, v))
+    n_apps = draw(st.integers(1, 3))
+    deps = []
+    for i in range(n_apps):
+        sub = draw(st.lists(st.sampled_from(lib_names), min_size=0,
+                            max_size=2, unique=True))
+        spec = draw(st.sampled_from(["any", ">=1.0", "<2.5", "~=1.0"]))
+        comps.append(_c("app", f"a{i}", "1.0",
+                        deps=[("lib", s, spec) for s in sub]))
+        deps.append(D("app", f"a{i}", "any"))
+    return comps, deps
+
+
+@given(_random_registry())
+@settings(max_examples=60, deadline=None)
+def test_resolution_is_deterministic(reg_and_deps):
+    comps, deps = reg_and_deps
+    try:
+        r1 = uniform_dependency_resolution(deps, _svc(comps), {})
+        r2 = uniform_dependency_resolution(deps, _svc(comps), {})
+    except ResolutionError:
+        # unsatisfiable is an acceptable outcome; determinism of the error
+        with pytest.raises(ResolutionError):
+            uniform_dependency_resolution(deps, _svc(comps), {})
+        return
+    assert [c.ident() for c in r1.components] == \
+        [c.ident() for c in r2.components]
+
+
+@given(_random_registry())
+@settings(max_examples=60, deadline=None)
+def test_resolution_closure_and_spec_satisfaction(reg_and_deps):
+    """Every resolved component's deps are satisfied by the component list
+    (L is a closed, consistent set)."""
+    from repro.core.component import Specifier, Version
+    comps, deps = reg_and_deps
+    try:
+        res = uniform_dependency_resolution(deps, _svc(comps), {})
+    except ResolutionError:
+        return
+    by_key = {(c.manager, c.name): c for c in res.components}
+    for c in res.components:
+        for d in c.deps:
+            assert d.key() in by_key
+            assert Specifier(d.specifier).matches(
+                Version.parse(by_key[d.key()].version))

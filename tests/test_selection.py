@@ -1,0 +1,85 @@
+"""Algorithm 1 (uniform component selection) + deployability evaluator."""
+import pytest
+
+from repro.core.component import DependencyItem, Requirement, UniformComponent
+from repro.core.registry import (UniformComponentRegistry,
+                                 UniformComponentService)
+from repro.core.selection import (DeployabilityEvaluator, SelectionError,
+                                  env_select, uniform_component_selection,
+                                  version_select)
+
+
+def _c(version, env, requires=(), perf=1.0, size=100):
+    return UniformComponent(
+        manager="kernel", name="attention", version=version, env=env,
+        requires=tuple(Requirement(*r) for r in requires),
+        perf_score=perf, size_bytes=size, payload="p")
+
+
+@pytest.fixture
+def svc():
+    reg = UniformComponentRegistry()
+    reg.register_all([
+        _c("1.0.0", "generic", perf=1.0),
+        _c("1.1.0", "generic", perf=1.0),
+        _c("1.1.0", "tpu", [("chip", "eq", "tpu-v5e")], perf=3.0),
+        _c("2.0.0", "tpu-only", [("chip", "eq", "tpu-v5e")], perf=3.0),
+    ])
+    return UniformComponentService(reg)
+
+
+def test_version_select_highest_matching():
+    vs = ["0.9.0", "1.0.0", "1.1.0", "2.0.0"]
+    assert version_select(vs, "~=1.0") == "1.1.0"
+    assert version_select(vs, "latest") == "2.0.0"
+    assert version_select(vs, "<1.0") == "0.9.0"
+    assert version_select(vs, ">=3.0") is None
+
+
+def test_env_select_hard_gate_and_perf(svc):
+    cpu_ctx = {"chip": "cpu-host"}
+    tpu_ctx = {"chip": "tpu-v5e"}
+    cands = svc.candidates("kernel", "attention", "1.1.0")
+    best_cpu, _ = env_select(cands, DeployabilityEvaluator(cpu_ctx))
+    best_tpu, _ = env_select(cands, DeployabilityEvaluator(tpu_ctx))
+    assert best_cpu.env == "generic"       # tpu variant hard-gated out
+    assert best_tpu.env == "tpu"           # higher perf wins when eligible
+
+
+def test_algorithm1_version_backoff(svc):
+    """2.0.0 only has a tpu-only env; on cpu the algorithm must do
+    V <- V \\ {v} and fall back to 1.1.0 (the paper's repeat loop)."""
+    d = DependencyItem("kernel", "attention", ">=1.0")
+    ev = DeployabilityEvaluator({"chip": "cpu-host"})
+    c = uniform_component_selection(d, svc, ev)
+    assert (c.version, c.env) == ("1.1.0", "generic")
+
+
+def test_algorithm1_error_when_nothing_fits(svc):
+    d = DependencyItem("kernel", "attention", ">=3.0")
+    ev = DeployabilityEvaluator({"chip": "cpu-host"})
+    with pytest.raises(SelectionError):
+        uniform_component_selection(d, svc, ev)
+
+
+def test_algorithm1_extra_constraint(svc):
+    d = DependencyItem("kernel", "attention", "any")
+    ev = DeployabilityEvaluator({"chip": "tpu-v5e"})
+    c = uniform_component_selection(d, svc, ev, extra_constraint="<2.0")
+    assert c.version == "1.1.0"
+
+
+def test_deployability_cache_scales_with_size():
+    """Cache locality must dominate for GB components and be negligible for
+    KB ones (paper §3.2: caching, size, download time, performance)."""
+    big_a = _c("1.0.0", "a", perf=1.0, size=2 * 2**30)
+    big_b = _c("1.0.0", "b", perf=1.3, size=2 * 2**30)
+    ev = DeployabilityEvaluator({}, cached_digests={big_a.digest()})
+    best, _ = env_select([big_a, big_b], ev)
+    assert best.env == "a"     # avoiding a 2 GiB pull beats 0.3 perf
+
+    small_a = _c("1.0.0", "a", perf=1.0, size=1000)
+    small_b = _c("1.0.0", "b", perf=1.3, size=1000)
+    ev = DeployabilityEvaluator({}, cached_digests={small_a.digest()})
+    best, _ = env_select([small_a, small_b], ev)
+    assert best.env == "b"     # KB-scale cache hit does not buy perf
