@@ -10,10 +10,15 @@ per-platform image must exist in advance.  With CIR:
   3. the checkpoint is restored with platform B's shardings (reshard on
      restore) and training resumes exactly where it stopped.
 
+The builder's persistent build-plan cache makes the round-trip cheap: when
+capacity on A frees up again, failing BACK replays A's cached build plan —
+no re-resolution, no re-fetch (see the timing printed at the end).
+
 Run:  PYTHONPATH=src python examples/migrate.py
 """
 import os
 import shutil
+import time
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +87,17 @@ def main():
           f"{losses_b[-1]:.4f}")
     print("\nmigration preserved training state bit-for-bit — optimizer "
           "step and params carried across platforms")
+
+    # ---- fail back to A: the build-plan cache replays A's plan -------------
+    t0 = time.perf_counter()
+    back = builder.build(cir, spec_a, mesh=mesh, assemble=False)
+    warm_s = time.perf_counter() - t0
+    assert back.report.plan_cache_hit, "expected a plan-cache replay"
+    print(f"\nfail-back to {spec_a.platform_id}: plan-cache replay in "
+          f"{warm_s*1e3:.1f} ms — {back.report.bytes_fetched} bytes fetched, "
+          f"resolution skipped "
+          f"(cache: {builder.plan_cache.stats.hits} hits, "
+          f"{builder.plan_cache.stats.puts} plans)")
 
 
 if __name__ == "__main__":

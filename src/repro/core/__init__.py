@@ -6,12 +6,12 @@ from .registry import (RegistryError, UniformComponentRegistry,  # noqa: F401
 from .selection import (DeployabilityEvaluator, SelectionError,  # noqa: F401
                         uniform_component_selection, version_select)
 from .resolution import (Resolution, ResolutionError,  # noqa: F401
-                         uniform_dependency_resolution)
+                         resolution_from_pins, uniform_dependency_resolution)
 from .spec import (CHIPS, CPU_HOST, GPU_A100, TPU_V5E, SpecSheet,  # noqa: F401
                    cpu_smoke, gpu_server, probe_host, tpu_multi_pod,
                    tpu_single_pod)
 from .store import LocalComponentStore, StoreStats  # noqa: F401
 from .cir import CIR, PreBuilder  # noqa: F401
-from .lazybuild import (BuildReport, ComponentBundle,  # noqa: F401
-                        ContainerInstance, LazyBuilder, Lockfile,
-                        register_payload)
+from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401
+                        ComponentBundle, ContainerInstance, LazyBuilder,
+                        Lockfile, PlanCacheStats, register_payload)

@@ -68,7 +68,18 @@ class CIR:
         return len(self.to_bytes())
 
     def digest(self) -> str:
-        return hashlib.sha256(self.to_bytes()).hexdigest()
+        """Content digest — the identity cache keys are built from.
+
+        Hashes the manifest text + app payload only; the ``created``
+        timestamp is deliberately excluded so two pre-builds of the same
+        application produce the same digest (digest stability rule, see
+        docs/cir-format.md).  The on-wire bytes remain deterministic too
+        (mtime=0 gzip), but they carry ``created`` and so are not the
+        identity.
+        """
+        blob = json.dumps({"manifest": self.to_text(), "app": self.app},
+                          sort_keys=True).encode()
+        return hashlib.sha256(blob).hexdigest()
 
     def arch_config(self) -> ArchConfig:
         return ArchConfig.from_json(self.app["config"])

@@ -27,28 +27,52 @@ class RegistryError(KeyError):
 
 
 class UniformComponentRegistry:
-    """In-memory + optional on-disk index of uniform components."""
+    """In-memory + optional on-disk index of uniform components.
+
+    The registry carries a **catalog epoch** — a content fingerprint that
+    changes every time the catalog's *content* actually changes (a new
+    component, or an overwrite with different bytes).  It is derived from
+    the component digests themselves (an order-independent XOR fold), so it
+    is identical across processes and restarts for identical catalog
+    content: persistent caches keyed by it (the build-plan cache) stay warm
+    across restarts and invalidate exactly when content changes.  Identical
+    re-registration — the common case when upstream converters re-run —
+    leaves it untouched.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self._by_mn: Dict[Tuple[str, str], Dict[str, Dict[str, UniformComponent]]] = {}
         self._lock = threading.Lock()
+        self._fingerprint = 0
         self.path = path
         if path and os.path.exists(path):
             self.load(path)
+
+    @property
+    def epoch(self) -> str:
+        """Content fingerprint of the catalog (hex, restart-stable)."""
+        return format(self._fingerprint, "016x")
+
+    @staticmethod
+    def _fold(c: UniformComponent) -> int:
+        return int(c.digest()[:16], 16)
 
     # -- registration --------------------------------------------------------
     def register(self, c: UniformComponent, overwrite: bool = False) -> None:
         with self._lock:
             vs = self._by_mn.setdefault((c.manager, c.name), {})
             es = vs.setdefault(c.version, {})
-            if c.env in es and not overwrite:
-                # components are immutable: re-registration must be identical
-                if es[c.env].digest() != c.digest():
+            if c.env in es:
+                if es[c.env].digest() == c.digest():
+                    return  # identical re-registration: no content change
+                if not overwrite:
+                    # components are immutable: re-registration must be identical
                     raise RegistryError(
                         f"immutable component re-registered with different "
                         f"content: {c.ident_str()}")
-                return
+                self._fingerprint ^= self._fold(es[c.env])   # retire old
             es[c.env] = c
+            self._fingerprint ^= self._fold(c)
 
     def register_all(self, comps: Iterable[UniformComponent]) -> None:
         for c in comps:
@@ -160,6 +184,11 @@ class UniformComponentService:
         self.bytes_served = 0
         self.requests = 0
         self.conversions = 0
+
+    @property
+    def catalog_epoch(self) -> str:
+        """Content epoch of the backing registry (see registry docstring)."""
+        return self.registry.epoch
 
     # -- queries with on-demand conversion -----------------------------------
     def vq(self, manager: str, name: str) -> List[str]:

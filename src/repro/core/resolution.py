@@ -61,6 +61,13 @@ class Resolution:
     selected_by_key: Dict[Tuple[str, str], UniformComponent] = \
         dataclasses.field(default_factory=dict)
 
+    def pins(self) -> Tuple[Tuple[str, str, str, str], ...]:
+        """The version-lock pins (M, n, v, e) in selection order."""
+        return tuple(c.ident() for c in self.components)
+
+    def pin_digests(self) -> Tuple[str, ...]:
+        return tuple(c.digest() for c in self.components)
+
     def explain(self) -> str:
         lines: List[str] = []
 
@@ -76,6 +83,41 @@ class Resolution:
         for ch in self.tree.children:
             rec(ch, 0)
         return "\n".join(lines)
+
+
+def resolution_from_pins(
+        pins: Sequence[Tuple[str, str, str, str]],
+        service: UniformComponentService,
+        host_context: Mapping[str, Any],
+        expected_digests: Optional[Sequence[str]] = None,
+) -> Resolution:
+    """Replay a version-lock manifest: CQ-only (no VS/ES), deterministic.
+
+    Reconstructs the full ``Resolution`` — including the final building
+    context, by merging each pinned component's context contribution in the
+    original selection order — without running Algorithm 2.  This is the
+    fast path shared by CIR-locked rebuilds and the build-plan cache.
+    ``expected_digests`` enforces component immutability when given.
+    """
+    comps = [service.cq(*pin) for pin in pins]
+    if expected_digests is not None:
+        if len(expected_digests) != len(comps):
+            raise ResolutionError(
+                f"lock has {len(comps)} pins but "
+                f"{len(expected_digests)} digests — refusing to replay "
+                f"with partial immutability verification")
+        for c, dg in zip(comps, expected_digests):
+            if c.digest() != dg:
+                raise ResolutionError(
+                    f"immutability violation for {c.ident_str()}")
+    ctx: Dict[str, Any] = dict(host_context)
+    for c in comps:
+        ctx.update(c.context)
+    return Resolution(
+        components=comps, context=ctx, tree=Node(
+            DependencyItem("root", "root", "any")),
+        restarts=0, learned={},
+        selected_by_key={(c.manager, c.name): c for c in comps})
 
 
 def uniform_dependency_resolution(

@@ -122,6 +122,11 @@ class SpecSheet:
         d = dataclasses.asdict(self)
         return json.dumps(d, sort_keys=True)
 
+    def digest(self) -> str:
+        """Stable content digest of the platform description (cache key)."""
+        import hashlib
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
     @staticmethod
     def from_json(s: str) -> "SpecSheet":
         d = json.loads(s)

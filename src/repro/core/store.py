@@ -32,6 +32,11 @@ class StoreStats:
             return 0.0
         return 1.0 - self.bytes_stored / self.bytes_requested
 
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["sharing_rate"] = self.sharing_rate
+        return d
+
 
 class LocalComponentStore:
     """Content-addressed store: digest -> component metadata (+virtual bytes)."""

@@ -1,0 +1,10 @@
+"""repro.deploy — the deployment-service layer on top of the lazy-builder.
+
+One CIR, many platforms: ``FleetDeployer`` drives the staged build pipeline
+concurrently across N heterogeneous SpecSheets, sharing fetched components
+through one ``LocalComponentStore`` and resolutions through one
+``BuildPlanCache``, so the second-and-later platforms pay only their
+platform-specific delta (the cloud-edge continuum scenario).
+"""
+from .fleet import (FleetDeployer, FleetResult,  # noqa: F401
+                    PlatformDeployment)

@@ -1,0 +1,163 @@
+"""FleetDeployer — deploy one CIR across N heterogeneous platforms.
+
+The deployment service substrate the paper's cross-platform story implies:
+a single pre-built CIR is lazily built for every platform in a fleet
+(TPU pod, GPU server, CPU edge node, …) concurrently.  All builds share
+
+  * one ``LocalComponentStore``  — components fetched for the first
+    platform are free for every later one (*fleet active sharing*);
+  * one ``BuildPlanCache``       — re-deploying to a platform class whose
+    plan is already cached skips resolution entirely.
+
+Byte accounting follows the seed's offline model: nothing real crosses a
+network, but every fetched component is charged its wire size, so the
+fleet sharing rate and per-platform deltas are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+
+from ..core.cir import CIR
+from ..core.lazybuild import (BuildPlanCache, ContainerInstance, LazyBuilder)
+from ..core.registry import UniformComponentService
+from ..core.spec import SpecSheet
+from ..core.store import LocalComponentStore
+
+
+@dataclasses.dataclass
+class PlatformDeployment:
+    """Outcome of deploying the CIR to one platform of the fleet."""
+    platform_id: str
+    instance: Optional[ContainerInstance]
+    error: Optional[str] = None
+    wall_s: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
+
+
+@dataclasses.dataclass
+class FleetResult:
+    cir_name: str
+    deployments: List[PlatformDeployment]
+    wall_s: float
+    bytes_fetched_total: int          # network bytes across the whole fleet
+    bytes_components_total: int       # what N independent nodes would pull
+    sharing_rate: float               # store dedup over THIS deploy's puts
+    plan_cache_hits: int
+
+    @property
+    def ok(self) -> bool:
+        return all(d.ok for d in self.deployments)
+
+    def instance(self, platform_id: str) -> ContainerInstance:
+        for d in self.deployments:
+            if d.platform_id == platform_id:
+                assert d.instance is not None, d.error
+                return d.instance
+        raise KeyError(platform_id)
+
+    def summary(self) -> str:
+        lines = [f"fleet deploy of {self.cir_name}: "
+                 f"{sum(d.ok for d in self.deployments)}/"
+                 f"{len(self.deployments)} platforms, "
+                 f"sharing rate {self.sharing_rate * 100:.1f}%, "
+                 f"{self.plan_cache_hits} plan-cache hits"]
+        for d in self.deployments:
+            if d.ok:
+                rep = d.instance.report
+                lines.append(
+                    f"  {d.platform_id:20s} fetched "
+                    f"{rep.bytes_fetched / 2**20:8.1f} MiB "
+                    f"({'plan-replay' if rep.plan_cache_hit else 'resolved'})")
+            else:
+                lines.append(f"  {d.platform_id:20s} FAILED: {d.error}")
+        return "\n".join(lines)
+
+
+class FleetDeployer:
+    """Deploys one CIR to many SpecSheets through a shared staged pipeline.
+
+    A single ``LazyBuilder`` (one store, one plan cache) serves every
+    platform; per-platform builds run on a thread pool.  The store and the
+    registry are lock-protected, and resolution is read-mostly, so
+    concurrent builds are safe — they just interleave their fetch
+    accounting, which is exactly the sharing the fleet report measures.
+    """
+
+    def __init__(self, service: UniformComponentService,
+                 store: Optional[LocalComponentStore] = None,
+                 plan_cache: Optional[BuildPlanCache] = None,
+                 link_bandwidth_bps: float = 500e6,
+                 max_workers: int = 8):
+        self.store = store or LocalComponentStore()
+        self.plan_cache = plan_cache or BuildPlanCache()
+        self.builder = LazyBuilder(service, self.store,
+                                   link_bandwidth_bps=link_bandwidth_bps,
+                                   plan_cache=self.plan_cache)
+        self.max_workers = max_workers
+
+    # ------------------------------------------------------------------
+    def deploy(self, cir: CIR, specs: Sequence[SpecSheet],
+               mesh: Any = None,
+               overrides: Optional[Mapping[str, Any]] = None,
+               assemble: bool = False,
+               compile_steps: bool = False) -> FleetResult:
+        """Deploy ``cir`` to every platform in ``specs`` concurrently."""
+        hits_before = self.plan_cache.stats.hits
+        stored_before = self.store.stats.bytes_stored
+        requested_before = self.store.stats.bytes_requested
+        t0 = time.perf_counter()
+
+        def one(spec: SpecSheet) -> PlatformDeployment:
+            t = time.perf_counter()
+            try:
+                inst = self.builder.build(
+                    cir, spec, mesh=mesh, overrides=overrides,
+                    assemble=assemble, compile_steps=compile_steps)
+                return PlatformDeployment(spec.platform_id, inst,
+                                          wall_s=time.perf_counter() - t)
+            except Exception as e:  # noqa: BLE001 — per-platform isolation
+                return PlatformDeployment(spec.platform_id, None,
+                                          error=f"{type(e).__name__}: {e}",
+                                          wall_s=time.perf_counter() - t)
+
+        workers = max(1, min(self.max_workers, len(specs)))
+        if workers == 1:
+            deployments = [one(s) for s in specs]
+        else:
+            with ThreadPoolExecutor(max_workers=workers) as pool:
+                deployments = list(pool.map(one, specs))
+
+        fetched = sum(d.instance.report.bytes_fetched
+                      for d in deployments if d.ok)
+        total = sum(d.instance.report.bytes_total_components
+                    for d in deployments if d.ok)
+        # sharing over THIS deploy only (the store may serve many deploys)
+        req = self.store.stats.bytes_requested - requested_before
+        stored = self.store.stats.bytes_stored - stored_before
+        return FleetResult(
+            cir_name=cir.name,
+            deployments=deployments,
+            wall_s=time.perf_counter() - t0,
+            bytes_fetched_total=fetched,
+            bytes_components_total=total,
+            sharing_rate=(1.0 - stored / req) if req else 0.0,
+            plan_cache_hits=self.plan_cache.stats.hits - hits_before,
+        )
+
+    # ------------------------------------------------------------------
+    def warm(self, cir: CIR, specs: Sequence[SpecSheet],
+             overrides: Optional[Mapping[str, Any]] = None) -> int:
+        """Pre-populate the plan cache + store for a fleet (no assembly).
+
+        Returns the number of platforms whose plans are now cached — a
+        deployment service calls this off the hot path so real deploys
+        replay plans and hit the store.
+        """
+        res = self.deploy(cir, specs, overrides=overrides, assemble=False)
+        return sum(d.ok for d in res.deployments)

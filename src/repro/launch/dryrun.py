@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from ..configs import ARCHS
 from ..core import PreBuilder, LazyBuilder, tpu_multi_pod, tpu_single_pod
 from ..core import catalog
-from .hlo_stats import module_cost
+from .hlo_stats import module_cost, xla_cost_analysis
 from .mesh import (SHAPES, ShapeSpec, applicable, build_overrides,
                    make_production_mesh)
 
@@ -172,7 +172,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool = False,
         compile_s = time.perf_counter() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     txt = compiled.as_text()
     hlo = module_cost(txt)
 

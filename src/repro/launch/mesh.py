@@ -11,19 +11,25 @@ import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def _make_mesh(shape, axes):
+    # AxisType landed in jax 0.4.38+; older jax defaults every axis to Auto
+    # already, so omitting axis_types is equivalent there.
     import jax
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh(devices: int = 1):
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh((devices,), ("data",), axis_types=(AxisType.Auto,))
+    return _make_mesh((devices,), ("data",))
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,10 @@
 """Unit + property tests for versions, specifiers, requirements, components."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip individually without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.component import (DependencyItem, Requirement, Specifier,
                                   UniformComponent, Version)

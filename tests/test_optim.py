@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip individually without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.optim import (AdamWConfig, TrainStepConfig, _dq8, _q8,
                          adamw_init, adamw_update, build_train_step,

@@ -14,10 +14,10 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.models.pipeline import pipeline_apply, bubble_fraction
+    from repro.launch.mesh import _make_mesh
 
-    mesh = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+    mesh = _make_mesh((4,), ("model",))
     S, LPS, B, D = 4, 2, 8, 16
     key = jax.random.PRNGKey(0)
     ws = jax.random.normal(key, (S, LPS, D, D)) * 0.3

@@ -1,0 +1,193 @@
+"""Build-plan cache + fleet deployment: the staged pipeline's hot path.
+
+Covers the deployment-service claims: cold build populates the cache, an
+identical (CIR, SpecSheet) re-deploy replays the plan and skips resolution,
+a catalog-epoch bump invalidates, and fleet deploys share the store.
+"""
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (BuildPlanCache, LazyBuilder, LocalComponentStore,
+                        PreBuilder, cpu_smoke, gpu_server, tpu_single_pod)
+from repro.core.component import UniformComponent
+from repro.deploy import FleetDeployer
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def test_cold_build_populates_cache(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    inst = lb.build(cir, tpu_single_pod(), assemble=False)
+    assert not inst.report.plan_cache_hit
+    assert len(lb.plan_cache) == 1
+    assert lb.plan_cache.stats.puts == 1
+    plan = next(iter(lb.plan_cache._plans.values()))
+    assert plan.cir_digest == cir.digest()
+    assert plan.pins == inst.lock.pins
+
+
+def test_warm_redeploy_hits_and_skips_resolution(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    spec = tpu_single_pod()
+    cold = lb.build(cir, spec, assemble=False)
+    warm = lb.build(cir, spec, assemble=False)
+    assert warm.report.plan_cache_hit
+    # the replay is the identical deployment: same lock, same components
+    assert warm.lock.to_json() == cold.lock.to_json()
+    assert [c.digest() for c in warm.bundle.components()] == \
+        [c.digest() for c in cold.bundle.components()]
+    # and it skipped resolution/fetch work: everything was in the store
+    assert warm.report.bytes_fetched == 0
+    assert warm.report.cache_misses == 0
+    assert lb.plan_cache.stats.hits == 1
+
+
+def test_replay_context_matches_resolved_context(service, pb):
+    """Replayed bundles carry the component context contributions — the
+    assembler reads e.g. attn.impl from there."""
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    spec = tpu_single_pod()
+    cold = lb.build(cir, spec, assemble=False)
+    warm = lb.build(cir, spec, assemble=False)
+    assert warm.report.plan_cache_hit
+    assert warm.bundle.context == cold.bundle.context
+
+
+def test_different_overrides_do_not_share_plans(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="serve")
+    spec = tpu_single_pod()
+    a = lb.build(cir, spec, assemble=False, overrides={"workload": "prefill"})
+    b = lb.build(cir, spec, assemble=False, overrides={"workload": "decode"})
+    assert not b.report.plan_cache_hit
+    plan_of = lambda i: {(c.manager, c.name): c.env
+                         for c in i.bundle.components()}[("parallel", "plan")]
+    assert plan_of(a) != plan_of(b)
+
+
+def test_catalog_epoch_bump_invalidates(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    spec = tpu_single_pod()
+    lb.build(cir, spec, assemble=False)
+    epoch0 = service.catalog_epoch
+    # catalog content changes: a new component lands upstream (an inert one
+    # nothing resolves to — only the epoch change matters here)
+    newcomp = UniformComponent(
+        manager="test-only", name="inert", version="1.0", env="generic",
+        payload="none", size_bytes=1)
+    service.registry.register(newcomp)
+    assert service.catalog_epoch != epoch0
+    redo = lb.build(cir, spec, assemble=False)
+    assert not redo.report.plan_cache_hit   # old plan keyed at old epoch
+    # identical re-registration must NOT change the epoch (stable catalogs
+    # keep their plans warm across service rebuilds)
+    epoch1 = service.catalog_epoch
+    service.registry.register(newcomp)
+    assert service.catalog_epoch == epoch1
+    again = lb.build(cir, spec, assemble=False)
+    assert again.report.plan_cache_hit
+
+
+def test_plan_cache_persists_to_disk(service, pb, tmp_path):
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    spec = cpu_smoke()
+    cache_dir = str(tmp_path / "plans")
+    lb1 = LazyBuilder(service, plan_cache=BuildPlanCache(cache_dir))
+    lb1.build(cir, spec, assemble=False)
+    # a new process (fresh builder, fresh store) reloads the plans
+    lb2 = LazyBuilder(service, LocalComponentStore(),
+                      plan_cache=BuildPlanCache(cache_dir))
+    inst = lb2.build(cir, spec, assemble=False)
+    assert inst.report.plan_cache_hit
+
+
+def test_plan_cache_survives_restart_with_rebuilt_catalog(pb, tmp_path):
+    """The catalog epoch is a content fingerprint, not a registration
+    counter: a restarted process that rebuilds the same catalog from
+    scratch must still hit plans persisted by the previous process."""
+    from repro.core import catalog
+    cache_dir = str(tmp_path / "plans")
+    spec = cpu_smoke()
+
+    svc1 = catalog.build_service()
+    pb1 = PreBuilder(svc1)
+    cir = pb1.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    lb1 = LazyBuilder(svc1, plan_cache=BuildPlanCache(cache_dir))
+    cold = lb1.build(cir, spec, assemble=False)
+    assert not cold.report.plan_cache_hit
+
+    # "restart": a brand-new service with its own freshly-built registry
+    svc2 = catalog.build_service()
+    assert svc2.catalog_epoch == svc1.catalog_epoch
+    lb2 = LazyBuilder(svc2, LocalComponentStore(),
+                      plan_cache=BuildPlanCache(cache_dir))
+    warm = lb2.build(cir, spec, assemble=False)
+    assert warm.report.plan_cache_hit
+    assert warm.lock.to_json() == cold.lock.to_json()
+
+
+def test_corrupt_persisted_plan_is_a_miss(service, pb, tmp_path):
+    import os
+    cache_dir = str(tmp_path / "plans")
+    lb1 = LazyBuilder(service, plan_cache=BuildPlanCache(cache_dir))
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    lb1.build(cir, cpu_smoke(), assemble=False)
+    for fn in os.listdir(cache_dir):
+        with open(os.path.join(cache_dir, fn), "w") as f:
+            f.write("not json {{{")
+    lb2 = LazyBuilder(service, LocalComponentStore(),
+                      plan_cache=BuildPlanCache(cache_dir))   # must not raise
+    inst = lb2.build(cir, cpu_smoke(), assemble=False)
+    assert not inst.report.plan_cache_hit   # torn entry = miss, rebuilt
+
+
+def test_fleet_deploy_shares_components(service, pb):
+    """One CIR to 3 heterogeneous specs: the shared store dedups, so the
+    fleet sharing rate is nonzero and later platforms fetch less than the
+    bytes their components total."""
+    fd = FleetDeployer(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    specs = [tpu_single_pod(), cpu_smoke(), gpu_server()]
+    res = fd.deploy(cir, specs)
+    assert res.ok
+    assert len(res.deployments) == 3
+    assert res.sharing_rate > 0
+    assert fd.store.stats.sharing_rate > 0
+    assert res.bytes_fetched_total < res.bytes_components_total
+    # every platform resolved to its own env variant despite sharing
+    envs = {d.platform_id: {(c.manager, c.name): c.env
+                            for c in d.instance.bundle.components()}
+            for d in res.deployments}
+    assert envs["tpu-v5e-16x16"][("env", "runtime-base")] == "tpu-v5e"
+    assert envs["cpu-smoke-1"][("env", "runtime-base")] == "cpu-host"
+    assert envs["gpu-a100-8"][("env", "runtime-base")] == "gpu-a100"
+
+
+def test_fleet_redeploy_replays_all_plans(service, pb):
+    fd = FleetDeployer(service)
+    cir = pb.prebuild(ARCHS["phi4-mini-3.8b"], entrypoint="train")
+    specs = [tpu_single_pod(), cpu_smoke(), gpu_server()]
+    assert fd.warm(cir, specs) == 3
+    res = fd.deploy(cir, specs)
+    assert res.plan_cache_hits == 3
+    assert res.bytes_fetched_total == 0   # everything already in the store
+    assert all(d.instance.report.plan_cache_hit for d in res.deployments)
+
+
+def test_locked_rebuild_still_bit_identical(service, pb):
+    """The staged pipeline must not change CIR-locked semantics."""
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS["dbrx-132b"], entrypoint="train")
+    spec = tpu_single_pod()
+    inst = lb.build(cir, spec, assemble=False)
+    relock = lb.build_from_lock(cir, inst.lock, spec, assemble=False)
+    assert [c.digest() for c in relock.bundle.components()] == \
+        list(inst.lock.digests)
+    assert relock.report.locked

@@ -7,8 +7,15 @@ from jax.sharding import AbstractMesh, PartitionSpec
 from repro.models.sharding import (RULE_SETS, ShardingPlan, zero1_axes)
 
 
+def _abstract_mesh(shape, axes):
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:   # jax <= 0.4.37: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def _plan(rules_name, shape=(16, 16), axes=("data", "model")):
-    mesh = AbstractMesh(shape, axes)
+    mesh = _abstract_mesh(shape, axes)
     return ShardingPlan(rules_name, mesh,
                         RULE_SETS[rules_name](axes))
 

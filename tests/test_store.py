@@ -1,5 +1,8 @@
 """Local component store: dedup accounting + sharing-granularity report."""
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests skip individually without hypothesis
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.component import UniformComponent
 from repro.core.store import LocalComponentStore
