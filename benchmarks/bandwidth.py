@@ -8,8 +8,8 @@ from typing import Dict, List
 from repro.configs import ARCHS
 from repro.core import tpu_single_pod
 
-from .common import (MBPS, conventional_for, csv_row, fresh_builder,
-                     lazy_deploy_time)
+from .common import (MBPS, bump_asset_version, conventional_for, csv_row,
+                     fresh_builder, lazy_deploy_time)
 
 BANDWIDTHS = (10, 20, 50, 100, 200, 500, 800, 1000)
 
@@ -25,6 +25,11 @@ def run(arch_id: str = "gemma2-9b", quiet: bool = False
         conv = conventional_for(cir, lb, spec)
         lb_cold, _ = fresh_builder(mbps, host_spec=spec)
         rep = lb_cold.build(cir, spec, assemble=False).report
+        # the cloud-edge hot path: a weight refresh lands upstream and the
+        # same node re-deploys — chunk-level delta fetch pays ~70% of the
+        # bumped component only (vs the conventional full image re-pull)
+        bump_asset_version(lb_cold.service, arch_id)
+        delta = lb_cold.build(cir, spec, assemble=False).report
         lb_cold2, _ = fresh_builder(mbps, host_spec=spec)
         lock = lb.build(cir, spec, assemble=False).lock
         warm = lb_cold2.build_from_lock(cir, lock, spec,
@@ -32,14 +37,15 @@ def run(arch_id: str = "gemma2-9b", quiet: bool = False
         rows[mbps] = {
             "conv_s": conv.build_time(bw) + conv.pull_time(bw),
             "cir_s": lazy_deploy_time(rep, bw),
+            "cir_delta_s": lazy_deploy_time(delta, bw),
             "cir_locked_s": lazy_deploy_time(warm, bw),
         }
     if not quiet:
         print(f"{'Mbps':>5s} {'conventional':>13s} {'CIR':>9s} "
-              f"{'CIR-locked':>11s}")
+              f"{'CIR-delta':>10s} {'CIR-locked':>11s}")
         for mbps, r in rows.items():
             print(f"{mbps:>5d} {r['conv_s']:>12.1f}s {r['cir_s']:>8.1f}s "
-                  f"{r['cir_locked_s']:>10.1f}s")
+                  f"{r['cir_delta_s']:>9.1f}s {r['cir_locked_s']:>10.1f}s")
         gaps = [r["conv_s"] - r["cir_s"] for r in rows.values()]
         print(f"conventional-vs-CIR gap: {min(gaps):.0f}s … {max(gaps):.0f}s "
               f"(paper: a persistent ~100 s install-stage gap)")
@@ -49,10 +55,12 @@ def run(arch_id: str = "gemma2-9b", quiet: bool = False
 def main() -> List[str]:
     rows = run(quiet=True)
     red = [100 * (1 - r["cir_s"] / r["conv_s"]) for r in rows.values()]
+    dred = [100 * (1 - r["cir_delta_s"] / r["cir_s"]) for r in rows.values()]
     return [csv_row(
         "bandwidth.fig7", 0.0,
         f"avg_reduction={sum(red)/len(red):.1f}%;"
-        f"min={min(red):.1f}%;max={max(red):.1f}%")]
+        f"min={min(red):.1f}%;max={max(red):.1f}%;"
+        f"delta_redeploy_vs_cold={sum(dred)/len(dred):.1f}%")]
 
 
 if __name__ == "__main__":

@@ -14,23 +14,32 @@ build-time story) and serve CIRs (weights included on both sides).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs import ARCHS
 from repro.core import tpu_single_pod
 
-from .common import (MBPS, conventional_for, csv_row, fresh_builder,
+from .common import (MBPS, SMOKE_ARCHS as _SMOKE_ARCHS, bump_asset_version,
+                     conventional_for, csv_row, fresh_builder,
                      lazy_deploy_time)
+
+# Simulated per-build link for the fetch-concurrency study: fast enough that
+# the whole sweep stays sub-second, slow enough that stripe overlap is
+# measurable far above scheduler noise.
+_SIM_FETCH_BPS = 100e9
 
 
 def run(bw_mbps: float = 500.0, locked: bool = False, cores: int = 4,
-        entrypoint: str = "train", quiet: bool = False) -> Dict[str, Dict]:
+        entrypoint: str = "train", quiet: bool = False,
+        archs: Optional[Sequence[str]] = None) -> Dict[str, Dict]:
     bw = bw_mbps * MBPS
     spec = tpu_single_pod()
     lb, pb = fresh_builder(bw_mbps)
     rows: Dict[str, Dict] = {}
-    for arch_id in ARCHS:
+    for arch_id in (archs or ARCHS):
         t0 = time.perf_counter()
         cir = pb.prebuild(ARCHS[arch_id], entrypoint=entrypoint)
         prebuild_s = time.perf_counter() - t0
@@ -113,6 +122,140 @@ def cpu_sweep(bw_mbps: float = 500.0, quiet: bool = False) -> Dict[int, Dict]:
     return out
 
 
+def delta_redeploy(bw_mbps: float = 500.0,
+                   archs: Sequence[str] = _SMOKE_ARCHS,
+                   quiet: bool = False) -> Dict[str, Dict]:
+    """The chunk-store delta-fetch column: cold serve deploy, then an
+    upstream weight refresh (version bump) and a re-deploy on the same node.
+    Component-level dedup must re-fetch the whole bumped component; the live
+    chunk store pays only the unshared chunk fraction (~70% of its bytes)."""
+    bw = bw_mbps * MBPS
+    spec = tpu_single_pod()
+    rows: Dict[str, Dict] = {}
+    for arch_id in archs:
+        lb, pb = fresh_builder(bw_mbps, host_spec=spec)
+        cir = pb.prebuild(ARCHS[arch_id], entrypoint="serve")
+        cold = lb.build(cir, spec, assemble=False).report
+        bump_asset_version(lb.service, arch_id)
+        bump = lb.build(cir, spec, assemble=False).report
+        rows[arch_id] = {
+            "cold_wire_bytes": cold.bytes_wire_fetched,
+            "bump_component_bytes": bump.bytes_fetched,
+            "bump_delta_bytes": bump.bytes_delta_fetched,
+            "chunks_hit": bump.chunks_hit,
+            "chunks_missed": bump.chunks_missed,
+            "delta_saved_pct": 100.0 * (1 - bump.bytes_delta_fetched
+                                        / max(bump.bytes_fetched, 1)),
+            "cold_deploy_s": lazy_deploy_time(cold, bw),
+            "bump_deploy_s": lazy_deploy_time(bump, bw),
+        }
+    if not quiet:
+        print(f"-- version-bump re-deploy (weights refresh), "
+              f"{bw_mbps:.0f} Mbps, chunk-addressed delta fetch")
+        print(f"{'arch':24s} {'cold':>10s} {'bump comp':>10s} "
+              f"{'bump wire':>10s} {'saved':>6s} {'cold dep':>9s} "
+              f"{'bump dep':>9s}")
+        for a, r in rows.items():
+            print(f"{a:24s} {r['cold_wire_bytes']/2**30:>8.2f} G "
+                  f"{r['bump_component_bytes']/2**30:>8.2f} G "
+                  f"{r['bump_delta_bytes']/2**30:>8.2f} G "
+                  f"{r['delta_saved_pct']:>5.1f}% "
+                  f"{r['cold_deploy_s']:>8.1f}s {r['bump_deploy_s']:>8.1f}s")
+    return rows
+
+
+def fetch_concurrency(arch_id: str = "gemma2-9b",
+                      widths: Sequence[int] = (1, 2, 4, 8),
+                      quiet: bool = False) -> Dict[int, Dict]:
+    """Pool-width sweep: one cold serve deploy per width on a simulated
+    link (``_SIM_FETCH_BPS``); the striped fetch engine overlaps chunk
+    transfers, so fetch wall time drops roughly with the pool width."""
+    spec = tpu_single_pod()
+    rows: Dict[int, Dict] = {}
+    for w in widths:
+        lb, pb = fresh_builder(host_spec=spec, fetch_workers=w,
+                               fetch_simulate_bps=_SIM_FETCH_BPS)
+        cir = pb.prebuild(ARCHS[arch_id], entrypoint="serve")
+        rep = lb.build(cir, spec, assemble=False).report
+        rows[w] = {"fetch_s": rep.fetch_s,
+                   "fetch_serial_s": rep.fetch_serial_s,
+                   "fetch_concurrency": rep.fetch_concurrency,
+                   "speedup_vs_serial": rep.fetch_serial_s
+                   / max(rep.fetch_s, 1e-12)}
+    if not quiet:
+        print(f"-- fetch pool-width sweep ({arch_id}, simulated "
+              f"{_SIM_FETCH_BPS/1e9:.0f} GB/s link)")
+        for w, r in rows.items():
+            print(f"  width={w:2d}  fetch={r['fetch_s']*1e3:8.1f} ms  "
+                  f"serial-sum={r['fetch_serial_s']*1e3:8.1f} ms  "
+                  f"({r['speedup_vs_serial']:.2f}x)")
+    return rows
+
+
+def fleet_fetch(arch_id: str = "gemma2-9b", fetch_workers: int = 8,
+                quiet: bool = False) -> Dict[str, float]:
+    """Fleet deploy (1 CIR -> 3 platforms) through the concurrent engine on
+    a simulated link: fetch wall time lands well below the serial sum of
+    per-component fetch times, and singleflight keeps every chunk charged
+    exactly once across the fleet."""
+    from repro.core import catalog, cpu_smoke, gpu_server, PreBuilder
+    from repro.deploy import FleetDeployer
+
+    svc = catalog.build_service()
+    pb = PreBuilder(svc)
+    fd = FleetDeployer(svc, max_workers=3, fetch_workers=fetch_workers,
+                       fetch_simulate_bps=_SIM_FETCH_BPS)
+    cir = pb.prebuild(ARCHS[arch_id], entrypoint="serve")
+    res = fd.deploy(cir, [tpu_single_pod(), cpu_smoke(), gpu_server()])
+    assert res.ok, res.summary()
+    rows = {
+        "fetch_serial_s_total": res.fetch_serial_s_total,
+        "fetch_s_wall": res.fetch_s_wall,
+        "speedup": res.fetch_serial_s_total / max(res.fetch_s_wall, 1e-12),
+        "fetch_concurrency": res.fetch_concurrency,
+        "bytes_delta_total": res.bytes_delta_total,
+        "bytes_fetched_total": res.bytes_fetched_total,
+        "chunks_missed_total": res.chunks_missed_total,
+        "chunks_waited_total": res.chunks_waited_total,
+        "double_charged_bytes": res.bytes_delta_total
+        - fd.store.chunk_stats.chunk_bytes_stored,
+    }
+    if not quiet:
+        print(f"-- fleet fetch pipeline ({arch_id} -> 3 platforms, "
+              f"width {fetch_workers})")
+        print(res.summary())
+    return rows
+
+
+def write_bench_fetch(path: Optional[str] = None,
+                      smoke: bool = False,
+                      delta: Optional[Dict] = None,
+                      concurrency: Optional[Dict] = None,
+                      fleet: Optional[Dict] = None) -> str:
+    """Record the fetch-engine perf trajectory (consumed by CI).  Callers
+    that already ran a sweep pass its rows in; only missing sections are
+    computed here."""
+    path = path or os.environ.get("BENCH_FETCH_PATH", "BENCH_fetch.json")
+    if delta is None:
+        delta = delta_redeploy(
+            archs=_SMOKE_ARCHS if smoke else _SMOKE_ARCHS + ("dbrx-132b",),
+            quiet=True)
+    if concurrency is None:
+        concurrency = fetch_concurrency(widths=(1, 8) if smoke else
+                                        (1, 2, 4, 8), quiet=True)
+    if fleet is None:
+        fleet = fleet_fetch(quiet=True)
+    payload = {
+        "config": {"sim_fetch_bps": _SIM_FETCH_BPS, "smoke": smoke},
+        "delta_redeploy": delta,
+        "fetch_concurrency": concurrency,
+        "fleet_fetch": fleet,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
 def main() -> List[str]:
     rows = run(quiet=True)
     avg_b = sum(r["build_reduction_pct"] for r in rows.values()) / len(rows)
@@ -128,6 +271,10 @@ def main() -> List[str]:
     sweep = cpu_sweep(quiet=True)
     spread_conv = sweep[1]["conv_total_s"] / sweep[16]["conv_total_s"]
     spread_cir = sweep[1]["cir_total_s"] / sweep[16]["cir_total_s"]
+    delta = delta_redeploy(quiet=True)
+    avg_delta = sum(r["delta_saved_pct"] for r in delta.values()) / len(delta)
+    fleet = fleet_fetch(quiet=True)
+    write_bench_fetch(delta=delta, fleet=fleet)
     return [
         csv_row("build_time.fig9", 0.0,
                 f"build_red={avg_b:.1f}%;deploy_red={avg_d:.1f}%;"
@@ -139,12 +286,38 @@ def main() -> List[str]:
         csv_row("build_time.cpu_sweep.fig8", 0.0,
                 f"conv_1c_vs_16c={spread_conv:.2f}x;"
                 f"cir_1c_vs_16c={spread_cir:.2f}x"),
+        csv_row("build_time.delta_fetch", 0.0,
+                f"version_bump_wire_saved={avg_delta:.1f}%"),
+        csv_row("build_time.fleet_fetch", 0.0,
+                f"fetch_wall_vs_serial={fleet['speedup']:.2f}x;"
+                f"width={fleet['fetch_concurrency']};"
+                f"double_charged_bytes={fleet['double_charged_bytes']}"),
     ]
 
 
 if __name__ == "__main__":
-    run()
-    print()
-    run(entrypoint="serve")
-    print()
-    cpu_sweep()
+    import sys
+    if "--smoke" in sys.argv:
+        # CI smoke: reduced arch set + the fetch-trajectory JSON artifact
+        run(quiet=False, archs=_SMOKE_ARCHS)
+        print()
+        delta = delta_redeploy()
+        print()
+        conc = fetch_concurrency(widths=(1, 8))
+        print()
+        fleet = fleet_fetch()
+        out = write_bench_fetch(smoke=True, delta=delta, concurrency=conc,
+                                fleet=fleet)
+        print(f"\nwrote {out}")
+    else:
+        run()
+        print()
+        run(entrypoint="serve")
+        print()
+        cpu_sweep()
+        print()
+        delta_redeploy()
+        print()
+        fetch_concurrency()
+        print()
+        fleet_fetch()

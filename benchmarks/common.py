@@ -26,8 +26,9 @@ import time
 from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.configs import ARCHS
-from repro.core import (CIR, LazyBuilder, LocalComponentStore, PreBuilder,
-                        SpecSheet, tpu_single_pod)
+from repro.core import (CIR, ChunkedComponentStore, LazyBuilder,
+                        LocalComponentStore, PreBuilder, SpecSheet,
+                        tpu_single_pod)
 from repro.core import catalog
 
 INSTALL_BPS = 20e6
@@ -35,15 +36,38 @@ UNPACK_BPS = 150e6
 
 MBPS = 1e6 / 8  # bytes/s per Mbps
 
+# Reduced arch set for CI benchmark smoke runs (one per weight scale)
+SMOKE_ARCHS = ("gemma2-9b", "starcoder2-3b", "phi4-mini-3.8b")
+
 
 def fresh_builder(link_mbps: float = 500.0, host_spec: Optional[SpecSheet]
-                  = None) -> Tuple[LazyBuilder, PreBuilder]:
+                  = None, fetch_workers: int = 8,
+                  fetch_simulate_bps: Optional[float] = None
+                  ) -> Tuple[LazyBuilder, PreBuilder]:
     svc = catalog.build_service()
-    lb = LazyBuilder(svc, LocalComponentStore(),
-                     link_bandwidth_bps=link_mbps * 1e6)
+    lb = LazyBuilder(svc, ChunkedComponentStore(),
+                     link_bandwidth_bps=link_mbps * 1e6,
+                     fetch_workers=fetch_workers,
+                     fetch_simulate_bps=fetch_simulate_bps)
     if host_spec is not None:
         seed_host_components(lb, host_spec)
     return lb, PreBuilder(svc)
+
+
+def bump_asset_version(service, arch_id: str,
+                       new_version: str = "2025.12.2") -> str:
+    """Simulate an upstream weight refresh: re-register the newest weights
+    component of ``arch_id`` under a bumped version (same size, same name).
+    Chunk ids of the shared fraction survive the bump, so a re-deploy
+    fetches only the delta."""
+    name = f"weights-{arch_id}"
+    versions = service.vq("asset", name)     # pulls the upstream if needed
+    latest = versions[-1]
+    for env in service.registry.eq("asset", name, latest):
+        c = service.registry.cq("asset", name, latest, env)
+        service.registry.register(dataclasses.replace(
+            c, version=new_version, context={f"weights.{arch_id}": new_version}))
+    return new_version
 
 
 def seed_host_components(lb: LazyBuilder, spec: SpecSheet) -> None:
@@ -105,10 +129,11 @@ def conventional_for(cir: CIR, lb: LazyBuilder, spec: SpecSheet
 
 
 def lazy_deploy_time(report, bw_bps: float) -> float:
-    """Paper's lazy-build deployment: CIR pull + parallel component fetch
+    """Paper's lazy-build deployment: CIR pull + parallel delta fetch
     overlapped with resolution, then assembly (no install — components are
-    pre-compiled)."""
-    net = (report.bytes_cir + report.bytes_fetched) / bw_bps
+    pre-compiled).  Wire bytes are chunk-delta bytes when the chunk store
+    served the build."""
+    net = (report.bytes_cir + report.bytes_wire_fetched) / bw_bps
     return max(report.resolve_s, net) + report.fetch_s + report.assemble_s
 
 

@@ -3,23 +3,24 @@ vs active, plus the pairwise sharing matrix over the 10-arch suite."""
 from __future__ import annotations
 
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs import ARCHS
 from repro.core import tpu_single_pod
 
-from .common import csv_row, fresh_builder
+from .common import SMOKE_ARCHS as _SMOKE_ARCHS, csv_row, fresh_builder
 
 
-def _suite(entrypoint: str):
+def _suite(entrypoint: str, archs: Optional[Sequence[str]] = None):
     """passive = each app imaged per platform on its own node (10 archs ×
     3 platforms, like the paper's registry of per-platform images); active
     = one deployment node with a shared local store the deployability
     evaluator prefers."""
     from repro.core import cpu_smoke, gpu_server
+    archs = list(archs or ARCHS)
     spec = tpu_single_pod()
     passive, _ = fresh_builder()
-    for arch_id in ARCHS:
+    for arch_id in archs:
         for pspec in (spec, cpu_smoke(), gpu_server()):
             lb, pb = fresh_builder()
             inst = lb.build(
@@ -32,14 +33,15 @@ def _suite(entrypoint: str):
 
     active, pb = fresh_builder()
     fetched = []
-    for arch_id in ARCHS:
+    for arch_id in archs:
         inst = active.build(
             pb.prebuild(ARCHS[arch_id], entrypoint=entrypoint), spec,
             assemble=False)
         fetched.append(inst.report.bytes_fetched)
         active.store.record_build(arch_id, inst.bundle.components())
     return (passive.store.sharing_report(), active.store.sharing_report(),
-            fetched, active.store.pairwise_sharing())
+            fetched, active.store.pairwise_sharing(),
+            active.store.chunk_stats)
 
 
 def _fleet():
@@ -61,21 +63,28 @@ def _fleet():
     return fd, results
 
 
-def run(quiet: bool = False) -> Dict[str, Dict]:
+def run(quiet: bool = False,
+        archs: Optional[Sequence[str]] = None) -> Dict[str, Dict]:
     # env+code suite (the paper's packages story) and serve suite (weights
     # dominate — the worst case for sharing)
-    passive_rep, active_rep, fetched, pairwise = _suite("train")
-    sp, sa, sf, _ = _suite("serve")
+    passive_rep, active_rep, fetched, pairwise, chunk_live = _suite(
+        "train", archs)
+    sp, sa, sf, _, serve_chunk_live = _suite("serve", archs)
     fd, fleet_res = _fleet()
 
     rows = {"passive": passive_rep, "active": active_rep,
             "active_fetched_bytes": fetched,
             "serve_passive": sp, "serve_active": sa,
             "pairwise_avg": sum(pairwise.values()) / max(len(pairwise), 1),
+            "live_chunk_stats": chunk_live.as_dict(),
+            "serve_live_chunk_stats": serve_chunk_live.as_dict(),
             "fleet_sharing_rate": fd.store.stats.sharing_rate,
             "fleet_store_stats": fd.store.stats.as_dict(),
+            "fleet_chunk_stats": fd.store.chunk_stats.as_dict(),
             "fleet_fetched_bytes": {a: r.bytes_fetched_total
                                     for a, r in fleet_res.items()},
+            "fleet_delta_bytes": {a: r.bytes_delta_total
+                                  for a, r in fleet_res.items()},
             "fleet_component_bytes": {a: r.bytes_components_total
                                       for a, r in fleet_res.items()}}
     if not quiet:
@@ -95,11 +104,22 @@ def run(quiet: bool = False) -> Dict[str, Dict]:
               f"builds avg {rest/2**20:.3f} MiB (active reuse)")
         print(f"pairwise component-sharing rate (Fig 10 avg): "
               f"{rows['pairwise_avg']*100:.1f}%")
+        cl = rows["live_chunk_stats"]
+        print(f"live chunk store (active node): "
+              f"{cl['chunks_stored']} chunks stored, "
+              f"{cl['chunks_hit']} hit, delta sharing "
+              f"{cl['delta_sharing_rate']*100:.1f}% on top of components")
         print(f"fleet deploy (1 CIR -> 3 platforms, 3 archs): sharing rate "
               f"{rows['fleet_sharing_rate']*100:.1f}% across the fleet store")
+        fc = rows["fleet_chunk_stats"]
+        print(f"  fleet chunk layer: {fc['chunks_waited']} chunks deduped "
+              f"in flight, delta sharing "
+              f"{fc['delta_sharing_rate']*100:.1f}%")
         for a, b in rows["fleet_fetched_bytes"].items():
             tot = rows["fleet_component_bytes"][a]
-            print(f"  {a:20s} fetched {b/2**20:8.1f} MiB of "
+            wire = rows["fleet_delta_bytes"][a]
+            print(f"  {a:20s} fetched {b/2**20:8.1f} MiB "
+                  f"(wire {wire/2**20:8.1f} MiB) of "
                   f"{tot/2**20:8.1f} MiB referenced")
     return rows
 
@@ -115,8 +135,11 @@ def main() -> List[str]:
         f"component={p['component']['bytes_saved_pct']:.1f}%;"
         f"active={rows['active']['component']['bytes_saved_pct']:.1f}%;"
         f"pairwise={rows['pairwise_avg']*100:.1f}%;"
-        f"fleet={rows['fleet_sharing_rate']*100:.1f}%")]
+        f"fleet={rows['fleet_sharing_rate']*100:.1f}%;"
+        f"fleet_chunk_delta="
+        f"{rows['fleet_chunk_stats']['delta_sharing_rate']*100:.1f}%")]
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+    run(archs=_SMOKE_ARCHS if "--smoke" in sys.argv else None)

@@ -10,8 +10,12 @@ from .resolution import (Resolution, ResolutionError,  # noqa: F401
 from .spec import (CHIPS, CPU_HOST, GPU_A100, TPU_V5E, SpecSheet,  # noqa: F401
                    cpu_smoke, gpu_server, probe_host, tpu_multi_pod,
                    tpu_single_pod)
-from .store import LocalComponentStore, StoreStats  # noqa: F401
+from .store import (Chunk, LocalComponentStore, StoreStats,  # noqa: F401
+                    component_pieces)
+from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
+                         FetchPlan)
 from .cir import CIR, PreBuilder  # noqa: F401
 from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401
-                        ComponentBundle, ContainerInstance, LazyBuilder,
-                        Lockfile, PlanCacheStats, register_payload)
+                        ComponentBundle, ContainerInstance, FetchEngine,
+                        LazyBuilder, Lockfile, PlanCacheStats,
+                        register_payload)

@@ -1,0 +1,344 @@
+"""Chunk-addressed component storage — the live delta-fetch layer.
+
+``LocalComponentStore`` dedups at *component* granularity: a version bump
+re-fetches the whole component even though most of its content is unchanged.
+This module makes the paper's chunk-level sharing (Table 1) the live
+storage/fetch path: every component is split into deterministic content
+chunks (``repro.core.store.component_pieces`` — a stable fraction keyed by
+``(manager, name, index)`` only, identical across versions and environment
+variants), presence is tracked per chunk, and the fetch planner charges only
+the chunks that are neither present nor already in flight.
+
+Concurrency model (what ``FleetDeployer`` relies on):
+
+  * ``plan_fetch`` atomically registers the component and *claims* its
+    missing chunks under the store lock.  A claimed chunk is "in flight":
+    any other build planning the same chunk — even mid-transfer — gets a
+    wait handle instead of a second charge (singleflight dedup).
+  * ``commit_chunks`` marks claimed chunks present and releases waiters.
+  * ``abort_chunks`` releases a failed claim without marking it present, so
+    one build's fetch error never wedges another build's pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from .component import UniformComponent
+from .store import (Chunk, LocalComponentStore, SHARED_PIECE_FRACTION,
+                    component_pieces)
+
+# Live chunk granularity.  The Table-1 *study* granularity is 64 KiB; the
+# live store defaults to 4 MiB (OCI/estargz-scale blob chunking) so that
+# multi-GB weight assets stay at thousands — not millions — of bookkeeping
+# entries per build.
+DEFAULT_CHUNK_SIZE = 4 * 2**20
+
+# A claim is released by commit/abort in the claiming thread; the timeout is
+# only a backstop against a claimer dying without either (e.g. interpreter
+# teardown), so waiters degrade to a free hit instead of deadlocking.
+CLAIM_WAIT_TIMEOUT_S = 60.0
+
+
+@dataclasses.dataclass
+class ChunkStats:
+    """Chunk-level accounting on top of the component-level ``StoreStats``."""
+    chunks_stored: int = 0
+    chunks_hit: int = 0
+    chunks_missed: int = 0
+    chunks_waited: int = 0          # singleflight: in flight elsewhere
+    chunk_bytes_stored: int = 0     # unique chunk bytes committed
+    chunk_bytes_requested: int = 0  # new-component bytes before chunk dedup
+
+    @property
+    def delta_sharing_rate(self) -> float:
+        """Fraction of new-component bytes the chunk layer did NOT transfer —
+        the savings on top of component-level dedup."""
+        if self.chunk_bytes_requested == 0:
+            return 0.0
+        return 1.0 - self.chunk_bytes_stored / self.chunk_bytes_requested
+
+    def as_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["delta_sharing_rate"] = self.delta_sharing_rate
+        return d
+
+
+@dataclasses.dataclass
+class FetchPlan:
+    """The missing-chunk plan for one component of one build.
+
+    ``claimed`` chunks are this build's to fetch (and charge); ``hits`` are
+    already present; ``waits`` are in flight under another build's claim —
+    free for this build, but not yet usable until the event fires.
+    ``barriers`` are the outstanding transfer events of a component-level
+    hit whose first build is still mid-flight: nothing to charge, but the
+    content is not complete until they fire.  ``rescan`` marks a repair
+    re-plan of a digest a previous build left incomplete — accounted as a
+    miss, since it does real transfer work.
+    """
+    component: UniformComponent
+    component_new: bool
+    hits: List[Chunk]
+    claimed: List[Tuple[Chunk, threading.Event]]
+    waits: List[Tuple[Chunk, threading.Event]]
+    barriers: List[threading.Event] = dataclasses.field(default_factory=list)
+    rescan: bool = False
+
+    @property
+    def bytes_hit(self) -> int:
+        return sum(ch.size for ch in self.hits) + \
+            sum(ch.size for ch, _ in self.waits)
+
+    @property
+    def bytes_claimed(self) -> int:
+        return sum(ch.size for ch, _ in self.claimed)
+
+
+class ChunkedComponentStore(LocalComponentStore):
+    """Content-addressed store with live chunk-level delta accounting.
+
+    Component-level semantics (``put`` hit/miss, ``StoreStats``) are
+    unchanged — chunk presence and singleflight claims are layered on, so a
+    version-bumped component is a component-level miss whose *wire* cost is
+    only its unshared chunks.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 chunk_size: int = DEFAULT_CHUNK_SIZE,
+                 shared_fraction: float = SHARED_PIECE_FRACTION):
+        self.chunk_size = chunk_size
+        self.shared_fraction = shared_fraction
+        self._chunk_present: Dict[str, int] = {}          # chunk id -> size
+        self._chunk_inflight: Dict[str, threading.Event] = {}
+        # component digest -> transfer events outstanding for its content,
+        # so a component-level hit can still barrier on a mid-flight fetch
+        self._comp_pending: Dict[str, List[threading.Event]] = {}
+        # digests registered whose fetch aborted: content is incomplete and
+        # the next build of the same digest must re-plan its chunks
+        self._incomplete: Set[str] = set()
+        # path-backed stores persist a component's JSON only once its
+        # content has fully landed — a crash mid-transfer must not reload
+        # as present-with-holes.  digest -> component awaiting persistence.
+        self._unpersisted: Dict[str, UniformComponent] = {}
+        self.chunk_stats = ChunkStats()
+        super().__init__(path)
+        # components reloaded from disk already hold all their chunks;
+        # count them into requested too so delta_sharing_rate stays in
+        # [0, 1) across restarts
+        for c in self._by_digest.values():
+            self.chunk_stats.chunk_bytes_requested += c.size_bytes
+            for ch in self.chunks_of(c):
+                if ch.id not in self._chunk_present:
+                    self._chunk_present[ch.id] = ch.size
+                    self.chunk_stats.chunks_stored += 1
+                    self.chunk_stats.chunk_bytes_stored += ch.size
+
+    def chunks_of(self, c: UniformComponent) -> List[Chunk]:
+        return component_pieces(c, self.chunk_size, self.shared_fraction)
+
+    def _persist(self, c: UniformComponent) -> None:
+        # deferred until the transfer completes (_maybe_persist_locked)
+        self._unpersisted[c.digest()] = c
+
+    def _maybe_persist_locked(self, dg: str) -> None:
+        """Flush a deferred component JSON once nothing is outstanding for
+        its digest and it is not marked incomplete; callers hold _lock."""
+        if dg in self._comp_pending or dg in self._incomplete:
+            return
+        c = self._unpersisted.pop(dg, None)
+        if c is not None:
+            super()._persist(c)
+
+    def has_chunk(self, chunk_id: str) -> bool:
+        with self._lock:
+            return chunk_id in self._chunk_present
+
+    def chunk_count(self) -> int:
+        with self._lock:
+            return len(self._chunk_present)
+
+    # -- fetch protocol -------------------------------------------------------
+    def plan_fetch(self, c: UniformComponent) -> FetchPlan:
+        """Atomically register ``c`` and claim its missing chunks.
+
+        For a component already stored (component-level hit) the plan
+        charges nothing, but carries barrier events if the build that
+        stored it is still transferring — singleflight covers same-digest
+        races too.  For a new component, every chunk is classified hit /
+        claim / wait under one lock acquisition, so two concurrent builds
+        can never both claim (and charge) the same chunk.
+        """
+        dg = c.digest()
+        with self._lock:
+            probably_stored = dg in self._by_digest \
+                and dg not in self._incomplete
+        # chunking is one sha256 per chunk — a pure function of the
+        # component, computed outside the lock so concurrent builds don't
+        # serialize behind a multi-GB asset's hashing.  The warm path
+        # (component already stored) skips it entirely.
+        chunks = None if probably_stored else self.chunks_of(c)
+        with self._lock:
+            new = self._put_locked(c)
+            hits: List[Chunk] = []
+            claimed: List[Tuple[Chunk, threading.Event]] = []
+            waits: List[Tuple[Chunk, threading.Event]] = []
+            barriers: List[threading.Event] = []
+            # an aborted earlier fetch left this digest registered but its
+            # content incomplete: re-plan the chunks like a fresh miss
+            rescan = not new and dg in self._incomplete
+            if rescan:
+                self._incomplete.discard(dg)
+            if new or rescan:
+                if new:
+                    self.chunk_stats.chunk_bytes_requested += c.size_bytes
+                if chunks is None:     # lost the probe race; rare
+                    chunks = self.chunks_of(c)
+                for ch in chunks:
+                    if ch.id in self._chunk_present:
+                        hits.append(ch)
+                        self.chunk_stats.chunks_hit += 1
+                    elif ch.id in self._chunk_inflight:
+                        waits.append((ch, self._chunk_inflight[ch.id]))
+                        self.chunk_stats.chunks_waited += 1
+                    else:
+                        ev = threading.Event()
+                        self._chunk_inflight[ch.id] = ev
+                        claimed.append((ch, ev))
+                        self.chunk_stats.chunks_missed += 1
+                pending = [ev for _ch, ev in claimed] + \
+                    [ev for _ch, ev in waits]
+                if pending:
+                    self._comp_pending[dg] = pending
+                elif self.path:
+                    self._maybe_persist_locked(dg)   # all hits: complete now
+            else:
+                live = [ev for ev in self._comp_pending.get(dg, ())
+                        if not ev.is_set()]
+                if live:
+                    self._comp_pending[dg] = live
+                    barriers = live
+                else:
+                    self._comp_pending.pop(dg, None)
+                    if self.path:
+                        self._maybe_persist_locked(dg)
+            return FetchPlan(component=c, component_new=new, hits=hits,
+                             claimed=claimed, waits=waits, barriers=barriers,
+                             rescan=rescan)
+
+    def commit_chunks(self,
+                      claimed: Sequence[Tuple[Chunk, threading.Event]],
+                      component: Optional[UniformComponent] = None
+                      ) -> None:
+        """Mark fetched chunks present and release their waiters.  With
+        ``component`` given, its pending-event record is pruned once no
+        outstanding transfers remain (bounds the barrier bookkeeping)."""
+        batch = {id(ev) for _ch, ev in claimed}
+        with self._lock:
+            for ch, _ev in claimed:
+                self._chunk_present[ch.id] = ch.size
+                self._chunk_inflight.pop(ch.id, None)
+                self.chunk_stats.chunks_stored += 1
+                self.chunk_stats.chunk_bytes_stored += ch.size
+            if component is not None:
+                dg = component.digest()
+                pend = self._comp_pending.get(dg)
+                if pend is not None:
+                    live = [ev for ev in pend
+                            if not ev.is_set() and id(ev) not in batch]
+                    if live:
+                        self._comp_pending[dg] = live
+                    else:
+                        self._comp_pending.pop(dg, None)
+                if self.path:
+                    self._maybe_persist_locked(dg)
+        for _ch, ev in claimed:
+            ev.set()
+
+    def reclaim_chunks(self, chunks: Sequence[Chunk]
+                       ) -> List[Tuple[Chunk, threading.Event]]:
+        """Re-claim awaited chunks whose original claimer aborted: any of
+        ``chunks`` that is neither present nor back in flight is claimed by
+        the caller (who must fetch + commit it).  The post-wait repair step
+        of the fetch engine — a waiter never completes with a hole another
+        build's failure left behind."""
+        out: List[Tuple[Chunk, threading.Event]] = []
+        with self._lock:
+            for ch in chunks:
+                if ch.id in self._chunk_present or \
+                        ch.id in self._chunk_inflight:
+                    continue
+                ev = threading.Event()
+                self._chunk_inflight[ch.id] = ev
+                out.append((ch, ev))
+                self.chunk_stats.chunks_missed += 1
+        return out
+
+    def mark_incomplete(self, c: UniformComponent) -> None:
+        """Self-heal marker: the caller finished without proof that ``c``'s
+        content fully landed (an awaited transfer aborted or timed out).
+        The next ``plan_fetch`` of this digest re-scans and re-claims any
+        missing chunks — a rescan over complete content costs one chunk
+        walk and claims nothing."""
+        with self._lock:
+            self._incomplete.add(c.digest())
+
+    def reclaim_component(self, c: UniformComponent
+                          ) -> List[Tuple[Chunk, threading.Event]]:
+        """Barrier-side repair: if ``c``'s digest was marked incomplete (the
+        build transferring it aborted), re-claim its missing chunks for the
+        caller to fetch.  Returns an empty list when the content is fine.
+        The marker discard and the re-claims happen under one lock
+        acquisition, so a concurrent plan of the same digest either sees
+        the incomplete marker (and rescans itself) or sees our claims (and
+        waits) — never a clean component with absent chunks."""
+        dg = c.digest()
+        with self._lock:
+            if dg not in self._incomplete:
+                return []
+        chunks = self.chunks_of(c)        # hashing outside the lock
+        out: List[Tuple[Chunk, threading.Event]] = []
+        with self._lock:
+            if dg not in self._incomplete:
+                return []                 # repaired by someone else
+            self._incomplete.discard(dg)
+            for ch in chunks:
+                if ch.id in self._chunk_present or \
+                        ch.id in self._chunk_inflight:
+                    continue
+                ev = threading.Event()
+                self._chunk_inflight[ch.id] = ev
+                out.append((ch, ev))
+                self.chunk_stats.chunks_missed += 1
+        return out
+
+    def abort_chunks(self,
+                     claimed: Sequence[Tuple[Chunk, threading.Event]],
+                     component: Optional[UniformComponent] = None
+                     ) -> None:
+        """Release a failed claim: chunks stay absent, waiters unblock (the
+        chunk costs them nothing either way).  The component — already
+        registered by ``plan_fetch`` — is marked incomplete, so the next
+        build of the same digest re-plans and re-claims its missing chunks
+        instead of trusting the component-level hit."""
+        with self._lock:
+            for ch, _ev in claimed:
+                self._chunk_inflight.pop(ch.id, None)
+            if component is not None:
+                self._incomplete.add(component.digest())
+        for _ch, ev in claimed:
+            ev.set()
+
+    def put(self, c: UniformComponent) -> bool:
+        """Direct ingest (host seeding, offline suites): plan + instant
+        commit, so chunk presence always tracks component presence.  A put
+        racing an in-flight fetch of overlapping content does not block —
+        it marks the digest incomplete instead, and the next plan of it
+        re-verifies once the transfer has settled."""
+        plan = self.plan_fetch(c)
+        if plan.claimed:
+            self.commit_chunks(plan.claimed, component=c)
+        if plan.waits or plan.barriers:
+            self.mark_incomplete(c)
+        return plan.component_new

@@ -4,8 +4,11 @@ The lazy-build is an explicit four-stage pipeline:
 
     resolve  → pick concrete uniform components for the target platform
                (Algorithms 1+2), or REPLAY a cached build plan;
-    fetch    → pull missing components against the local store
-               (component-level *active sharing*);
+    fetch    → pull missing content against the local store.  With the
+               default ``ChunkedComponentStore`` this is a *delta* fetch:
+               a missing-chunk plan per component, executed by a bounded
+               thread-pool ``FetchEngine`` with singleflight dedup and
+               priority ordering (model/runtime first, weight tail last);
     assemble → overlay components into the model + entrypoint callables
                (the OverlayFS-mount analogue);
     compile  → stage the step entrypoints for the target mesh (jit).
@@ -26,9 +29,11 @@ import json
 import os
 import threading
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .cir import CIR
+from .chunkstore import CLAIM_WAIT_TIMEOUT_S, ChunkedComponentStore, FetchPlan
 from .component import DependencyItem, UniformComponent
 from .registry import RegistryError, UniformComponentService
 from .resolution import (Resolution, ResolutionError, resolution_from_pins,
@@ -243,10 +248,10 @@ class BuildReport:
     cir_name: str
     platform_id: str
     resolve_s: float = 0.0
-    fetch_s: float = 0.0            # compute time spent in fetch bookkeeping
+    fetch_s: float = 0.0            # wall time of the (pipelined) fetch stage
     assemble_s: float = 0.0
     bytes_cir: int = 0
-    bytes_fetched: int = 0          # network bytes for missing components
+    bytes_fetched: int = 0          # component-level bytes of missed components
     bytes_total_components: int = 0
     cache_hits: int = 0
     cache_misses: int = 0
@@ -256,10 +261,26 @@ class BuildReport:
     plan_cache_hit: bool = False    # resolution skipped via build-plan cache
     compile_s: float = 0.0
     n_compiled: int = 0
+    # -- chunk-level delta-fetch columns (ChunkedComponentStore path) -------
+    chunked_fetch: bool = False     # fetch ran through the chunk planner
+    bytes_delta_fetched: int = 0    # wire bytes: missing chunks only
+    chunks_hit: int = 0             # chunks already present locally
+    chunks_missed: int = 0          # chunks this build fetched (and paid for)
+    chunks_waited: int = 0          # chunks in flight under another build
+    fetch_concurrency: int = 1      # thread-pool width the engine used
+    fetch_serial_s: float = 0.0     # sum of per-task fetch times (no overlap)
+    fetch_wait_timeouts: int = 0    # in-flight waits that hit the backstop
+
+    @property
+    def bytes_wire_fetched(self) -> int:
+        """Bytes that actually cross the link: the chunk delta when chunk
+        accounting ran, the full missed-component bytes otherwise."""
+        return self.bytes_delta_fetched if self.chunked_fetch \
+            else self.bytes_fetched
 
     def network_time(self, bandwidth_bps: float) -> float:
-        """Simulated link time: CIR pull + parallel component fetch."""
-        return (self.bytes_cir + self.bytes_fetched) * 8.0 / bandwidth_bps
+        """Simulated link time: CIR pull + parallel delta fetch."""
+        return (self.bytes_cir + self.bytes_wire_fetched) * 8.0 / bandwidth_bps
 
     def lazy_build_time(self, bandwidth_bps: float) -> float:
         # resolution overlaps fetch in the real system (paper §4.3 converters
@@ -268,7 +289,194 @@ class BuildReport:
             + self.fetch_s + self.assemble_s + self.compile_s
 
     def as_dict(self) -> Dict[str, Any]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["bytes_wire_fetched"] = self.bytes_wire_fetched
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Fetch engine (stage 2): planner + bounded-concurrency executor
+# ---------------------------------------------------------------------------
+
+# Assembly needs the model family and runtime step builders first; kernels
+# and plans next; the platform env is usually host-seeded; the weight tail
+# (assets) lands last so assemble can start before it finishes.
+_FETCH_PRIORITY = {"model": 0, "runtime": 0, "kernel": 1, "parallel": 1,
+                   "opt": 2, "data": 2, "env": 3, "asset": 4}
+
+
+def _partition(items: Sequence, n: int) -> List[List]:
+    """Split ``items`` into at most ``n`` contiguous, near-equal groups."""
+    n = max(1, min(n, len(items)))
+    k, m = divmod(len(items), n)
+    out, i = [], 0
+    for j in range(n):
+        step = k + (1 if j < m else 0)
+        if step:
+            out.append(list(items[i:i + step]))
+            i += step
+    return out
+
+
+class FetchEngine:
+    """Concurrent, pipelined fetch executor for the lazy-builder.
+
+    Against a ``ChunkedComponentStore`` it plans a missing-chunk delta per
+    component (priority order), stripes each component's claimed chunks
+    across a bounded thread pool (range-parallel blob pulls), charges only
+    delta bytes through ``service.fetch_chunks``, and finally waits on
+    chunks other builds have in flight — the singleflight guarantee that a
+    fleet never fetches the same chunk twice, even mid-transfer.
+
+    ``simulate_bps`` optionally sleeps each stripe for ``bytes / bps`` so
+    benchmarks can observe real wall-clock overlap; accounting is identical
+    with or without it.  Plain ``LocalComponentStore``s keep the legacy
+    serial whole-component path.
+    """
+
+    def __init__(self, store: LocalComponentStore,
+                 service: UniformComponentService,
+                 max_workers: int = 8,
+                 simulate_bps: Optional[float] = None):
+        self.store = store
+        self.service = service
+        self.max_workers = max(1, max_workers)
+        self.simulate_bps = simulate_bps
+
+    def fetch(self, comps: Sequence[UniformComponent],
+              report: BuildReport) -> None:
+        t0 = time.perf_counter()
+        order = sorted(range(len(comps)),
+                       key=lambda i: (_FETCH_PRIORITY.get(comps[i].manager, 3),
+                                      i))
+        ordered = [comps[i] for i in order]
+        if isinstance(self.store, ChunkedComponentStore):
+            self._fetch_chunked(ordered, report)
+        else:
+            self._fetch_serial(ordered, report)
+        report.fetch_s = time.perf_counter() - t0
+
+    # -- legacy component-granularity path --------------------------------
+    def _fetch_serial(self, comps: Sequence[UniformComponent],
+                      report: BuildReport) -> None:
+        for c in comps:
+            report.bytes_total_components += c.size_bytes
+            t = time.perf_counter()
+            # put() decides hit-vs-miss under the store lock, so concurrent
+            # builds charge each component's bytes exactly once.
+            if self.store.put(c):
+                self.service.fetch(c)
+                report.bytes_fetched += c.size_bytes
+                report.cache_misses += 1
+            else:
+                report.cache_hits += 1
+            report.fetch_serial_s += time.perf_counter() - t
+
+    # -- chunk-delta path -------------------------------------------------
+    def _fetch_chunked(self, comps: Sequence[UniformComponent],
+                       report: BuildReport) -> None:
+        report.chunked_fetch = True
+        plans: List[FetchPlan] = []
+        for c in comps:
+            report.bytes_total_components += c.size_bytes
+            plan = self.store.plan_fetch(c)
+            if plan.component_new or plan.rescan:
+                # a rescan repairs content an aborted build left behind:
+                # it does real transfer work, so it counts as a miss (and
+                # keeps bytes_delta_fetched <= bytes_fetched)
+                report.cache_misses += 1
+                report.bytes_fetched += c.size_bytes
+            else:
+                report.cache_hits += 1
+            report.chunks_hit += len(plan.hits)
+            report.chunks_waited += len(plan.waits)
+            plans.append(plan)
+
+        width = max(1, min(self.max_workers,
+                           sum(len(p.claimed) for p in plans)))
+        report.fetch_concurrency = width
+        # stripe each component's claim across the pool, in priority order
+        tasks: List[Tuple[UniformComponent, List]] = []
+        for plan in plans:
+            for stripe in _partition(plan.claimed, width):
+                tasks.append((plan.component, stripe))
+
+        def pull(c: UniformComponent, stripe: List) -> Tuple[int, int, float]:
+            t = time.perf_counter()
+            nbytes = sum(ch.size for ch, _ev in stripe)
+            try:
+                if self.simulate_bps:
+                    time.sleep(nbytes / self.simulate_bps)
+                self.service.fetch_chunks(c, nbytes, len(stripe))
+                self.store.commit_chunks(stripe, component=c)
+            except BaseException:
+                self.store.abort_chunks(stripe, component=c)
+                raise
+            return nbytes, len(stripe), time.perf_counter() - t
+
+        if width == 1 or len(tasks) <= 1:
+            results = []
+            for i, (c, stripe) in enumerate(tasks):
+                try:
+                    results.append(pull(c, stripe))
+                except BaseException:
+                    # release the never-executed stripes' claims too, or
+                    # sibling builds block on events that can't fire
+                    for c2, s2 in tasks[i + 1:]:
+                        self.store.abort_chunks(s2, component=c2)
+                    raise
+        else:
+            # Executor.map submits every task eagerly, so each stripe runs
+            # pull() and aborts its own claim on failure
+            with ThreadPoolExecutor(max_workers=width) as pool:
+                results = list(pool.map(lambda t: pull(*t), tasks))
+        for nbytes, nchunks, dt in results:
+            report.bytes_delta_fetched += nbytes
+            report.chunks_missed += nchunks
+            report.fetch_serial_s += dt
+        # pipeline barrier: content another build is still pulling — both
+        # chunk-level waits and same-digest component hits mid-transfer.
+        # One shared deadline across every event, scaled to the awaited
+        # bytes when transfers are simulated (a legitimate slow-link stripe
+        # must not be declared dead); the fixed floor only guards against a
+        # claimer that died without commit/abort.
+        awaited_bytes = sum(ch.size for p in plans for ch, _ev in p.waits) \
+            + sum(p.component.size_bytes for p in plans if p.barriers)
+        budget = CLAIM_WAIT_TIMEOUT_S
+        if self.simulate_bps:
+            budget += 2.0 * awaited_bytes / self.simulate_bps
+        deadline = time.monotonic() + budget
+        timed_out: set = set()
+        for plan in plans:
+            for ev in [ev for _ch, ev in plan.waits] + plan.barriers:
+                if not ev.wait(max(0.0, deadline - time.monotonic())):
+                    report.fetch_wait_timeouts += 1
+                    timed_out.add(id(plan))
+        # post-wait repair: if content we waited on was aborted by its
+        # claimer — a chunk-level wait or a whole component barrier — we
+        # re-claim and fetch it ourselves: a waiter must never finish with
+        # a hole another build's failure left behind.  Anything we cannot
+        # prove complete (still in flight under a third build, or a timed-
+        # out barrier) marks OUR digest incomplete, so the next build of it
+        # re-verifies — no permanent present-with-holes state.
+        for plan in plans:
+            if plan.waits:
+                orphans = self.store.reclaim_chunks([ch for ch, _ev
+                                                     in plan.waits])
+            elif plan.barriers:
+                orphans = self.store.reclaim_component(plan.component)
+            else:
+                continue
+            if orphans:
+                report.bytes_delta_fetched += \
+                    sum(ch.size for ch, _ev in orphans)
+                report.chunks_missed += len(orphans)
+                pull(plan.component, orphans)
+            holey = any(not self.store.has_chunk(ch.id)
+                        for ch, _ev in plan.waits) or \
+                (plan.barriers and id(plan) in timed_out)
+            if holey:
+                self.store.mark_incomplete(plan.component)
 
 
 # ---------------------------------------------------------------------------
@@ -313,11 +521,16 @@ class LazyBuilder:
     def __init__(self, service: UniformComponentService,
                  store: Optional[LocalComponentStore] = None,
                  link_bandwidth_bps: float = 500e6,
-                 plan_cache: Optional[BuildPlanCache] = None):
+                 plan_cache: Optional[BuildPlanCache] = None,
+                 fetch_workers: int = 8,
+                 fetch_simulate_bps: Optional[float] = None):
         self.service = service
-        self.store = store or LocalComponentStore()
+        self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
         self.plan_cache = BuildPlanCache() if plan_cache is None else plan_cache
+        self.fetch_engine = FetchEngine(self.store, service,
+                                        max_workers=fetch_workers,
+                                        simulate_bps=fetch_simulate_bps)
 
     # -- stage 1: resolve (or replay a cached plan) ---------------------
     def _stage_resolve(self, cir: CIR, spec: SpecSheet,
@@ -363,22 +576,10 @@ class LazyBuilder:
         report.n_components = len(resolution.components)
         return resolution, plan
 
-    # -- stage 2: fetch (component-level active sharing) ----------------
+    # -- stage 2: fetch (chunk-level delta + active sharing) ------------
     def _stage_fetch(self, comps: Sequence[UniformComponent],
                      report: BuildReport) -> None:
-        t0 = time.perf_counter()
-        for c in comps:
-            report.bytes_total_components += c.size_bytes
-            # put() decides hit-vs-miss under the store lock, so concurrent
-            # builds (FleetDeployer) charge each component's bytes exactly
-            # once — a has()-then-put() probe would double-count races.
-            if self.store.put(c):
-                self.service.fetch(c)
-                report.bytes_fetched += c.size_bytes
-                report.cache_misses += 1
-            else:
-                report.cache_hits += 1
-        report.fetch_s = time.perf_counter() - t0
+        self.fetch_engine.fetch(comps, report)
 
     # -- stage 3: assemble ----------------------------------------------
     def _stage_assemble(self, cir: CIR, spec: SpecSheet,

@@ -16,7 +16,8 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+from typing import (Callable, Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Set, Tuple)
 
 from .component import (DependencyItem, Requirement, UniformComponent,
                         Version, component_sort_key)
@@ -79,44 +80,55 @@ class UniformComponentRegistry:
             self.register(c)
 
     # -- the three queries ----------------------------------------------------
+    # reads snapshot under the lock: upstream pulls register components
+    # concurrently with sibling fleet builds' resolutions
     def vq(self, manager: str, name: str) -> List[str]:
-        vs = self._by_mn.get((manager, name), {})
-        return sorted(vs.keys(), key=Version.parse)
+        with self._lock:
+            keys = list(self._by_mn.get((manager, name), {}).keys())
+        return sorted(keys, key=Version.parse)
 
     def eq(self, manager: str, name: str, version: str) -> List[str]:
-        vs = self._by_mn.get((manager, name), {})
-        return sorted(vs.get(version, {}).keys())
+        with self._lock:
+            vs = self._by_mn.get((manager, name), {})
+            return sorted(vs.get(version, {}).keys())
 
     def cq(self, manager: str, name: str, version: str, env: str
            ) -> UniformComponent:
-        try:
-            return self._by_mn[(manager, name)][version][env]
-        except KeyError:
-            raise RegistryError(
-                f"no component {manager}:{name}=={version}@{env}") from None
+        with self._lock:
+            try:
+                return self._by_mn[(manager, name)][version][env]
+            except KeyError:
+                pass
+        raise RegistryError(
+            f"no component {manager}:{name}=={version}@{env}")
 
     # -- bulk views ------------------------------------------------------------
     def candidates(self, manager: str, name: str, version: str
                    ) -> List[UniformComponent]:
-        vs = self._by_mn.get((manager, name), {})
-        return sorted(vs.get(version, {}).values(), key=component_sort_key)
+        with self._lock:
+            vs = self._by_mn.get((manager, name), {})
+            cands = list(vs.get(version, {}).values())
+        return sorted(cands, key=component_sort_key)
 
     def all_components(self) -> List[UniformComponent]:
         out: List[UniformComponent] = []
-        for vs in self._by_mn.values():
-            for es in vs.values():
-                out.extend(es.values())
+        with self._lock:
+            for vs in self._by_mn.values():
+                for es in vs.values():
+                    out.extend(es.values())
         return out
 
     def names(self, manager: Optional[str] = None) -> List[Tuple[str, str]]:
-        keys = list(self._by_mn.keys())
+        with self._lock:
+            keys = list(self._by_mn.keys())
         if manager is not None:
             keys = [k for k in keys if k[0] == manager]
         return sorted(keys)
 
     def __len__(self) -> int:
-        return sum(len(es) for vs in self._by_mn.values()
-                   for es in vs.values())
+        with self._lock:
+            return sum(len(es) for vs in self._by_mn.values()
+                       for es in vs.values())
 
     # -- persistence ------------------------------------------------------------
     def dump(self, path: Optional[str] = None) -> None:
@@ -144,6 +156,12 @@ class UpstreamSource:
 
     ``lister``  : () -> iterable of raw entries
     ``converter``: raw entry -> [UniformComponent]  (the paper's converter)
+
+    The full ``lister()`` + ``converter()`` sweep is the expensive part of a
+    registry miss, so its output is indexed per ``(manager, name)`` on first
+    use: later lookups — including negative ones (a name this source simply
+    does not carry) — are answered from the index without re-scanning.
+    ``invalidate()`` drops the index when upstream content changes.
     """
 
     def __init__(self, name: str,
@@ -152,21 +170,38 @@ class UpstreamSource:
         self.name = name
         self.lister = lister
         self.converter = converter
+        self._index: Optional[Dict[Tuple[str, str],
+                                   List[UniformComponent]]] = None
+        self._lock = threading.Lock()
+        self.scans = 0              # full lister+converter sweeps performed
+        self.index_hits = 0         # lookups answered without a sweep
+
+    def _indexed(self) -> Dict[Tuple[str, str], List[UniformComponent]]:
+        """Build (once) the per-(M, n) converted index; callers hold _lock."""
+        if self._index is None:
+            self.scans += 1
+            idx: Dict[Tuple[str, str], List[UniformComponent]] = {}
+            for raw in self.lister():
+                for c in self.converter(raw):
+                    idx.setdefault((c.manager, c.name), []).append(c)
+            self._index = idx
+        else:
+            self.index_hits += 1
+        return self._index
+
+    def invalidate(self) -> None:
+        with self._lock:
+            self._index = None
 
     def convert_all(self) -> List[UniformComponent]:
-        out: List[UniformComponent] = []
-        for raw in self.lister():
-            out.extend(self.converter(raw))
-        return out
+        with self._lock:
+            idx = self._indexed()
+            return [c for comps in idx.values() for c in comps]
 
     def convert_matching(self, manager: str, name: str
                          ) -> List[UniformComponent]:
-        out: List[UniformComponent] = []
-        for raw in self.lister():
-            for c in self.converter(raw):
-                if c.manager == manager and c.name == name:
-                    out.append(c)
-        return out
+        with self._lock:
+            return list(self._indexed().get((manager, name), ()))
 
 
 class UniformComponentService:
@@ -183,7 +218,14 @@ class UniformComponentService:
         self.upstreams = list(upstreams)
         self.bytes_served = 0
         self.requests = 0
+        self.chunk_requests = 0
         self.conversions = 0
+        # repeated registry misses for the same unknown (M, n) are answered
+        # from this negative cache instead of re-consulting every upstream
+        self._upstream_negative: Set[Tuple[str, str]] = set()
+        self._upstream_lock = threading.Lock()
+        self.upstream_rescans_avoided = 0   # lookups served from an index
+        self.upstream_negative_hits = 0     # pulls skipped via negative cache
 
     @property
     def catalog_epoch(self) -> str:
@@ -219,15 +261,48 @@ class UniformComponentService:
         return self.registry.candidates(manager, name, version)
 
     def fetch(self, c: UniformComponent) -> UniformComponent:
-        """'Download' a component: account its bytes."""
+        """'Download' a whole component: account its bytes."""
         self.requests += 1
         self.bytes_served += c.size_bytes
         return c
 
+    def fetch_chunks(self, c: UniformComponent, nbytes: int,
+                     nchunks: int = 1) -> UniformComponent:
+        """'Download' a chunk range of a component: account delta bytes only
+        (the chunk-addressed fetch path — paper Table 1 made live)."""
+        self.requests += 1
+        self.chunk_requests += nchunks
+        self.bytes_served += nbytes
+        return c
+
+    def invalidate_upstreams(self) -> None:
+        """Upstream content changed: drop every source's converted index AND
+        this service's negative cache, so names that newly appeared upstream
+        become resolvable again."""
+        with self._upstream_lock:
+            for up in self.upstreams:
+                up.invalidate()
+            self._upstream_negative.clear()
+
     def _pull_upstream(self, manager: str, name: str) -> None:
+        # the service lock guards only the negative cache + counters; the
+        # sweep itself is singleflighted per source (UpstreamSource._lock),
+        # so misses for unrelated names don't serialize behind each other
+        key = (manager, name)
+        with self._upstream_lock:
+            if key in self._upstream_negative:
+                self.upstream_negative_hits += 1
+                return
         for up in self.upstreams:
+            scans_before = up.scans
             converted = up.convert_matching(manager, name)
+            with self._upstream_lock:
+                if up.scans == scans_before:
+                    self.upstream_rescans_avoided += 1
+                if converted:
+                    self.conversions += len(converted)
             if converted:
-                self.conversions += len(converted)
                 self.registry.register_all(converted)
                 return
+        with self._upstream_lock:
+            self._upstream_negative.add(key)

@@ -5,17 +5,76 @@ stored once by digest; builds reference them.  Weight assets carry *virtual*
 bytes (accounted, not materialized) so multi-GB suites remain cheap offline.
 The granularity study of Table 1 (layer/file/chunk/component × passive/active)
 is reproduced by deterministic accounting transforms over the same builds.
+
+The deterministic piece model (``component_pieces``) is shared with the *live*
+chunk-addressed store (``repro.core.chunkstore``): a stable fraction of every
+component's chunks is keyed by ``(manager, name, index)`` only — identical
+across versions and environment variants of the same component — so a
+version-bumped re-deploy pays only the unshared delta.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
 import json
+import math
 import os
 import threading
 from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
 
 from .component import UniformComponent
+
+# Fraction of a component's pieces whose identity is stable across versions
+# and env variants of the same (manager, name) — the paper's Table 1 partial
+# file-overlap model.  Pieces [0, int(n * SHARED_PIECE_FRACTION)) are shared.
+SHARED_PIECE_FRACTION = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class Chunk:
+    """One deterministic content piece of a component."""
+    id: str
+    index: int
+    size: int
+    shared: bool      # keyed by (manager, name) — survives version bumps
+
+
+def piece_digest(parts: Iterable[str]) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        b = p.encode()
+        # length-prefixed join: ('foo1', '2') must never collide with
+        # ('foo', '12') — these ids are live chunk-presence keys
+        h.update(len(b).to_bytes(4, "big"))
+        h.update(b)
+    return h.hexdigest()
+
+
+def component_pieces(c: UniformComponent, piece_size: int,
+                     shared_fraction: float = SHARED_PIECE_FRACTION
+                     ) -> List[Chunk]:
+    """Split a component into deterministic content chunks.
+
+    Ceil partitioning: chunk sizes sum to exactly ``c.size_bytes``, so live
+    byte accounting is exact.  Pieces ``[0, int(n * shared_fraction))`` are
+    keyed by ``(manager, name, index, piece_size)`` — identical across
+    versions/envs of the same component; the rest are keyed by the component
+    digest.  ``int(n * f) < n`` for ``f < 1``, so the (possibly short) tail
+    chunk is never shared and every shared chunk id maps to one size.
+    """
+    size = max(0, c.size_bytes)
+    n = max(1, math.ceil(size / piece_size))
+    shared_n = int(n * shared_fraction)
+    dg = c.digest()
+    out: List[Chunk] = []
+    for i in range(n):
+        if i < shared_n:
+            cid = piece_digest([c.manager, c.name, str(i), str(piece_size)])
+        else:
+            cid = piece_digest([dg, str(i), str(piece_size)])
+        sz = max(0, min(piece_size, size - i * piece_size))
+        out.append(Chunk(id=cid, index=i, size=sz, shared=i < shared_n))
+    return out
 
 
 @dataclasses.dataclass
@@ -25,6 +84,7 @@ class StoreStats:
     misses: int = 0
     bytes_stored: int = 0          # unique bytes after dedup
     bytes_requested: int = 0       # bytes that would exist without sharing
+    corrupt_skipped: int = 0       # torn/corrupt on-disk entries ignored
 
     @property
     def sharing_rate(self) -> float:
@@ -39,45 +99,64 @@ class StoreStats:
 
 
 class LocalComponentStore:
-    """Content-addressed store: digest -> component metadata (+virtual bytes)."""
+    """Content-addressed store: digest -> component metadata (+virtual bytes).
+
+    Thread-safe: every read of ``_by_digest`` / ``_builds`` snapshots or
+    checks under the lock, so concurrent ``FleetDeployer`` builds can freely
+    interleave ``put()`` with ``digests()`` / ``get()`` / report calls.
+    """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._by_digest: Dict[str, UniformComponent] = {}
         self.stats = StoreStats()
         self._builds: Dict[str, List[str]] = {}   # build id -> digests
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         if path:
             os.makedirs(path, exist_ok=True)
             self._load()
 
     # -- cache protocol -------------------------------------------------------
     def has(self, c: UniformComponent) -> bool:
-        return c.digest() in self._by_digest
+        dg = c.digest()
+        with self._lock:
+            return dg in self._by_digest
 
     def digests(self) -> Set[str]:
-        return set(self._by_digest.keys())
+        with self._lock:
+            return set(self._by_digest.keys())
 
     def get(self, digest: str) -> UniformComponent:
-        return self._by_digest[digest]
+        with self._lock:
+            return self._by_digest[digest]
 
     def put(self, c: UniformComponent) -> bool:
         """Returns True if the component was newly stored (a miss)."""
-        dg = c.digest()
         with self._lock:
-            self.stats.bytes_requested += c.size_bytes
-            if dg in self._by_digest:
-                self.stats.hits += 1
-                return False
-            self._by_digest[dg] = c
-            self.stats.puts += 1
-            self.stats.misses += 1
-            self.stats.bytes_stored += c.size_bytes
-            if self.path:
-                fn = os.path.join(self.path, dg + ".json")
-                with open(fn, "w") as f:
-                    json.dump(c.to_json(), f)
-            return True
+            return self._put_locked(c)
+
+    def _put_locked(self, c: UniformComponent) -> bool:
+        """Registration body; callers hold ``self._lock`` (it is an RLock, so
+        subclasses may compose this with their own locked bookkeeping)."""
+        dg = c.digest()
+        self.stats.bytes_requested += c.size_bytes
+        if dg in self._by_digest:
+            self.stats.hits += 1
+            return False
+        self._by_digest[dg] = c
+        self.stats.puts += 1
+        self.stats.misses += 1
+        self.stats.bytes_stored += c.size_bytes
+        if self.path:
+            self._persist(c)
+        return True
+
+    def _persist(self, c: UniformComponent) -> None:
+        """Write one component's JSON; subclasses may defer (the chunk
+        store persists only once the content has fully landed)."""
+        fn = os.path.join(self.path, c.digest() + ".json")
+        with open(fn, "w") as f:
+            json.dump(c.to_json(), f)
 
     def record_build(self, build_id: str,
                      comps: Sequence[UniformComponent]) -> None:
@@ -85,14 +164,26 @@ class LocalComponentStore:
             self._builds[build_id] = [c.digest() for c in comps]
 
     def _load(self) -> None:
-        for fn in os.listdir(self.path):
-            if fn.endswith(".json"):
+        for fn in sorted(os.listdir(self.path)):
+            if not fn.endswith(".json"):
+                continue
+            try:
                 with open(os.path.join(self.path, fn)) as f:
                     c = UniformComponent.from_json(json.load(f))
-                self._by_digest[c.digest()] = c
-                self.stats.bytes_stored += c.size_bytes
+            except (OSError, ValueError, KeyError, TypeError):
+                # a torn/corrupt entry is skipped (and counted), not fatal —
+                # the component will simply be re-fetched and re-written
+                self.stats.corrupt_skipped += 1
+                continue
+            self._by_digest[c.digest()] = c
+            self.stats.bytes_stored += c.size_bytes
 
     # -- sharing-granularity accounting (Table 1 analogue) ---------------------
+    def _snapshot(self) -> Tuple[Dict[str, UniformComponent],
+                                 List[Tuple[str, List[str]]]]:
+        with self._lock:
+            return dict(self._by_digest), list(self._builds.items())
+
     def sharing_report(self) -> Dict[str, Dict[str, float]]:
         """Before/after storage + object counts at four granularities.
 
@@ -102,21 +193,15 @@ class LocalComponentStore:
         chunk  : fixed 64 KiB content chunks.
         component : our native granularity (digest-level dedup).
         """
-        builds = list(self._builds.items())
+        by_digest, builds = self._snapshot()
         report: Dict[str, Dict[str, float]] = {}
-
-        def digest_of(parts: Iterable[str]) -> str:
-            h = hashlib.sha256()
-            for p in parts:
-                h.update(p.encode())
-            return h.hexdigest()
 
         # --- component level
         before_b = before_o = 0
         uniq: Dict[str, int] = {}
         for _bid, dgs in builds:
             for dg in dgs:
-                c = self._by_digest[dg]
+                c = by_digest[dg]
                 before_b += c.size_bytes
                 before_o += 1
                 uniq[dg] = c.size_bytes
@@ -131,11 +216,11 @@ class LocalComponentStore:
         for _bid, dgs in builds:
             groups: Dict[str, List[str]] = {}
             for dg in dgs:
-                c = self._by_digest[dg]
+                c = by_digest[dg]
                 groups.setdefault(c.manager, []).append(dg)
             for mgr, group in sorted(groups.items()):
-                size = sum(self._by_digest[d].size_bytes for d in group)
-                ld = digest_of(sorted(group))
+                size = sum(by_digest[d].size_bytes for d in group)
+                ld = piece_digest(sorted(group))
                 before_b += size
                 before_o += 1
                 layer_uniq[ld] = size
@@ -143,29 +228,17 @@ class LocalComponentStore:
             before_bytes=before_b, after_bytes=sum(layer_uniq.values()),
             before_objects=before_o, after_objects=len(layer_uniq))
 
-        # --- file / chunk level: split each component deterministically; a
-        # fraction of pieces is content-identical across *versions* of the
-        # same (manager, name) — modelling partial file overlap.
+        # --- file / chunk level: the same deterministic piece model the live
+        # chunk store uses (component_pieces) at two study granularities.
         for gran, piece in (("file", 256 * 1024), ("chunk", 64 * 1024)):
             before_b = before_o = 0
             piece_uniq: Dict[str, int] = {}
             for _bid, dgs in builds:
                 for dg in dgs:
-                    c = self._by_digest[dg]
-                    n = max(1, c.size_bytes // piece)
-                    # stable share: pieces [0, shared) keyed by (M, n) only —
-                    # identical across versions/envs; the rest keyed by digest.
-                    shared = int(n * 0.3)
-                    for i in range(n):
-                        if i < shared:
-                            pid = digest_of([c.manager, c.name, str(i), str(piece)])
-                        else:
-                            pid = digest_of([dg, str(i), str(piece)])
-                        sz = min(piece, c.size_bytes - i * piece) if c.size_bytes else 0
-                        sz = max(sz, 0)
-                        before_b += sz
+                    for ch in component_pieces(by_digest[dg], piece):
+                        before_b += ch.size
                         before_o += 1
-                        piece_uniq[pid] = sz
+                        piece_uniq[ch.id] = ch.size
             report[gran] = dict(
                 before_bytes=before_b, after_bytes=sum(piece_uniq.values()),
                 before_objects=before_o, after_objects=len(piece_uniq))
@@ -179,12 +252,12 @@ class LocalComponentStore:
 
     def pairwise_sharing(self) -> Dict[Tuple[str, str], float]:
         """Fig 10 analogue: pairwise component-sharing rate between builds."""
+        by_digest, builds = self._snapshot()
         out: Dict[Tuple[str, str], float] = {}
-        items = list(self._builds.items())
-        for i, (a, da) in enumerate(items):
-            for b, db in items[i + 1:]:
+        for i, (a, da) in enumerate(builds):
+            for b, db in builds[i + 1:]:
                 sa, sb = set(da), set(db)
-                union_bytes = sum(self._by_digest[d].size_bytes for d in sa | sb)
-                inter_bytes = sum(self._by_digest[d].size_bytes for d in sa & sb)
+                union_bytes = sum(by_digest[d].size_bytes for d in sa | sb)
+                inter_bytes = sum(by_digest[d].size_bytes for d in sa & sb)
                 out[(a, b)] = inter_bytes / union_bytes if union_bytes else 0.0
         return out

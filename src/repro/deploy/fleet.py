@@ -20,6 +20,7 @@ import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
+from ..core.chunkstore import ChunkedComponentStore
 from ..core.cir import CIR
 from ..core.lazybuild import (BuildPlanCache, ContainerInstance, LazyBuilder)
 from ..core.registry import UniformComponentService
@@ -45,10 +46,18 @@ class FleetResult:
     cir_name: str
     deployments: List[PlatformDeployment]
     wall_s: float
-    bytes_fetched_total: int          # network bytes across the whole fleet
+    bytes_fetched_total: int          # component-level bytes of fleet misses
     bytes_components_total: int       # what N independent nodes would pull
     sharing_rate: float               # store dedup over THIS deploy's puts
     plan_cache_hits: int
+    # -- chunk-level delta-fetch columns --------------------------------
+    bytes_delta_total: int = 0        # wire bytes: missing chunks only
+    chunks_hit_total: int = 0
+    chunks_missed_total: int = 0
+    chunks_waited_total: int = 0      # singleflight: in flight elsewhere
+    fetch_serial_s_total: float = 0.0  # sum of per-task fetch times
+    fetch_s_wall: float = 0.0         # slowest build's fetch wall time
+    fetch_concurrency: int = 1
 
     @property
     def ok(self) -> bool:
@@ -67,12 +76,21 @@ class FleetResult:
                  f"{len(self.deployments)} platforms, "
                  f"sharing rate {self.sharing_rate * 100:.1f}%, "
                  f"{self.plan_cache_hits} plan-cache hits"]
+        if self.chunks_hit_total or self.chunks_missed_total:
+            lines.append(
+                f"  chunk delta: {self.bytes_delta_total / 2**20:.1f} MiB "
+                f"on the wire ({self.chunks_missed_total} chunks fetched, "
+                f"{self.chunks_hit_total} hit, "
+                f"{self.chunks_waited_total} deduped in flight), "
+                f"fetch {self.fetch_s_wall * 1e3:.1f} ms wall vs "
+                f"{self.fetch_serial_s_total * 1e3:.1f} ms serial "
+                f"@ width {self.fetch_concurrency}")
         for d in self.deployments:
             if d.ok:
                 rep = d.instance.report
                 lines.append(
                     f"  {d.platform_id:20s} fetched "
-                    f"{rep.bytes_fetched / 2**20:8.1f} MiB "
+                    f"{rep.bytes_wire_fetched / 2**20:8.1f} MiB "
                     f"({'plan-replay' if rep.plan_cache_hit else 'resolved'})")
             else:
                 lines.append(f"  {d.platform_id:20s} FAILED: {d.error}")
@@ -93,12 +111,16 @@ class FleetDeployer:
                  store: Optional[LocalComponentStore] = None,
                  plan_cache: Optional[BuildPlanCache] = None,
                  link_bandwidth_bps: float = 500e6,
-                 max_workers: int = 8):
-        self.store = store or LocalComponentStore()
+                 max_workers: int = 8,
+                 fetch_workers: int = 8,
+                 fetch_simulate_bps: Optional[float] = None):
+        self.store = store if store is not None else ChunkedComponentStore()
         self.plan_cache = plan_cache or BuildPlanCache()
         self.builder = LazyBuilder(service, self.store,
                                    link_bandwidth_bps=link_bandwidth_bps,
-                                   plan_cache=self.plan_cache)
+                                   plan_cache=self.plan_cache,
+                                   fetch_workers=fetch_workers,
+                                   fetch_simulate_bps=fetch_simulate_bps)
         self.max_workers = max_workers
 
     # ------------------------------------------------------------------
@@ -133,10 +155,9 @@ class FleetDeployer:
             with ThreadPoolExecutor(max_workers=workers) as pool:
                 deployments = list(pool.map(one, specs))
 
-        fetched = sum(d.instance.report.bytes_fetched
-                      for d in deployments if d.ok)
-        total = sum(d.instance.report.bytes_total_components
-                    for d in deployments if d.ok)
+        reports = [d.instance.report for d in deployments if d.ok]
+        fetched = sum(r.bytes_fetched for r in reports)
+        total = sum(r.bytes_total_components for r in reports)
         # sharing over THIS deploy only (the store may serve many deploys)
         req = self.store.stats.bytes_requested - requested_before
         stored = self.store.stats.bytes_stored - stored_before
@@ -148,6 +169,14 @@ class FleetDeployer:
             bytes_components_total=total,
             sharing_rate=(1.0 - stored / req) if req else 0.0,
             plan_cache_hits=self.plan_cache.stats.hits - hits_before,
+            bytes_delta_total=sum(r.bytes_delta_fetched for r in reports),
+            chunks_hit_total=sum(r.chunks_hit for r in reports),
+            chunks_missed_total=sum(r.chunks_missed for r in reports),
+            chunks_waited_total=sum(r.chunks_waited for r in reports),
+            fetch_serial_s_total=sum(r.fetch_serial_s for r in reports),
+            fetch_s_wall=max((r.fetch_s for r in reports), default=0.0),
+            fetch_concurrency=max((r.fetch_concurrency for r in reports),
+                                  default=1),
         )
 
     # ------------------------------------------------------------------

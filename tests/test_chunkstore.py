@@ -1,0 +1,452 @@
+"""Chunk-addressed delta fetch + the concurrent fetch engine.
+
+Covers the live chunk layer's claims: deterministic exact partitioning,
+version-bump re-deploys paying only the unshared delta, fleet singleflight
+(no chunk charged twice, even mid-flight), lockfile-replay accounting
+determinism, fetch priority ordering, and the upstream converted-index /
+negative-cache fast path.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (ChunkedComponentStore, FetchEngine, LazyBuilder,
+                        PreBuilder, component_pieces, cpu_smoke, gpu_server,
+                        tpu_single_pod)
+from repro.core import catalog
+from repro.core.component import UniformComponent
+from repro.core.lazybuild import BuildReport
+from repro.core.registry import (UniformComponentRegistry,
+                                 UniformComponentService, UpstreamSource)
+from repro.deploy import FleetDeployer
+
+
+def _c(name, version="1.0", env="e", size=1000, manager="m"):
+    return UniformComponent(manager=manager, name=name, version=version,
+                            env=env, payload="p", size_bytes=size)
+
+
+def _service():
+    return catalog.build_service()
+
+
+# ---------------------------------------------------------------------------
+# Chunk model
+# ---------------------------------------------------------------------------
+
+def test_pieces_partition_exactly():
+    c = _c("a", size=10_000)
+    pieces = component_pieces(c, 1024)
+    assert sum(p.size for p in pieces) == 10_000
+    assert len(pieces) == 10          # ceil(10000/1024)
+    assert len({p.id for p in pieces}) == len(pieces)
+    # the (short) tail chunk is never part of the shared prefix
+    assert not pieces[-1].shared
+
+
+def test_shared_pieces_stable_across_versions_and_envs():
+    a = _c("a", version="1.0", env="x", size=40_960)
+    b = _c("a", version="2.0", env="y", size=40_960)
+    pa = component_pieces(a, 1024)
+    pb = component_pieces(b, 1024)
+    shared_a = [p.id for p in pa if p.shared]
+    shared_b = [p.id for p in pb if p.shared]
+    assert shared_a and shared_a == shared_b       # survives the bump
+    priv_a = {p.id for p in pa if not p.shared}
+    priv_b = {p.id for p in pb if not p.shared}
+    assert not priv_a & priv_b                     # digests differ
+    # a different name shares nothing
+    other = component_pieces(_c("z", size=40_960), 1024)
+    assert not {p.id for p in other} & {p.id for p in pa}
+
+
+def test_piece_digest_has_no_prefix_collisions():
+    from repro.core.store import piece_digest
+    # without length-prefixed joining these two collide
+    assert piece_digest(["pip", "foo1", "2", "4194304"]) != \
+        piece_digest(["pip", "foo", "12", "4194304"])
+
+
+def test_put_registers_chunks():
+    s = ChunkedComponentStore(chunk_size=1024)
+    c = _c("a", size=10_000)
+    assert s.put(c) is True
+    assert s.chunk_count() == 10
+    assert s.chunk_stats.chunk_bytes_stored == 10_000
+    assert s.put(c) is False                       # component-level hit
+    assert s.chunk_stats.chunk_bytes_stored == 10_000
+
+
+def test_delta_plan_charges_only_unshared_chunks():
+    s = ChunkedComponentStore(chunk_size=1024)
+    v1 = _c("a", version="1.0", size=100 * 1024)
+    s.put(v1)
+    v2 = _c("a", version="2.0", size=100 * 1024)
+    plan = s.plan_fetch(v2)
+    assert plan.component_new
+    n = len(s.chunks_of(v2))
+    shared = int(n * s.shared_fraction)
+    assert len(plan.hits) == shared
+    assert len(plan.claimed) == n - shared
+    assert plan.bytes_claimed < v2.size_bytes
+    s.commit_chunks(plan.claimed)
+    assert s.chunk_stats.chunk_bytes_stored == \
+        v1.size_bytes + plan.bytes_claimed
+
+
+# ---------------------------------------------------------------------------
+# Delta fetch through the lazy-builder
+# ---------------------------------------------------------------------------
+
+def _bump_weights(service, arch_id, new_version="2025.12.9"):
+    from benchmarks.common import bump_asset_version
+    bump_asset_version(service, arch_id, new_version)
+
+
+def test_version_bump_redeploy_fetches_only_delta():
+    svc = _service()
+    pb = PreBuilder(svc)
+    lb = LazyBuilder(svc)
+    spec = tpu_single_pod()
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="serve")
+    cold = lb.build(cir, spec, assemble=False).report
+    assert cold.chunked_fetch
+    assert cold.bytes_delta_fetched == cold.bytes_fetched   # nothing shared
+
+    _bump_weights(svc, "gemma2-9b")
+    bump = lb.build(cir, spec, assemble=False).report
+    weights = [c for c in lb.store.digests()
+               if lb.store.get(c).name == "weights-gemma2-9b"]
+    assert len(weights) == 2                      # both versions stored
+    # the bumped component is a component-level miss...
+    assert bump.cache_misses == 1
+    # ...whose wire cost is only the unshared chunk fraction
+    assert 0 < bump.bytes_delta_fetched < bump.bytes_fetched
+    saved = 1 - bump.bytes_delta_fetched / bump.bytes_fetched
+    assert abs(saved - 0.3) < 0.01                # the shared fraction
+    assert bump.chunks_hit > 0
+    # modeled deploy time improves accordingly
+    assert bump.network_time(500e6) < cold.network_time(500e6)
+
+
+def test_lock_replay_chunk_accounting_is_byte_identical():
+    svc = _service()
+    pb = PreBuilder(svc)
+    spec = tpu_single_pod()
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    cold = LazyBuilder(svc).build(cir, spec, assemble=False)
+    replay = LazyBuilder(svc).build_from_lock(cir, cold.lock, spec,
+                                              assemble=False)
+    a, b = cold.report, replay.report
+    assert (a.bytes_delta_fetched, a.chunks_hit, a.chunks_missed) == \
+        (b.bytes_delta_fetched, b.chunks_hit, b.chunks_missed)
+    assert a.bytes_fetched == b.bytes_fetched
+    assert b.chunked_fetch
+
+
+def test_fetch_priority_orders_model_before_assets():
+    svc = _service()
+    pb = PreBuilder(svc)
+    lb = LazyBuilder(svc, fetch_workers=1)
+    seen = []
+    orig = svc.fetch_chunks
+
+    def spy(c, nbytes, nchunks=1):
+        seen.append(c.manager)
+        return orig(c, nbytes, nchunks)
+
+    svc.fetch_chunks = spy
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="serve")
+    lb.build(cir, tpu_single_pod(), assemble=False)
+    assert "model" in seen and "asset" in seen
+    assert seen.index("model") < seen.index("asset")
+    assert max(i for i, m in enumerate(seen) if m == "asset") == len(seen) - 1
+
+
+# ---------------------------------------------------------------------------
+# Fleet / concurrency
+# ---------------------------------------------------------------------------
+
+def test_fleet_never_double_charges_a_chunk():
+    svc = _service()
+    pb = PreBuilder(svc)
+    fd = FleetDeployer(svc, max_workers=4)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    res = fd.deploy(cir, [tpu_single_pod(), cpu_smoke(), gpu_server()])
+    assert res.ok
+    # every wire byte across the fleet corresponds to exactly one stored
+    # chunk — shared chunks (cross-env runtime-base prefix) included
+    assert res.bytes_delta_total == fd.store.chunk_stats.chunk_bytes_stored
+    assert svc.bytes_served == res.bytes_delta_total
+    # chunk-level wire is never more than component-level accounting
+    assert res.bytes_delta_total <= res.bytes_fetched_total
+
+
+def test_same_digest_hit_barriers_on_inflight_transfer():
+    """A component-level hit while the first build of the SAME digest is
+    still transferring must carry barrier events — assembly must not race
+    ahead of content that is mid-flight."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    c = _c("a", size=10_240)
+    first = s.plan_fetch(c)
+    assert first.component_new and first.claimed
+    second = s.plan_fetch(c)
+    assert not second.component_new
+    assert second.barriers                     # still in flight
+    s.commit_chunks(first.claimed)
+    third = s.plan_fetch(c)
+    assert not third.barriers                  # transfer done, plain hit
+
+
+def test_aborted_fetch_is_repaired_by_next_build():
+    """An aborted transfer leaves the component registered but incomplete;
+    the next build of the same digest must re-plan and re-claim the missing
+    chunks instead of trusting the component-level hit."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    c = _c("a", size=10_240)
+    plan = s.plan_fetch(c)
+    committed, lost = plan.claimed[:3], plan.claimed[3:]
+    s.commit_chunks(committed, component=c)
+    s.abort_chunks(lost, component=c)          # fetch died mid-transfer
+    retry = s.plan_fetch(c)
+    assert not retry.component_new             # digest already registered
+    assert len(retry.claimed) == len(lost)     # missing chunks re-claimed
+    assert len(retry.hits) == len(committed)
+    s.commit_chunks(retry.claimed, component=c)
+    assert s.chunk_stats.chunk_bytes_stored == c.size_bytes
+    done = s.plan_fetch(c)                     # fully repaired: plain hit
+    assert not done.claimed and not done.barriers
+
+
+def test_waiter_reclaims_chunk_aborted_by_other_build():
+    """Build B waits on a shared chunk claimed by build A of a sibling
+    version; A's fetch aborts.  B must be able to re-claim the orphaned
+    chunk so its component never ends up present-with-holes."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    v1 = _c("a", version="1.0", size=100 * 1024)
+    v2 = _c("a", version="2.0", size=100 * 1024)
+    plan_a = s.plan_fetch(v1)
+    plan_b = s.plan_fetch(v2)
+    assert plan_b.waits                       # shared prefix in flight under A
+    s.abort_chunks(plan_a.claimed, component=v1)
+    orphans = s.reclaim_chunks([ch for ch, _ev in plan_b.waits])
+    assert {ch.id for ch, _ev in orphans} == \
+        {ch.id for ch, _ev in plan_b.waits}
+    s.commit_chunks(orphans, component=v2)
+    s.commit_chunks(plan_b.claimed, component=v2)
+    assert all(s.has_chunk(ch.id) for ch in s.chunks_of(v2))
+    # v1 stays marked incomplete until its next build re-plans
+    retry = s.plan_fetch(v1)
+    assert not retry.component_new and retry.claimed
+
+
+def test_barrier_hit_repairs_aborted_same_digest():
+    """A component-level hit that barriered on an aborted same-digest
+    transfer must be able to re-claim the whole component's missing
+    chunks via reclaim_component."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    c = _c("a", size=10_240)
+    plan_a = s.plan_fetch(c)
+    plan_b = s.plan_fetch(c)
+    assert plan_b.barriers
+    s.abort_chunks(plan_a.claimed, component=c)
+    orphans = s.reclaim_component(c)
+    assert len(orphans) == len(plan_a.claimed)
+    s.commit_chunks(orphans, component=c)
+    assert all(s.has_chunk(ch.id) for ch in s.chunks_of(c))
+    assert not s.reclaim_component(c)          # healthy: nothing to repair
+
+
+def test_crash_mid_transfer_is_not_persisted(tmp_path):
+    """A path-backed store must not reload a component whose transfer never
+    completed as present-with-holes: the JSON is persisted only once every
+    claimed chunk has been committed."""
+    path = str(tmp_path / "store")
+    s1 = ChunkedComponentStore(path, chunk_size=1024)
+    c = _c("a", size=10_240)
+    plan = s1.plan_fetch(c)                    # claims, then "crash" —
+    s2 = ChunkedComponentStore(path, chunk_size=1024)   # restart
+    assert not s2.has(c)                       # never advertised
+    assert s2.chunk_count() == 0
+    s1.commit_chunks(plan.claimed, component=c)   # transfer completes
+    s3 = ChunkedComponentStore(path, chunk_size=1024)
+    assert s3.has(c)
+    assert s3.chunk_count() == len(s1.chunks_of(c))
+
+
+def test_rescan_build_is_accounted_as_a_miss():
+    """A build that repairs an aborted digest does real transfer work: the
+    report must count it as a miss so bytes_delta_fetched stays <=
+    bytes_fetched (no negative savings downstream)."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    svc = UniformComponentService(UniformComponentRegistry())
+    c = _c("a", size=10_240)
+    p = s.plan_fetch(c)
+    s.abort_chunks(p.claimed, component=c)     # first build died
+    rep = BuildReport("x", "p")
+    FetchEngine(s, svc).fetch([c], rep)
+    assert rep.cache_misses == 1 and rep.cache_hits == 0
+    assert rep.bytes_fetched == c.size_bytes
+    assert rep.bytes_delta_fetched == c.size_bytes
+    assert all(s.has_chunk(ch.id) for ch in s.chunks_of(c))
+
+
+def test_put_racing_inflight_fetch_self_heals():
+    """A direct put() whose shared chunks are mid-flight under another
+    build must not trust them blindly: the digest is marked incomplete, and
+    the next plan re-claims whatever the other build failed to land."""
+    s = ChunkedComponentStore(chunk_size=1024)
+    v1 = _c("a", version="1.0", size=100 * 1024)
+    v2 = _c("a", version="2.0", size=100 * 1024)
+    plan_a = s.plan_fetch(v1)              # claims the shared prefix
+    assert s.put(v2) is True               # races: shared chunks in flight
+    s.abort_chunks(plan_a.claimed, component=v1)   # ...and never land
+    repair = s.plan_fetch(v2)              # incomplete marker forces rescan
+    assert repair.claimed                  # the aborted shared chunks
+    s.commit_chunks(repair.claimed, component=v2)
+    assert all(s.has_chunk(ch.id) for ch in s.chunks_of(v2))
+
+
+def test_midflight_singleflight_dedup():
+    """Two builders over one store fetch version-siblings concurrently: the
+    shared chunk prefix must be charged exactly once even though both
+    components are new and in flight at the same time."""
+    store = ChunkedComponentStore(chunk_size=1024)
+    registry = UniformComponentRegistry()
+    svc = UniformComponentService(registry)
+    v1 = _c("weights", version="1.0", size=512 * 1024)
+    v2 = _c("weights", version="2.0", size=512 * 1024)
+    # slow simulated link so both fetches are genuinely mid-flight
+    engines = [FetchEngine(store, svc, max_workers=4, simulate_bps=50e6)
+               for _ in range(2)]
+    reports = [BuildReport("x", "p"), BuildReport("x", "p")]
+    barrier = threading.Barrier(2)
+
+    def go(i, comp):
+        barrier.wait()
+        engines[i].fetch([comp], reports[i])
+
+    ts = [threading.Thread(target=go, args=(0, v1)),
+          threading.Thread(target=go, args=(1, v2))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    total_wire = sum(r.bytes_delta_fetched for r in reports)
+    assert total_wire == store.chunk_stats.chunk_bytes_stored
+    assert total_wire == svc.bytes_served
+    n = len(store.chunks_of(v1))
+    shared = int(n * store.shared_fraction)
+    # the shared prefix was transferred once, not twice
+    assert total_wire == v1.size_bytes + v2.size_bytes - shared * 1024
+    assert store.chunk_stats.chunks_waited + store.chunk_stats.chunks_hit \
+        == shared
+
+
+def test_concurrent_builders_share_store_stress():
+    """N threads × M components with overlapping names/versions: component
+    and chunk accounting must both balance exactly."""
+    store = ChunkedComponentStore(chunk_size=512)
+    registry = UniformComponentRegistry()
+    svc = UniformComponentService(registry)
+    # size is a function of (name, version): digest-identical components
+    # must be byte-identical (digest() does not hash size_bytes)
+    comps = [_c(f"n{i % 5}", version=f"{1 + i % 3}.0",
+                size=8192 + 1024 * (i % 5) + 512 * (i % 3))
+             for i in range(30)]
+
+    def worker():
+        eng = FetchEngine(store, svc, max_workers=4)
+        rep = BuildReport("x", "p")
+        eng.fetch(comps, rep)
+        return rep
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    uniq = {c.digest(): c for c in comps}
+    assert store.stats.bytes_stored == sum(c.size_bytes
+                                           for c in uniq.values())
+    expected_chunks = {ch.id: ch.size for c in uniq.values()
+                       for ch in store.chunks_of(c)}
+    assert store.chunk_stats.chunk_bytes_stored == \
+        sum(expected_chunks.values())
+    assert store.chunk_count() == len(expected_chunks)
+    assert svc.bytes_served == store.chunk_stats.chunk_bytes_stored
+
+
+def test_fetch_engine_pool_overlaps_simulated_transfer():
+    """With a simulated link, the striped pool's wall time lands well below
+    the serial sum of per-stripe fetch times."""
+    store = ChunkedComponentStore(chunk_size=64 * 1024)
+    svc = UniformComponentService(UniformComponentRegistry())
+    comps = [_c(f"big{i}", size=4 * 2**20) for i in range(4)]
+    eng = FetchEngine(store, svc, max_workers=8, simulate_bps=400e6)
+    rep = BuildReport("x", "p")
+    eng.fetch(comps, rep)
+    assert rep.fetch_concurrency == 8
+    assert rep.fetch_serial_s > 0
+    assert rep.fetch_s < rep.fetch_serial_s
+
+
+# ---------------------------------------------------------------------------
+# Upstream converted index + negative cache (registry fast path)
+# ---------------------------------------------------------------------------
+
+def test_upstream_index_avoids_rescans():
+    listed = []
+
+    def lister():
+        listed.append(1)
+        return [None]
+
+    src = UpstreamSource(
+        "hub", lister,
+        lambda _raw: [_c("known", manager="asset", size=10)])
+    svc = UniformComponentService(UniformComponentRegistry(), [src])
+
+    assert svc.vq("asset", "known") == ["1.0"]     # first miss: one scan
+    assert len(listed) == 1
+    # a second unknown name must NOT re-run the lister/converter sweep
+    with pytest.raises(Exception):
+        svc.cq("asset", "unknown", "1.0", "e")
+    assert len(listed) == 1
+    assert svc.upstream_rescans_avoided >= 1
+    # repeated misses for the same unknown key hit the negative cache
+    before = svc.upstream_negative_hits
+    with pytest.raises(Exception):
+        svc.cq("asset", "unknown", "1.0", "e")
+    assert svc.upstream_negative_hits == before + 1
+    # invalidation forces one fresh sweep
+    src.invalidate()
+    assert src.convert_matching("asset", "known")
+    assert len(listed) == 2
+
+
+def test_service_invalidate_upstreams_clears_negative_cache():
+    """A name that newly appears upstream must become resolvable after
+    service.invalidate_upstreams() — the negative cache is not forever."""
+    catalog_entries = [_c("known", manager="asset", size=10)]
+    src = UpstreamSource("hub", lambda: [None],
+                         lambda _raw: list(catalog_entries))
+    svc = UniformComponentService(UniformComponentRegistry(), [src])
+    with pytest.raises(Exception):
+        svc.cq("asset", "late", "1.0", "e")    # negative-cached
+    catalog_entries.append(_c("late", manager="asset", size=20))
+    with pytest.raises(Exception):
+        svc.cq("asset", "late", "1.0", "e")    # still cached as negative
+    svc.invalidate_upstreams()
+    assert svc.cq("asset", "late", "1.0", "e").name == "late"
+
+
+def test_reloaded_store_delta_sharing_rate_stays_bounded(tmp_path):
+    path = str(tmp_path / "store")
+    s1 = ChunkedComponentStore(path, chunk_size=256)
+    s1.put(_c("a", version="1.0", size=10_240))
+    s2 = ChunkedComponentStore(path, chunk_size=256)
+    s2.put(_c("b", version="1.0", size=1024))
+    assert 0.0 <= s2.chunk_stats.delta_sharing_rate < 1.0

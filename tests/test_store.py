@@ -1,9 +1,14 @@
 """Local component store: dedup accounting + sharing-granularity report."""
+import json
+import os
+import threading
+
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # property tests skip individually without hypothesis
     from _hypothesis_stub import given, settings, st
 
+from repro.core.chunkstore import ChunkedComponentStore
 from repro.core.component import UniformComponent
 from repro.core.store import LocalComponentStore
 
@@ -68,3 +73,79 @@ def test_store_invariants(entries):
     assert 0.0 <= s.stats.sharing_rate < 1.0 or \
         s.stats.bytes_requested == 0
     assert s.stats.hits + s.stats.misses == len(entries)
+
+
+def test_concurrent_readers_never_race_writers():
+    """digests()/has()/get()/reports snapshot under the store lock, so
+    concurrent FleetDeployer-style putters cannot corrupt a reader's
+    iteration (satellite: the read-without-lock race)."""
+    s = LocalComponentStore()
+    # size derives from (name, version): equal digests ⇒ equal bytes
+    comps = [_c(f"n{i % 11}", version=f"{1 + i % 7}.0",
+                size=100 + 10 * (i % 11) + (i % 7))
+             for i in range(400)]
+    errors = []
+    stop = threading.Event()
+
+    def writer(part):
+        try:
+            for c in part:
+                s.put(c)
+                s.record_build(f"b-{c.digest()[:8]}", [c])
+        except Exception as e:           # noqa: BLE001
+            errors.append(e)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                for dg in s.digests():
+                    s.get(dg)
+                s.has(comps[0])
+                s.pairwise_sharing()
+        except Exception as e:           # noqa: BLE001
+            errors.append(e)
+
+    writers = [threading.Thread(target=writer, args=(comps[i::4],))
+               for i in range(4)]
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors
+    uniq = {c.digest(): c for c in comps}
+    assert s.stats.bytes_stored == sum(c.size_bytes for c in uniq.values())
+    assert s.digests() == set(uniq)
+
+
+def test_load_skips_corrupt_entries(tmp_path):
+    """A torn/corrupt on-disk entry is skipped and counted, not fatal —
+    mirroring BuildPlanCache._load."""
+    path = str(tmp_path / "store")
+    s1 = LocalComponentStore(path)
+    good = [_c("a", size=500), _c("b", size=700)]
+    for c in good:
+        s1.put(c)
+    with open(os.path.join(path, "torn.json"), "w") as f:
+        f.write("not json {{{")
+    with open(os.path.join(path, "wrongshape.json"), "w") as f:
+        json.dump({"manager": "m"}, f)     # missing required fields
+    s2 = LocalComponentStore(path)         # must not raise
+    assert s2.stats.corrupt_skipped == 2
+    assert s2.digests() == {c.digest() for c in good}
+    assert s2.stats.bytes_stored == 1200
+
+
+def test_chunked_store_reload_restores_chunk_presence(tmp_path):
+    path = str(tmp_path / "store")
+    s1 = ChunkedComponentStore(path, chunk_size=256)
+    v1 = _c("a", version="1.0", size=10_240)
+    s1.put(v1)
+    s2 = ChunkedComponentStore(path, chunk_size=256)
+    assert s2.chunk_count() == s1.chunk_count()
+    # a version bump against the reloaded store still only pays the delta
+    plan = s2.plan_fetch(_c("a", version="2.0", size=10_240))
+    assert plan.hits and plan.bytes_claimed < 10_240
