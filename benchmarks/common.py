@@ -132,9 +132,13 @@ def lazy_deploy_time(report, bw_bps: float) -> float:
     """Paper's lazy-build deployment: CIR pull + parallel delta fetch
     overlapped with resolution, then assembly (no install — components are
     pre-compiled).  Wire bytes are chunk-delta bytes when the chunk store
-    served the build."""
+    served the build.  Orchestrated builds additionally credit the
+    *measured* stage overlap (assemble/jit running under the asset tail);
+    compile_s is in the stage sum because overlap_s may include it."""
     net = (report.bytes_cir + report.bytes_wire_fetched) / bw_bps
-    return max(report.resolve_s, net) + report.fetch_s + report.assemble_s
+    stage_sum = report.fetch_s + report.assemble_s + report.compile_s
+    overlap = min(getattr(report, "overlap_s", 0.0), stage_sum)
+    return max(report.resolve_s, net) + stage_sum - overlap
 
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:

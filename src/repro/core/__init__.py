@@ -15,6 +15,8 @@ from .store import (Chunk, LocalComponentStore, StoreStats,  # noqa: F401
 from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
                          FetchPlan)
 from .cir import CIR, PreBuilder  # noqa: F401
+from .orchestrator import (STAGES, BuildGraph,  # noqa: F401
+                           BuildOrchestrator, ComponentReadiness, Lifecycle)
 from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401
                         ComponentBundle, ContainerInstance, FetchEngine,
                         LazyBuilder, Lockfile, PlanCacheStats,

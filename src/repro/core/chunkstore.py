@@ -159,6 +159,14 @@ class ChunkedComponentStore(LocalComponentStore):
         with self._lock:
             return len(self._chunk_present)
 
+    def missing_chunks(self, c: UniformComponent) -> List[Chunk]:
+        """Chunks of ``c`` not present locally — the proof obligation behind
+        a per-component readiness signal (empty == content fully landed).
+        Chunking happens outside the lock; the presence check is atomic."""
+        chunks = self.chunks_of(c)
+        with self._lock:
+            return [ch for ch in chunks if ch.id not in self._chunk_present]
+
     # -- fetch protocol -------------------------------------------------------
     def plan_fetch(self, c: UniformComponent) -> FetchPlan:
         """Atomically register ``c`` and claim its missing chunks.

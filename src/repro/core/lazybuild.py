@@ -23,6 +23,7 @@ on to amortize one CIR across N heterogeneous platforms.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import json
@@ -35,6 +36,8 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 from .cir import CIR
 from .chunkstore import CLAIM_WAIT_TIMEOUT_S, ChunkedComponentStore, FetchPlan
 from .component import DependencyItem, UniformComponent
+from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
+                           Lifecycle)
 from .registry import RegistryError, UniformComponentService
 from .resolution import (Resolution, ResolutionError, resolution_from_pins,
                          uniform_dependency_resolution)
@@ -154,6 +157,7 @@ class PlanCacheStats:
     misses: int = 0
     puts: int = 0
     stale_drops: int = 0      # replays that failed (catalog changed underfoot)
+    evictions: int = 0        # LRU drops past max_entries
 
 
 class BuildPlanCache:
@@ -170,16 +174,28 @@ class BuildPlanCache:
     (on-demand conversion) therefore looks up at the pre-pull epoch and
     misses once per fresh process; builds against an already-converted
     catalog replay across restarts.
+
+    ``max_entries`` bounds the cache LRU-wise (a long-lived deployment
+    service accumulates one entry per (CIR, platform, epoch, overrides)
+    forever otherwise): the least-recently-used plan — in memory *and* its
+    on-disk file — is evicted past the cap, counted in ``stats.evictions``.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None,
+                 max_entries: Optional[int] = None):
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1 (or None)")
         self.path = path
-        self._plans: Dict[str, BuildPlan] = {}
+        self.max_entries = max_entries
+        self._plans: "collections.OrderedDict[str, BuildPlan]" = \
+            collections.OrderedDict()
         self.stats = PlanCacheStats()
         self._lock = threading.Lock()
         if path:
             os.makedirs(path, exist_ok=True)
             self._load()
+            with self._lock:
+                self._evict_locked()
 
     @staticmethod
     def key(cir: CIR, spec: SpecSheet, catalog_epoch: str,
@@ -199,11 +215,13 @@ class BuildPlanCache:
                 self.stats.misses += 1
             else:
                 self.stats.hits += 1
+                self._plans.move_to_end(key)     # LRU refresh
             return plan
 
     def put(self, key: str, plan: BuildPlan) -> None:
         with self._lock:
             self._plans[key] = plan
+            self._plans.move_to_end(key)
             self.stats.puts += 1
             if self.path:
                 fn = os.path.join(self.path, key + ".json")
@@ -211,6 +229,20 @@ class BuildPlanCache:
                 with open(tmp, "w") as f:
                     f.write(plan.to_json())
                 os.replace(tmp, fn)
+            self._evict_locked()
+
+    def _evict_locked(self) -> None:
+        """Drop least-recently-used plans past ``max_entries``; holds _lock."""
+        if self.max_entries is None:
+            return
+        while len(self._plans) > self.max_entries:
+            old, _plan = self._plans.popitem(last=False)
+            self.stats.evictions += 1
+            if self.path:
+                try:
+                    os.remove(os.path.join(self.path, old + ".json"))
+                except OSError:
+                    pass
 
     def drop(self, key: str) -> None:
         with self._lock:
@@ -223,7 +255,14 @@ class BuildPlanCache:
                     pass
 
     def _load(self) -> None:
-        for fn in os.listdir(self.path):
+        def mtime(fn: str) -> float:
+            try:
+                return os.path.getmtime(os.path.join(self.path, fn))
+            except OSError:
+                return 0.0
+        # oldest first, so insertion order approximates on-disk recency and
+        # the LRU cap evicts the stalest entries after a restart
+        for fn in sorted(os.listdir(self.path), key=mtime):
             if not fn.endswith(".json"):
                 continue
             try:
@@ -270,6 +309,12 @@ class BuildReport:
     fetch_concurrency: int = 1      # thread-pool width the engine used
     fetch_serial_s: float = 0.0     # sum of per-task fetch times (no overlap)
     fetch_wait_timeouts: int = 0    # in-flight waits that hit the backstop
+    # -- event-driven orchestration columns (BuildOrchestrator) -------------
+    orchestrated: bool = False      # stages overlapped via readiness events
+    critical_path_s: float = 0.0    # measured wall: build start -> READY
+    overlap_s: float = 0.0          # barrier-stage sum minus critical path
+    stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #                               ^ per-lifecycle-stage wall offsets
 
     @property
     def bytes_wire_fetched(self) -> int:
@@ -283,10 +328,20 @@ class BuildReport:
         return (self.bytes_cir + self.bytes_wire_fetched) * 8.0 / bandwidth_bps
 
     def lazy_build_time(self, bandwidth_bps: float) -> float:
-        # resolution overlaps fetch in the real system (paper §4.3 converters
-        # split metadata from payload); assembly is strictly after.
+        """Deploy wall time at a simulated link — the orchestrator's actual
+        critical path, not an analytic stage sum.
+
+        ``overlap_s`` is the *measured* time the event-driven pipeline ran
+        stages concurrently (assemble/jit under the asset tail, READY not
+        gated on first-weight-use content), so the stage sum is credited by
+        exactly what the orchestrator achieved; barrier builds have
+        ``overlap_s == 0`` and reduce to the legacy analytic form.
+        Resolution still overlaps the CIR pull + delta fetch on the link
+        (paper §4.3: converters split metadata from payload).
+        """
+        stage_sum = self.fetch_s + self.assemble_s + self.compile_s
         return max(self.resolve_s, self.network_time(bandwidth_bps)) \
-            + self.fetch_s + self.assemble_s + self.compile_s
+            + stage_sum - min(self.overlap_s, stage_sum)
 
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -319,14 +374,22 @@ def _partition(items: Sequence, n: int) -> List[List]:
 
 
 class FetchEngine:
-    """Concurrent, pipelined fetch executor for the lazy-builder.
+    """Concurrent, pipelined, *streaming* fetch executor for the builder.
 
     Against a ``ChunkedComponentStore`` it plans a missing-chunk delta per
     component (priority order), stripes each component's claimed chunks
     across a bounded thread pool (range-parallel blob pulls), charges only
-    delta bytes through ``service.fetch_chunks``, and finally waits on
-    chunks other builds have in flight — the singleflight guarantee that a
-    fleet never fetches the same chunk twice, even mid-transfer.
+    delta bytes through ``service.fetch_chunks``, and waits on chunks other
+    builds have in flight — the singleflight guarantee that a fleet never
+    fetches the same chunk twice, even mid-transfer.
+
+    The fetch is a streaming stage: given a ``ComponentReadiness`` tracker
+    it signals each component ``ready`` the moment its content is *proven*
+    present — owned stripes committed, awaited chunks landed (orphans of an
+    aborted claimer reclaimed and re-pulled) — in priority order, so the
+    ``BuildOrchestrator`` starts assembly while the weight-asset tail is
+    still on the wire.  Accounting is independent of the overlap: byte and
+    chunk columns are identical with or without a readiness consumer.
 
     ``simulate_bps`` optionally sleeps each stripe for ``bytes / bps`` so
     benchmarks can observe real wall-clock overlap; accounting is identical
@@ -344,21 +407,25 @@ class FetchEngine:
         self.simulate_bps = simulate_bps
 
     def fetch(self, comps: Sequence[UniformComponent],
-              report: BuildReport) -> None:
+              report: BuildReport,
+              readiness: Optional[ComponentReadiness] = None) -> None:
         t0 = time.perf_counter()
         order = sorted(range(len(comps)),
                        key=lambda i: (_FETCH_PRIORITY.get(comps[i].manager, 3),
                                       i))
         ordered = [comps[i] for i in order]
-        if isinstance(self.store, ChunkedComponentStore):
-            self._fetch_chunked(ordered, report)
-        else:
-            self._fetch_serial(ordered, report)
-        report.fetch_s = time.perf_counter() - t0
+        try:
+            if isinstance(self.store, ChunkedComponentStore):
+                self._fetch_chunked(ordered, report, readiness)
+            else:
+                self._fetch_serial(ordered, report, readiness)
+        finally:
+            report.fetch_s = time.perf_counter() - t0
 
     # -- legacy component-granularity path --------------------------------
     def _fetch_serial(self, comps: Sequence[UniformComponent],
-                      report: BuildReport) -> None:
+                      report: BuildReport,
+                      readiness: Optional[ComponentReadiness] = None) -> None:
         for c in comps:
             report.bytes_total_components += c.size_bytes
             t = time.perf_counter()
@@ -371,10 +438,13 @@ class FetchEngine:
             else:
                 report.cache_hits += 1
             report.fetch_serial_s += time.perf_counter() - t
+            if readiness is not None:
+                readiness.mark_ready(c)
 
     # -- chunk-delta path -------------------------------------------------
     def _fetch_chunked(self, comps: Sequence[UniformComponent],
-                       report: BuildReport) -> None:
+                       report: BuildReport,
+                       readiness: Optional[ComponentReadiness] = None) -> None:
         report.chunked_fetch = True
         plans: List[FetchPlan] = []
         for c in comps:
@@ -396,10 +466,10 @@ class FetchEngine:
                            sum(len(p.claimed) for p in plans)))
         report.fetch_concurrency = width
         # stripe each component's claim across the pool, in priority order
-        tasks: List[Tuple[UniformComponent, List]] = []
+        stripes_of: Dict[int, List[List]] = {id(p): [] for p in plans}
         for plan in plans:
             for stripe in _partition(plan.claimed, width):
-                tasks.append((plan.component, stripe))
+                stripes_of[id(plan)].append(stripe)
 
         def pull(c: UniformComponent, stripe: List) -> Tuple[int, int, float]:
             t = time.perf_counter()
@@ -414,59 +484,47 @@ class FetchEngine:
                 raise
             return nbytes, len(stripe), time.perf_counter() - t
 
-        if width == 1 or len(tasks) <= 1:
-            results = []
-            for i, (c, stripe) in enumerate(tasks):
-                try:
-                    results.append(pull(c, stripe))
-                except BaseException:
-                    # release the never-executed stripes' claims too, or
-                    # sibling builds block on events that can't fire
-                    for c2, s2 in tasks[i + 1:]:
-                        self.store.abort_chunks(s2, component=c2)
-                    raise
-        else:
-            # Executor.map submits every task eagerly, so each stripe runs
-            # pull() and aborts its own claim on failure
-            with ThreadPoolExecutor(max_workers=width) as pool:
-                results = list(pool.map(lambda t: pull(*t), tasks))
-        for nbytes, nchunks, dt in results:
-            report.bytes_delta_fetched += nbytes
-            report.chunks_missed += nchunks
-            report.fetch_serial_s += dt
-        # pipeline barrier: content another build is still pulling — both
-        # chunk-level waits and same-digest component hits mid-transfer.
-        # One shared deadline across every event, scaled to the awaited
-        # bytes when transfers are simulated (a legitimate slow-link stripe
-        # must not be declared dead); the fixed floor only guards against a
-        # claimer that died without commit/abort.
+        # shared wait budget for content another build is pulling — both
+        # chunk-level waits and same-digest component barriers.  Scaled to
+        # the awaited PLUS owned bytes when transfers are simulated: the
+        # deadline starts before this build's own stripe pulls run (each
+        # component finishes as its stripes land, streaming), so our own
+        # simulated transfer time must not eat the waiters' budget, and a
+        # legitimate slow-link stripe must not be declared dead.  The fixed
+        # floor only guards against a claimer that died without
+        # commit/abort.
         awaited_bytes = sum(ch.size for p in plans for ch, _ev in p.waits) \
             + sum(p.component.size_bytes for p in plans if p.barriers)
+        owned_bytes = sum(ch.size for p in plans for ch, _ev in p.claimed)
         budget = CLAIM_WAIT_TIMEOUT_S
         if self.simulate_bps:
-            budget += 2.0 * awaited_bytes / self.simulate_bps
+            budget += 2.0 * (awaited_bytes + owned_bytes) / self.simulate_bps
         deadline = time.monotonic() + budget
-        timed_out: set = set()
-        for plan in plans:
+
+        def finish(plan: FetchPlan) -> None:
+            """Prove one component's content present, then signal ready.
+
+            Waits out transfers other builds own; if content we waited on
+            was aborted by its claimer — a chunk-level wait or a whole
+            component barrier — we re-claim and fetch it ourselves: a
+            waiter must never finish with a hole another build's failure
+            left behind.  Anything we cannot prove complete (still in
+            flight under a third build, or a timed-out barrier) marks OUR
+            digest incomplete, so the next build of it re-verifies — no
+            permanent present-with-holes state.
+            """
+            timed_out = False
             for ev in [ev for _ch, ev in plan.waits] + plan.barriers:
                 if not ev.wait(max(0.0, deadline - time.monotonic())):
                     report.fetch_wait_timeouts += 1
-                    timed_out.add(id(plan))
-        # post-wait repair: if content we waited on was aborted by its
-        # claimer — a chunk-level wait or a whole component barrier — we
-        # re-claim and fetch it ourselves: a waiter must never finish with
-        # a hole another build's failure left behind.  Anything we cannot
-        # prove complete (still in flight under a third build, or a timed-
-        # out barrier) marks OUR digest incomplete, so the next build of it
-        # re-verifies — no permanent present-with-holes state.
-        for plan in plans:
+                    timed_out = True
             if plan.waits:
                 orphans = self.store.reclaim_chunks([ch for ch, _ev
                                                      in plan.waits])
             elif plan.barriers:
                 orphans = self.store.reclaim_component(plan.component)
             else:
-                continue
+                orphans = []
             if orphans:
                 report.bytes_delta_fetched += \
                     sum(ch.size for ch, _ev in orphans)
@@ -474,9 +532,88 @@ class FetchEngine:
                 pull(plan.component, orphans)
             holey = any(not self.store.has_chunk(ch.id)
                         for ch, _ev in plan.waits) or \
-                (plan.barriers and id(plan) in timed_out)
+                (plan.barriers and timed_out)
             if holey:
                 self.store.mark_incomplete(plan.component)
+            if readiness is not None:
+                readiness.mark_ready(plan.component)
+
+        def account(res: Tuple[int, int, float]) -> None:
+            nbytes, nchunks, dt = res
+            report.bytes_delta_fetched += nbytes
+            report.chunks_missed += nchunks
+            report.fetch_serial_s += dt
+
+        def release_from(pi: int, si: int) -> None:
+            """Failure cleanup from plan ``pi``, stripe ``si`` on: abort the
+            never-executed stripes' claims (or sibling builds block on
+            events that can't fire) and mark every plan whose awaited
+            content was never verified incomplete, so the next build of
+            those digests re-scans instead of trusting a component hit."""
+            for s2 in stripes_of[id(plans[pi])][si:]:
+                self.store.abort_chunks(s2, component=plans[pi].component)
+            for p2 in plans[pi + 1:]:
+                for s2 in stripes_of[id(p2)]:
+                    self.store.abort_chunks(s2, component=p2.component)
+            for p2 in plans[pi:]:
+                if p2.waits or p2.barriers:
+                    self.store.mark_incomplete(p2.component)
+
+        n_stripes = sum(len(s) for s in stripes_of.values())
+        if width == 1 or n_stripes <= 1:
+            for pi, plan in enumerate(plans):
+                stripes = stripes_of[id(plan)]
+                for si, stripe in enumerate(stripes):
+                    try:
+                        account(pull(plan.component, stripe))
+                    except BaseException:
+                        release_from(pi, si + 1)
+                        raise
+                try:
+                    finish(plan)
+                except BaseException:
+                    # the orphan-repair re-pull can fail too: its own claim
+                    # aborts inside pull(), the rest is released here
+                    release_from(pi, len(stripes))
+                    raise
+        else:
+            # every stripe is submitted eagerly (priority order == queue
+            # order), so each runs pull() and aborts its own claim on
+            # failure; components complete — and signal readiness — in
+            # priority order as their last stripe lands
+            with ThreadPoolExecutor(max_workers=width) as pool:
+                futs = {id(p): [pool.submit(pull, p.component, s)
+                                for s in stripes_of[id(p)]]
+                        for p in plans}
+                first_err: Optional[BaseException] = None
+                for plan in plans:
+                    results, failed = [], False
+                    for f in futs[id(plan)]:
+                        try:
+                            results.append(f.result())
+                        except BaseException as e:  # noqa: BLE001
+                            failed = True
+                            if first_err is None:
+                                first_err = e
+                    # every committed-and-charged stripe is accounted, even
+                    # on a failing build — the partial report feeds fleet
+                    # byte totals, which must not understate real transfers
+                    for res in results:
+                        account(res)
+                    if first_err is None and not failed:
+                        try:
+                            finish(plan)
+                        except BaseException as e:  # noqa: BLE001
+                            # keep draining later plans' futures so their
+                            # committed stripes are still accounted
+                            first_err = e
+                            if plan.waits or plan.barriers:
+                                self.store.mark_incomplete(plan.component)
+                    elif plan.waits or plan.barriers:
+                        # never verified this plan's awaited content
+                        self.store.mark_incomplete(plan.component)
+                if first_err is not None:
+                    raise first_err
 
 
 # ---------------------------------------------------------------------------
@@ -485,12 +622,21 @@ class FetchEngine:
 
 @dataclasses.dataclass
 class ContainerInstance:
-    """The assembled, runnable unit.
+    """The assembled, runnable unit, with an explicit lifecycle.
 
     ``model`` is the family-assembled Model object (init/apply + sharding
     rules); ``entry`` holds the built entrypoint callables (train_step or
     prefill/decode) produced by the runtime components.  The launcher gives
     it a mesh to produce shardings, lower and compile.
+
+    The instance exists from the moment resolution pins its components
+    (stage PLANNED); the orchestrator advances it through FETCHING →
+    ASSEMBLED → COMPILED → READY → COMPLETE as per-component readiness
+    gates fire.  ``wait(stage)`` blocks until a stage is reached (READY =
+    deployable, the asset tail may still stream; ``wait("weights")`` is
+    the first-weight-use gate) and re-raises the build's error if it
+    failed first.  ``model``/``entry`` are populated at ASSEMBLED; the
+    fetch accounting in ``report`` is final at COMPLETE.
     """
     cir: CIR
     spec: SpecSheet
@@ -499,10 +645,22 @@ class ContainerInstance:
     entry: Dict[str, Callable]
     lock: Lockfile
     report: BuildReport
+    lifecycle: Lifecycle = dataclasses.field(default_factory=Lifecycle,
+                                             repr=False, compare=False)
 
     @property
     def arch_id(self) -> str:
         return self.cir.name
+
+    @property
+    def stage(self) -> str:
+        return self.lifecycle.stage
+
+    def wait(self, stage: str = "complete",
+             timeout: Optional[float] = None) -> "ContainerInstance":
+        """Block until ``stage`` is reached; returns self for chaining."""
+        self.lifecycle.wait(stage, timeout)
+        return self
 
 
 # Entry keys the compile stage treats as per-mesh step functions.
@@ -512,8 +670,13 @@ _STEP_ENTRIES = ("train_step", "prefill", "decode_step")
 class LazyBuilder:
     """The staged deployment pipeline: resolve → fetch → assemble → compile.
 
-    Every stage is an explicit method so deployment services (FleetDeployer,
-    launchers) can run, time and skip stages individually.  A shared
+    The stages are no longer strict barriers: after resolution, a
+    ``BuildOrchestrator`` drives fetch / assemble / compile off
+    per-component readiness events (``BuildGraph`` gates), so assembly and
+    jit-staging overlap the weight-asset tail and the instance is READY —
+    deployable — before first-weight-use content has landed.  Every stage
+    is still an explicit method so deployment services (FleetDeployer,
+    launchers) can run, time and skip stages individually; a shared
     ``BuildPlanCache`` (created per-builder when not given) short-circuits
     the resolve stage for repeat deployments.
     """
@@ -523,11 +686,14 @@ class LazyBuilder:
                  link_bandwidth_bps: float = 500e6,
                  plan_cache: Optional[BuildPlanCache] = None,
                  fetch_workers: int = 8,
-                 fetch_simulate_bps: Optional[float] = None):
+                 fetch_simulate_bps: Optional[float] = None,
+                 build_graph: Optional[BuildGraph] = None):
         self.service = service
         self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
         self.plan_cache = BuildPlanCache() if plan_cache is None else plan_cache
+        self.build_graph = build_graph if build_graph is not None \
+            else BuildGraph()
         self.fetch_engine = FetchEngine(self.store, service,
                                         max_workers=fetch_workers,
                                         simulate_bps=fetch_simulate_bps)
@@ -576,10 +742,8 @@ class LazyBuilder:
         report.n_components = len(resolution.components)
         return resolution, plan
 
-    # -- stage 2: fetch (chunk-level delta + active sharing) ------------
-    def _stage_fetch(self, comps: Sequence[UniformComponent],
-                     report: BuildReport) -> None:
-        self.fetch_engine.fetch(comps, report)
+    # -- stage 2: fetch runs through self.fetch_engine, driven by the
+    # BuildOrchestrator so readiness events stream into the stage gates --
 
     # -- stage 3: assemble ----------------------------------------------
     def _stage_assemble(self, cir: CIR, spec: SpecSheet,
@@ -619,8 +783,20 @@ class LazyBuilder:
               overrides: Optional[Mapping[str, Any]] = None,
               assemble: bool = True,
               compile_steps: bool = False,
-              use_plan_cache: bool = True) -> ContainerInstance:
-        """Run the full pipeline: resolve → fetch → assemble → compile."""
+              use_plan_cache: bool = True,
+              overlap: bool = True,
+              block: bool = True) -> ContainerInstance:
+        """Run the full pipeline: resolve, then orchestrated
+        fetch / assemble / compile off per-component readiness.
+
+        ``overlap=False`` runs the legacy barrier pipeline (each stage
+        waits for the previous to fully finish) — accounting is identical,
+        only wall-clock differs.  ``block=False`` returns the instance as
+        soon as its components are pinned (stage PLANNED/FETCHING); callers
+        observe progress through ``instance.wait(stage)``, which also
+        re-raises any build error.
+        """
+        t0 = time.perf_counter()
         report = BuildReport(cir_name=cir.name, platform_id=spec.platform_id,
                              bytes_cir=cir.size_bytes())
 
@@ -632,29 +808,26 @@ class LazyBuilder:
 
         resolution, plan = self._stage_resolve(cir, spec, ctx0, overrides,
                                                report, use_plan_cache)
-        self._stage_fetch(resolution.components, report)
-        self.store.record_build(f"{cir.name}@{spec.platform_id}",
-                                resolution.components)
-
-        bundle = ComponentBundle(resolution)
-        model, entry = self._stage_assemble(cir, spec, bundle, mesh,
-                                            report, assemble)
-        if compile_steps and entry:
-            entry = self._stage_compile(entry, report)
-
         lock = Lockfile(
             cir_digest=cir.digest(), platform_id=spec.platform_id,
             seed=cir.seed, pins=plan.pins, digests=plan.digests)
-
-        return ContainerInstance(cir=cir, spec=spec, bundle=bundle,
-                                 model=model, entry=entry, lock=lock,
+        bundle = ComponentBundle(resolution)
+        inst = ContainerInstance(cir=cir, spec=spec, bundle=bundle,
+                                 model=None, entry={}, lock=lock,
                                  report=report)
+        BuildOrchestrator(self, self.build_graph).start(
+            inst, resolution, mesh=mesh, assemble=assemble,
+            compile_steps=compile_steps, t0=t0, record_build=True,
+            overlap=overlap, block=block)
+        return inst
 
     # ------------------------------------------------------------------
     def build_from_lock(self, cir: CIR, lock: Lockfile, spec: SpecSheet,
                         mesh: Any = None,
                         assemble: bool = True,
-                        compile_steps: bool = False) -> ContainerInstance:
+                        compile_steps: bool = False,
+                        overlap: bool = True,
+                        block: bool = True) -> ContainerInstance:
         """CIR-locked rebuild: CQ-only (no VS/ES), deterministic and
         bit-identical (paper §3.3, §5.4 CIR-locked)."""
         if lock.cir_digest != cir.digest():
@@ -679,15 +852,16 @@ class LazyBuilder:
         report.resolve_s = time.perf_counter() - t0
         report.n_components = len(res.components)
 
-        self._stage_fetch(res.components, report)
         bundle = ComponentBundle(res)
-        model, entry = self._stage_assemble(cir, spec, bundle, mesh,
-                                            report, assemble)
-        if compile_steps and entry:
-            entry = self._stage_compile(entry, report)
-        return ContainerInstance(cir=cir, spec=spec, bundle=bundle,
-                                 model=model, entry=entry, lock=lock,
+        inst = ContainerInstance(cir=cir, spec=spec, bundle=bundle,
+                                 model=None, entry={}, lock=lock,
                                  report=report)
+        # locked rebuilds never record a new build id (they replay one)
+        BuildOrchestrator(self, self.build_graph).start(
+            inst, res, mesh=mesh, assemble=assemble,
+            compile_steps=compile_steps, t0=t0, record_build=False,
+            overlap=overlap, block=block)
+        return inst
 
     # ------------------------------------------------------------------
     def _assemble(self, cir: CIR, spec: SpecSheet, bundle: ComponentBundle,

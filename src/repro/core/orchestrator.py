@@ -1,0 +1,348 @@
+"""Event-driven build orchestration: overlap fetch / assemble / compile.
+
+The staged pipeline (resolve → fetch → assemble → compile) used to be four
+strict barriers: assembly waited for the *entire* fetch — including the
+multi-GB weight-asset tail — even though the fetch engine lands model /
+runtime / kernel components first precisely so assembly could start early.
+This module turns the stage boundaries into **per-component readiness
+events**:
+
+  * ``BuildGraph`` declares which component managers gate which downstream
+    stages: model/runtime/kernel/parallel (and data, whose payloads the
+    assembler calls) gate *assemble*; env gates *compile*; weight assets
+    gate only *first-weight-use* — never deployment readiness.
+  * ``ComponentReadiness`` tracks which components of one build have proven
+    their content present (owned chunks committed, awaited chunks landed,
+    orphans reclaimed) and fires each stage's gate the moment the last
+    gating component is ready.  A sibling claimer dying past the
+    singleflight wait backstop degrades gracefully: the component is
+    still signalled (the build must not deadlock on a crashed peer), with
+    ``fetch_wait_timeouts`` counted and its digest marked incomplete for
+    the next build to re-verify.
+  * ``Lifecycle`` is the container's explicit state machine
+    (PLANNED → FETCHING → ASSEMBLED → COMPILED → READY → COMPLETE) behind
+    ``ContainerInstance.wait(stage)``: deployment services wait for exactly
+    the stage they need instead of blocking on ``build()`` returning.
+  * ``BuildOrchestrator`` drives the stages off those gates, so assemble
+    and jit-staging run concurrently with the asset tail, and records the
+    per-stage wall offsets plus the measured critical path (build start →
+    READY) into the ``BuildReport``.
+
+READY means *deployable*: everything but the asset tail is local, the
+entrypoints are assembled (and staged for the mesh when compilation was
+requested).  COMPLETE means every byte — the weight tail included — has
+landed and the fetch accounting is final; ``wait("weights")`` is the
+first-weight-use gate and is an alias for COMPLETE.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Set
+
+from .component import UniformComponent
+
+# Lifecycle stages, in order.  "complete" (== "weights") is the only stage
+# gated by the asset tail; "ready" is the deployable point.
+STAGES = ("planned", "fetching", "assembled", "compiled", "ready", "complete")
+_STAGE_ALIASES = {"weights": "complete", "fetched": "complete"}
+
+
+class Lifecycle:
+    """Explicit container state machine with waitable stage events.
+
+    Monotonic: ``advance(stage)`` marks that stage and every earlier one
+    complete.  ``fail(exc)`` releases every waiter; waiting on a stage the
+    build never reached re-raises the build's error.
+    """
+
+    def __init__(self) -> None:
+        self._events = {s: threading.Event() for s in STAGES}
+        self._completed: Set[str] = set()
+        self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self.advance("planned")
+
+    @staticmethod
+    def _resolve(stage: str) -> str:
+        s = _STAGE_ALIASES.get(stage, stage)
+        if s not in STAGES:
+            raise KeyError(f"unknown lifecycle stage {stage!r} "
+                           f"(one of {STAGES} or {tuple(_STAGE_ALIASES)})")
+        return s
+
+    @property
+    def stage(self) -> str:
+        with self._lock:
+            for s in reversed(STAGES):
+                if s in self._completed:
+                    return s
+        return "planned"
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def advance(self, stage: str) -> None:
+        stage = self._resolve(stage)
+        with self._lock:
+            for s in STAGES[:STAGES.index(stage) + 1]:
+                self._completed.add(s)
+                self._events[s].set()
+
+    def fail(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._error is None:
+                self._error = exc
+            for ev in self._events.values():
+                ev.set()          # wake every waiter; wait() re-raises
+
+    def reached(self, stage: str) -> bool:
+        with self._lock:
+            return self._resolve(stage) in self._completed
+
+    def wait(self, stage: str, timeout: Optional[float] = None) -> str:
+        """Block until ``stage`` is reached; returns the current stage.
+
+        Raises the build's error if it failed before reaching ``stage``,
+        or ``TimeoutError`` if ``timeout`` elapses first.
+        """
+        stage = self._resolve(stage)
+        fired = self._events[stage].wait(timeout)
+        with self._lock:
+            done = stage in self._completed
+        if not done and self._error is not None:
+            raise self._error
+        if not fired and not done:
+            # done can flip between the event timing out and the re-check —
+            # a stage that was reached is never reported as timed out
+            raise TimeoutError(
+                f"lifecycle stage {stage!r} not reached within {timeout}s")
+        return self.stage
+
+
+class BuildGraph:
+    """Which component managers gate which downstream build stages.
+
+    The defaults encode the assembler's real data dependencies: the model
+    family + runtime/data payloads (and the kernel/parallel variants they
+    pull from the bundle) must be local before assemble; the platform env
+    must be proven before step compilation; weight assets gate only
+    first-weight-use (the COMPLETE stage), so a deployment is READY while
+    the tail still streams.  Managers named by no gate (e.g. ``opt``) gate
+    READY — deployable means everything but the declared tail is local.
+    """
+
+    def __init__(self,
+                 assemble_managers: Sequence[str] = ("model", "runtime",
+                                                     "kernel", "parallel",
+                                                     "data"),
+                 compile_managers: Sequence[str] = ("env",),
+                 tail_managers: Sequence[str] = ("asset",)):
+        self.assemble_managers: FrozenSet[str] = frozenset(assemble_managers)
+        self.compile_managers: FrozenSet[str] = frozenset(compile_managers)
+        self.tail_managers: FrozenSet[str] = frozenset(tail_managers)
+
+    def stage_of(self, manager: str) -> str:
+        """The earliest stage a component of ``manager`` gates."""
+        if manager in self.assemble_managers:
+            return "assemble"
+        if manager in self.compile_managers:
+            return "compile"
+        if manager in self.tail_managers:
+            return "complete"
+        return "ready"
+
+    def gates_for(self, comps: Sequence[UniformComponent]
+                  ) -> Dict[str, Set[str]]:
+        """Concrete gate sets for one build: stage -> gating digests.
+
+        ``ready`` includes every non-tail component (assemble/compile gates
+        are subsets of it by construction); ``complete`` includes all.
+        """
+        gates: Dict[str, Set[str]] = {"assemble": set(), "compile": set(),
+                                      "ready": set(), "complete": set()}
+        for c in comps:
+            dg = c.digest()
+            stage = self.stage_of(c.manager)
+            if stage == "assemble":
+                gates["assemble"].add(dg)
+            elif stage == "compile":
+                gates["compile"].add(dg)
+            if stage != "complete":
+                gates["ready"].add(dg)
+            gates["complete"].add(dg)
+        return gates
+
+
+class ComponentReadiness:
+    """Per-build readiness tracker the fetch engine signals into.
+
+    ``mark_ready(c)`` is called the moment a component's content is proven
+    present — its owned chunks committed, awaited chunks landed (or
+    reclaimed and re-fetched).  Each stage's event fires when its last
+    gating component is ready; ``fail`` releases every gate so stage
+    drivers observe the fetch error instead of hanging.
+    """
+
+    def __init__(self, comps: Sequence[UniformComponent],
+                 graph: BuildGraph):
+        self._lock = threading.Lock()
+        self._pending = graph.gates_for(comps)
+        self._events = {stage: threading.Event() for stage in self._pending}
+        self._error: Optional[BaseException] = None
+        for stage, pend in self._pending.items():
+            if not pend:
+                self._events[stage].set()
+
+    def mark_ready(self, c: UniformComponent) -> None:
+        dg = c.digest()
+        fire: List[threading.Event] = []
+        with self._lock:
+            for stage, pend in self._pending.items():
+                pend.discard(dg)
+                if not pend and not self._events[stage].is_set():
+                    fire.append(self._events[stage])
+        for ev in fire:
+            ev.set()
+
+    def fail(self, exc: BaseException) -> None:
+        with self._lock:
+            if self._error is None:
+                self._error = exc
+        for ev in self._events.values():
+            ev.set()
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def ready(self, stage: str) -> bool:
+        with self._lock:
+            return not self._pending[stage]
+
+    def wait(self, stage: str, timeout: Optional[float] = None) -> None:
+        """Block until every component gating ``stage`` is ready."""
+        self._events[stage].wait(timeout)
+        with self._lock:
+            done = not self._pending[stage]
+        if not done and self._error is not None:
+            raise self._error
+        if not done:
+            raise TimeoutError(
+                f"build stage gate {stage!r} not ready within {timeout}s")
+
+
+class BuildOrchestrator:
+    """Drives one build's stages off per-component readiness events.
+
+    With ``overlap=True`` the fetch runs on a background thread and each
+    downstream stage starts the moment its ``BuildGraph`` gate fires —
+    assemble and jit-staging run under the asset tail, and READY does not
+    wait for first-weight-use content.  With ``overlap=False`` the legacy
+    barrier pipeline runs (fetch completes before assemble begins); both
+    modes produce byte-identical fetch accounting and identical locks.
+    """
+
+    def __init__(self, builder: Any, graph: Optional[BuildGraph] = None):
+        self.builder = builder
+        self.graph = graph if graph is not None else BuildGraph()
+
+    # ------------------------------------------------------------------
+    def start(self, inst: Any, resolution: Any, *,
+              mesh: Any = None,
+              assemble: bool = True,
+              compile_steps: bool = False,
+              t0: Optional[float] = None,
+              record_build: bool = True,
+              overlap: bool = True,
+              block: bool = True) -> None:
+        """Run (``block=True``) or launch (``block=False``) the pipeline.
+
+        Non-blocking callers get the stages driven on a daemon thread and
+        observe progress/errors through ``inst.wait(stage)``.
+        """
+        t0 = time.perf_counter() if t0 is None else t0
+        if block:
+            self._drive(inst, resolution, mesh, assemble, compile_steps,
+                        t0, record_build, overlap)
+        else:
+            def runner() -> None:
+                try:
+                    self._drive(inst, resolution, mesh, assemble,
+                                compile_steps, t0, record_build, overlap)
+                except BaseException:
+                    pass      # delivered to waiters via Lifecycle.fail
+            threading.Thread(target=runner, name="cir-build-driver",
+                             daemon=True).start()
+
+    # ------------------------------------------------------------------
+    def _drive(self, inst: Any, resolution: Any, mesh: Any, assemble: bool,
+               compile_steps: bool, t0: float, record_build: bool,
+               overlap: bool) -> None:
+        report, life = inst.report, inst.lifecycle
+        comps = resolution.components
+        readiness = ComponentReadiness(comps, self.graph)
+        report.orchestrated = overlap
+        fetch_exc: List[BaseException] = []
+        fetch_thread: Optional[threading.Thread] = None
+
+        def run_fetch() -> None:
+            try:
+                self.builder.fetch_engine.fetch(comps, report,
+                                                readiness=readiness)
+            except BaseException as e:  # noqa: BLE001 — relayed to waiters
+                fetch_exc.append(e)
+                readiness.fail(e)
+
+        # report fields are always written BEFORE the stage event fires, so
+        # a waiter woken by wait(stage) never reads stale zeros
+        try:
+            report.stage_s["fetching"] = time.perf_counter() - t0
+            life.advance("fetching")
+            if overlap:
+                fetch_thread = threading.Thread(target=run_fetch,
+                                                name="cir-fetch",
+                                                daemon=True)
+                fetch_thread.start()
+            else:
+                run_fetch()                    # barrier: fetch fully lands
+                if fetch_exc:
+                    raise fetch_exc[0]
+
+            readiness.wait("assemble")
+            model, entry = self.builder._stage_assemble(
+                inst.cir, inst.spec, inst.bundle, mesh, report, assemble)
+            inst.model, inst.entry = model, entry
+            report.stage_s["assembled"] = time.perf_counter() - t0
+            life.advance("assembled")
+
+            if compile_steps and entry:
+                readiness.wait("compile")
+                inst.entry = self.builder._stage_compile(entry, report)
+            report.stage_s["compiled"] = time.perf_counter() - t0
+            life.advance("compiled")
+
+            readiness.wait("ready")
+            report.critical_path_s = time.perf_counter() - t0
+            report.stage_s["ready"] = report.critical_path_s
+            life.advance("ready")
+
+            if fetch_thread is not None:
+                fetch_thread.join()            # asset tail / accounting
+                if fetch_exc:
+                    raise fetch_exc[0]
+            if record_build:
+                self.builder.store.record_build(
+                    f"{inst.cir.name}@{inst.spec.platform_id}", comps)
+            report.stage_s["complete"] = time.perf_counter() - t0
+            barrier_sum = report.resolve_s + report.fetch_s \
+                + report.assemble_s + report.compile_s
+            report.overlap_s = max(0.0,
+                                   barrier_sum - report.critical_path_s)
+            life.advance("complete")
+        except BaseException as e:
+            if fetch_thread is not None and fetch_thread.is_alive():
+                fetch_thread.join()            # settle claims + accounting
+            life.fail(e)
+            raise

@@ -146,7 +146,13 @@ def probe_host(platform_id: str = "local",
     import jax  # local import: keep module import free of jax side effects
 
     backend = jax.default_backend()
-    chip = chip or (TPU_V5E if backend == "tpu" else CPU_HOST)
+    if chip is None:
+        if backend == "tpu":
+            chip = TPU_V5E
+        elif backend in ("gpu", "cuda", "rocm"):
+            chip = GPU_A100
+        else:
+            chip = CPU_HOST
     return SpecSheet(
         platform_id=platform_id,
         chip=chip,

@@ -22,7 +22,8 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.cir import CIR
-from ..core.lazybuild import (BuildPlanCache, ContainerInstance, LazyBuilder)
+from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
+                              LazyBuilder)
 from ..core.registry import UniformComponentService
 from ..core.spec import SpecSheet
 from ..core.store import LocalComponentStore
@@ -30,11 +31,20 @@ from ..core.store import LocalComponentStore
 
 @dataclasses.dataclass
 class PlatformDeployment:
-    """Outcome of deploying the CIR to one platform of the fleet."""
+    """Outcome of deploying the CIR to one platform of the fleet.
+
+    ``ready_s`` is the wall time until the instance reached lifecycle READY
+    (deployable — the weight tail may still have been streaming); ``wall_s``
+    runs until COMPLETE.  ``report`` is present even for failed builds that
+    got past resolution, so fleet byte accounting can include their partial
+    fetch work instead of silently dropping it.
+    """
     platform_id: str
     instance: Optional[ContainerInstance]
     error: Optional[str] = None
     wall_s: float = 0.0
+    ready_s: float = 0.0
+    report: Optional[BuildReport] = None
 
     @property
     def ok(self) -> bool:
@@ -58,6 +68,11 @@ class FleetResult:
     fetch_serial_s_total: float = 0.0  # sum of per-task fetch times
     fetch_s_wall: float = 0.0         # slowest build's fetch wall time
     fetch_concurrency: int = 1
+    # -- lifecycle wall-clock accounting (event-driven orchestrator) ----
+    n_failed: int = 0                 # platforms whose build did not finish
+    ready_s_wall: float = 0.0         # slowest platform's wall to READY
+    stage_walls: Dict[str, float] = dataclasses.field(default_factory=dict)
+    #                                 ^ per-stage max wall offset across fleet
 
     @property
     def ok(self) -> bool:
@@ -73,7 +88,8 @@ class FleetResult:
     def summary(self) -> str:
         lines = [f"fleet deploy of {self.cir_name}: "
                  f"{sum(d.ok for d in self.deployments)}/"
-                 f"{len(self.deployments)} platforms, "
+                 f"{len(self.deployments)} platforms "
+                 f"({self.n_failed} failed), "
                  f"sharing rate {self.sharing_rate * 100:.1f}%, "
                  f"{self.plan_cache_hits} plan-cache hits"]
         if self.chunks_hit_total or self.chunks_missed_total:
@@ -85,6 +101,13 @@ class FleetResult:
                 f"fetch {self.fetch_s_wall * 1e3:.1f} ms wall vs "
                 f"{self.fetch_serial_s_total * 1e3:.1f} ms serial "
                 f"@ width {self.fetch_concurrency}")
+        if self.ready_s_wall:
+            lines.append(
+                f"  lifecycle: fleet READY at {self.ready_s_wall * 1e3:.1f} "
+                f"ms, COMPLETE at {self.wall_s * 1e3:.1f} ms"
+                + (f" (asset tail overlapped "
+                   f"{(self.wall_s - self.ready_s_wall) * 1e3:.1f} ms)"
+                   if self.wall_s > self.ready_s_wall else ""))
         for d in self.deployments:
             if d.ok:
                 rep = d.instance.report
@@ -93,7 +116,10 @@ class FleetResult:
                     f"{rep.bytes_wire_fetched / 2**20:8.1f} MiB "
                     f"({'plan-replay' if rep.plan_cache_hit else 'resolved'})")
             else:
-                lines.append(f"  {d.platform_id:20s} FAILED: {d.error}")
+                partial = f", partial fetch {d.report.bytes_wire_fetched}B" \
+                    if d.report is not None else ""
+                lines.append(f"  {d.platform_id:20s} FAILED: "
+                             f"{d.error}{partial}")
         return "\n".join(lines)
 
 
@@ -113,7 +139,8 @@ class FleetDeployer:
                  link_bandwidth_bps: float = 500e6,
                  max_workers: int = 8,
                  fetch_workers: int = 8,
-                 fetch_simulate_bps: Optional[float] = None):
+                 fetch_simulate_bps: Optional[float] = None,
+                 overlap: bool = True):
         self.store = store if store is not None else ChunkedComponentStore()
         self.plan_cache = plan_cache or BuildPlanCache()
         self.builder = LazyBuilder(service, self.store,
@@ -122,6 +149,7 @@ class FleetDeployer:
                                    fetch_workers=fetch_workers,
                                    fetch_simulate_bps=fetch_simulate_bps)
         self.max_workers = max_workers
+        self.overlap = overlap
 
     # ------------------------------------------------------------------
     def deploy(self, cir: CIR, specs: Sequence[SpecSheet],
@@ -129,7 +157,14 @@ class FleetDeployer:
                overrides: Optional[Mapping[str, Any]] = None,
                assemble: bool = False,
                compile_steps: bool = False) -> FleetResult:
-        """Deploy ``cir`` to every platform in ``specs`` concurrently."""
+        """Deploy ``cir`` to every platform in ``specs`` concurrently.
+
+        Each platform's build runs non-blocking through the event-driven
+        orchestrator; the deployer waits on the instance *lifecycle* —
+        recording the wall to READY (deployable) separately from COMPLETE
+        (weight tail landed, accounting final) — instead of blocking on
+        ``build()`` returning.
+        """
         hits_before = self.plan_cache.stats.hits
         stored_before = self.store.stats.bytes_stored
         requested_before = self.store.stats.bytes_requested
@@ -137,16 +172,31 @@ class FleetDeployer:
 
         def one(spec: SpecSheet) -> PlatformDeployment:
             t = time.perf_counter()
+            inst: Optional[ContainerInstance] = None
+            ready_s = 0.0
             try:
                 inst = self.builder.build(
                     cir, spec, mesh=mesh, overrides=overrides,
-                    assemble=assemble, compile_steps=compile_steps)
+                    assemble=assemble, compile_steps=compile_steps,
+                    overlap=self.overlap, block=False)
+                inst.wait("ready")
+                ready_s = time.perf_counter() - t
+                inst.wait("complete")
                 return PlatformDeployment(spec.platform_id, inst,
-                                          wall_s=time.perf_counter() - t)
+                                          wall_s=time.perf_counter() - t,
+                                          ready_s=ready_s,
+                                          report=inst.report)
             except Exception as e:  # noqa: BLE001 — per-platform isolation
-                return PlatformDeployment(spec.platform_id, None,
-                                          error=f"{type(e).__name__}: {e}",
-                                          wall_s=time.perf_counter() - t)
+                # a build that got past resolution leaves a partial report:
+                # its fetch bytes are real work the fleet totals must count,
+                # and a build that reached READY before the tail failed
+                # keeps its measured time-to-deployable
+                return PlatformDeployment(
+                    spec.platform_id, None,
+                    error=f"{type(e).__name__}: {e}",
+                    wall_s=time.perf_counter() - t,
+                    ready_s=ready_s,
+                    report=inst.report if inst is not None else None)
 
         workers = max(1, min(self.max_workers, len(specs)))
         if workers == 1:
@@ -155,12 +205,18 @@ class FleetDeployer:
             with ThreadPoolExecutor(max_workers=workers) as pool:
                 deployments = list(pool.map(one, specs))
 
-        reports = [d.instance.report for d in deployments if d.ok]
+        # all reports — failed builds' partial fetch work included, so the
+        # fleet cannot overstate sharing by dropping bytes it transferred
+        reports = [d.report for d in deployments if d.report is not None]
         fetched = sum(r.bytes_fetched for r in reports)
         total = sum(r.bytes_total_components for r in reports)
         # sharing over THIS deploy only (the store may serve many deploys)
         req = self.store.stats.bytes_requested - requested_before
         stored = self.store.stats.bytes_stored - stored_before
+        stage_walls: Dict[str, float] = {}
+        for r in reports:
+            for stage, off in r.stage_s.items():
+                stage_walls[stage] = max(stage_walls.get(stage, 0.0), off)
         return FleetResult(
             cir_name=cir.name,
             deployments=deployments,
@@ -177,6 +233,10 @@ class FleetDeployer:
             fetch_s_wall=max((r.fetch_s for r in reports), default=0.0),
             fetch_concurrency=max((r.fetch_concurrency for r in reports),
                                   default=1),
+            n_failed=sum(not d.ok for d in deployments),
+            ready_s_wall=max((d.ready_s for d in deployments if d.ok),
+                             default=0.0),
+            stage_walls=stage_walls,
         )
 
     # ------------------------------------------------------------------

@@ -191,3 +191,68 @@ def test_locked_rebuild_still_bit_identical(service, pb):
     assert [c.digest() for c in relock.bundle.components()] == \
         list(inst.lock.digests)
     assert relock.report.locked
+
+
+# ---------------------------------------------------------------------------
+# LRU cap (long-lived deployment services must not grow the cache forever)
+# ---------------------------------------------------------------------------
+
+def _plan(tag: str):
+    from repro.core import BuildPlan
+    return BuildPlan(cir_digest=tag, spec_digest="s", catalog_epoch="e",
+                     pins=(("model", "m", "1.0", "env"),), digests=(tag,))
+
+
+def test_plan_cache_lru_cap_evicts_oldest():
+    cache = BuildPlanCache(max_entries=2)
+    cache.put("k1", _plan("a"))
+    cache.put("k2", _plan("b"))
+    cache.put("k3", _plan("c"))
+    assert len(cache) == 2
+    assert cache.get("k1") is None          # evicted (oldest)
+    assert cache.get("k2") is not None
+    assert cache.get("k3") is not None
+    assert cache.stats.evictions == 1
+
+
+def test_plan_cache_lru_get_refreshes_recency():
+    cache = BuildPlanCache(max_entries=2)
+    cache.put("k1", _plan("a"))
+    cache.put("k2", _plan("b"))
+    assert cache.get("k1") is not None      # k1 now most recent
+    cache.put("k3", _plan("c"))
+    assert cache.get("k2") is None          # k2 was LRU
+    assert cache.get("k1") is not None
+    assert cache.stats.evictions == 1
+
+
+def test_plan_cache_lru_cap_on_disk(tmp_path):
+    import os
+    path = str(tmp_path / "plans")
+    cache = BuildPlanCache(path, max_entries=2)
+    for i in range(4):
+        cache.put(f"k{i}", _plan(str(i)))
+    assert len(cache) == 2
+    assert cache.stats.evictions == 2
+    on_disk = {fn for fn in os.listdir(path) if fn.endswith(".json")}
+    assert on_disk == {"k2.json", "k3.json"}    # evicted files removed
+    # a restart over an over-full directory trims to the cap too
+    cache2 = BuildPlanCache(path, max_entries=1)
+    assert len(cache2) == 1
+    assert cache2.stats.evictions == 1
+
+
+def test_plan_cache_lru_builder_integration(service, pb):
+    """A capped cache keeps serving the hot path: the newest plan replays,
+    the oldest is recomputed on demand."""
+    cache = BuildPlanCache(max_entries=1)
+    lb = LazyBuilder(service, plan_cache=cache)
+    cir = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    lb.build(cir, tpu_single_pod(), assemble=False)
+    lb.build(cir, cpu_smoke(), assemble=False)       # evicts the tpu plan
+    assert len(cache) == 1
+    assert cache.stats.evictions == 1
+    warm = lb.build(cir, cpu_smoke(), assemble=False)
+    assert warm.report.plan_cache_hit
+    redo = lb.build(cir, tpu_single_pod(), assemble=False)
+    assert not redo.report.plan_cache_hit            # evicted → re-resolved
