@@ -1,0 +1,197 @@
+"""CI bench-regression gate.
+
+Re-runs the smoke benchmarks and compares their key metrics against the
+**committed** ``BENCH_*.json`` baselines with per-metric tolerance bands,
+exiting non-zero on regression — a perf regression fails the PR instead of
+silently shipping a worse baseline artifact.
+
+Baselines are snapshotted into memory *before* the fresh runs, because the
+fresh results are written to the same ``BENCH_*.json`` paths when
+``--write`` is given or ``CI`` is set (so the CI artifact upload records
+the fresh trajectory); plain local runs write to a temp directory and
+leave the committed baselines untouched.
+
+Tolerances are per metric: byte-accounting metrics are deterministic and
+get tight bands; wall-clock metrics (ready-reduction, fetch speedup) get
+wide bands sized for noisy shared CI runners — the gate exists to catch a
+*collapsed* pipeline (overlap gone, peers never selected, delta fetch
+re-transferring everything), not 5% scheduler jitter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import tempfile
+from typing import Callable, Dict, List, Optional
+
+FETCH = "BENCH_fetch.json"
+PIPELINE = "BENCH_pipeline.json"
+DISTRIBUTION = "BENCH_distribution.json"
+
+
+@dataclasses.dataclass
+class Check:
+    metric: str
+    baseline: Optional[float]
+    fresh: Optional[float]
+    higher_is_better: bool
+    rel_tol: float                  # allowed fractional slack off baseline
+    abs_limit: Optional[float] = None   # hard bound regardless of baseline
+
+    @property
+    def skipped(self) -> bool:
+        """Only a missing *baseline* skips a check (the PR introducing a
+        new benchmark cannot compare against history).  A baseline whose
+        fresh counterpart went missing is a FAILURE — otherwise renaming a
+        metric would silently disarm the gate."""
+        return self.baseline is None
+
+    @property
+    def bound(self) -> Optional[float]:
+        if self.baseline is None:
+            return self.abs_limit
+        if self.higher_is_better:
+            b = self.baseline * (1.0 - self.rel_tol)
+            return max(b, self.abs_limit) if self.abs_limit is not None else b
+        b = self.baseline * (1.0 + self.rel_tol)
+        return min(b, self.abs_limit) if self.abs_limit is not None else b
+
+    @property
+    def ok(self) -> bool:
+        if self.skipped:
+            return True
+        if self.fresh is None:
+            return False        # metric vanished from the fresh run
+        assert self.bound is not None
+        return self.fresh >= self.bound if self.higher_is_better \
+            else self.fresh <= self.bound
+
+    def row(self) -> str:
+        if self.skipped:
+            return f"  SKIP  {self.metric:58s} (no baseline)"
+        if self.fresh is None:
+            return (f"  FAIL  {self.metric:58s} missing from the fresh run "
+                    f"(baseline {self.baseline:.3f})")
+        arrow = ">=" if self.higher_is_better else "<="
+        return (f"  {'ok' if self.ok else 'FAIL':4s}  {self.metric:58s} "
+                f"{self.fresh:12.3f} {arrow} {self.bound:10.3f} "
+                f"(baseline {self.baseline:.3f})")
+
+
+def _get(d: Optional[Dict], *path: str) -> Optional[float]:
+    for k in path:
+        if not isinstance(d, dict) or k not in d:
+            return None
+        d = d[k]
+    return float(d) if isinstance(d, (int, float)) else None
+
+
+def _load(path: str) -> Optional[Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def run_fresh(out_dir: str) -> Dict[str, Dict]:
+    """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
+    from . import build_time, distribution
+
+    print("== re-running smoke benchmarks (this is the gate's evidence) ==")
+    delta = build_time.delta_redeploy(quiet=True)
+    conc = build_time.fetch_concurrency(widths=(1, 8), quiet=True)
+    fleet = build_time.fleet_fetch(quiet=True)
+    fetch_path = build_time.write_bench_fetch(
+        path=os.path.join(out_dir, FETCH), smoke=True,
+        delta=delta, concurrency=conc, fleet=fleet)
+    pipe = build_time.pipeline_overlap(quiet=True)
+    pipe_path = build_time.write_bench_pipeline(
+        path=os.path.join(out_dir, PIPELINE), smoke=True, rows=pipe)
+    dist = distribution.edge_fanout(quiet=True)
+    dist_path = distribution.write_bench_distribution(
+        path=os.path.join(out_dir, DISTRIBUTION), smoke=True, rows=dist)
+    return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
+            DISTRIBUTION: _load(dist_path)}
+
+
+def build_checks(base: Dict[str, Optional[Dict]],
+                 fresh: Dict[str, Optional[Dict]]) -> List[Check]:
+    checks: List[Check] = []
+
+    def add(fname: str, metric_path: List[str], higher: bool, tol: float,
+            abs_limit: Optional[float] = None,
+            reduce_avg: Optional[Callable[[Dict], Optional[float]]] = None
+            ) -> None:
+        b, f = base.get(fname), fresh.get(fname)
+        if reduce_avg is not None:
+            bv = reduce_avg(b) if b is not None else None
+            fv = reduce_avg(f) if f is not None else None
+        else:
+            bv, fv = _get(b, *metric_path), _get(f, *metric_path)
+        checks.append(Check(
+            metric=f"{fname}:{'.'.join(metric_path)}",
+            baseline=bv, fresh=fv, higher_is_better=higher, rel_tol=tol,
+            abs_limit=abs_limit))
+
+    # -- chunk-delta fetch: deterministic byte accounting, tight band ----
+    def avg_delta_saved(doc: Dict) -> Optional[float]:
+        rows = doc.get("delta_redeploy", {})
+        common = [a for a in rows
+                  if a in (fresh.get(FETCH) or {}).get("delta_redeploy", {})
+                  and a in (base.get(FETCH) or {}).get("delta_redeploy", {})]
+        if not common:
+            return None
+        return sum(rows[a]["delta_saved_pct"] for a in common) / len(common)
+
+    add(FETCH, ["delta_redeploy", "avg_delta_saved_pct"], True, 0.10,
+        reduce_avg=avg_delta_saved)
+    # singleflight invariant: a fleet must never pay for a chunk twice
+    add(FETCH, ["fleet_fetch", "double_charged_bytes"], False, 0.0,
+        abs_limit=0.0)
+    # wall-clock: wide band, catches a serialized pool, not jitter
+    add(FETCH, ["fetch_concurrency", "8", "speedup_vs_serial"], True, 0.65)
+
+    # -- event-driven pipeline: wall-clock, wide band --------------------
+    add(PIPELINE, ["avg_ready_reduction_pct"], True, 0.55, abs_limit=25.0)
+
+    # -- peer distribution: deterministic byte accounting ----------------
+    add(DISTRIBUTION, ["avg_peer_offload_ratio"], True, 0.10)
+    add(DISTRIBUTION, ["avg_upstream_vs_baseline_pct"], False, 0.15,
+        abs_limit=40.0)
+    return checks
+
+
+def main(argv: List[str]) -> int:
+    base = {name: _load(name) for name in (FETCH, PIPELINE, DISTRIBUTION)}
+    missing = [n for n, d in base.items() if d is None]
+    if missing:
+        print(f"warning: no committed baseline for {', '.join(missing)} — "
+              f"its checks will be skipped", file=sys.stderr)
+
+    write_here = "--write" in argv or bool(os.environ.get("CI"))
+    if write_here:
+        fresh = run_fresh(".")
+    else:
+        with tempfile.TemporaryDirectory() as td:
+            fresh = run_fresh(td)
+
+    checks = build_checks(base, fresh)
+    print("\n== bench-regression gate ==")
+    for c in checks:
+        print(c.row())
+    failed = [c for c in checks if not c.ok]
+    if failed:
+        print(f"\n{len(failed)} metric(s) regressed beyond tolerance. "
+              f"If this is an intentional trade-off, refresh the committed "
+              f"BENCH_*.json baselines in the same PR (run the full "
+              f"benchmarks, not --smoke) and say why in the PR description.")
+        return 1
+    print("\nall metrics within tolerance of the committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

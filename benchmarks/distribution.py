@@ -1,0 +1,271 @@
+"""Peer-to-peer chunk distribution across a fleet topology — the sky/edge
+fan-out scenario (paper §1's "cloud-edge continuum" deployment, made
+measurable).
+
+One CIR is deployed to 1 cloud seed + N edge nodes.  Every node has its own
+chunk store; the cloud's registry link is fat, the edges' registry links are
+thin, but cloud↔edge and edge↔edge peer links are fast.  With peer
+distribution on, the cloud pulls the content once from upstream and the
+edges source their chunks from the cloud (and from each other, mid-build,
+via commit-time announcements) — total upstream wire bytes approach the
+1-node cost instead of scaling with N.  The no-peer baseline runs the exact
+same per-node plumbing with source selection forced upstream, so per-node
+chunk accounting is byte-identical between the two runs and the comparison
+isolates *where* bytes came from, which is the entire claim.
+
+Wall-clock columns deploy again with per-link simulated sleeps (bandwidths
+scaled so the suite stays CI-sized; the ratios, not the absolute seconds,
+are the measurement).
+
+Writes ``BENCH_distribution.json`` (CI artifact + regression-gate baseline;
+see ``benchmarks.check_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs import ARCHS
+from repro.core import PreBuilder, catalog, cpu_smoke, tpu_single_pod
+from repro.deploy import FleetDeployer, FleetTopology
+
+from .common import SMOKE_ARCHS as _SMOKE_ARCHS, csv_row
+
+# Simulated link speeds for the wall-clock columns (bytes/s): exactly the
+# ``FleetTopology.edge_fanout`` real-world shape (10 Gbps cloud uplink /
+# 50 Mbps edge uplink / 1-2 Gbps peering), uniformly scaled 200x so
+# multi-GB suites finish in CI-sized wall time — one factor for every
+# link, so the measured ratios transfer to the real shape.
+SIM_SCALE = 200.0
+SIM_CLOUD_UPSTREAM_BPS = 1.25e9 * SIM_SCALE
+SIM_EDGE_UPSTREAM_BPS = 6.25e6 * SIM_SCALE
+SIM_CLOUD_EDGE_BPS = 125e6 * SIM_SCALE
+SIM_EDGE_EDGE_BPS = 2.5e8 * SIM_SCALE
+
+# Acceptance floor: with 1 cloud + 4 edges, peer distribution must cut total
+# upstream wire bytes to at most this fraction of the no-peer baseline.
+UPSTREAM_VS_BASELINE_CEILING_PCT = 40.0
+
+
+def _fanout_topology(n_edges: int, simulate: bool) -> FleetTopology:
+    if simulate:
+        return FleetTopology.edge_fanout(
+            n_edges,
+            cloud_upstream_bps=SIM_CLOUD_UPSTREAM_BPS,
+            edge_upstream_bps=SIM_EDGE_UPSTREAM_BPS,
+            cloud_edge_bps=SIM_CLOUD_EDGE_BPS,
+            edge_edge_bps=SIM_EDGE_EDGE_BPS)
+    return FleetTopology.edge_fanout(n_edges)
+
+
+def _edge_specs(n_edges: int):
+    return [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+            for i in range(n_edges)]
+
+
+def _deploy_fanout(arch_id: str, n_edges: int, use_peers: bool,
+                   simulate: bool = False) -> Dict[str, Dict]:
+    """One full fan-out: cloud seed deploys first (its content is what the
+    edges will peer from), then every edge concurrently.  Returns per-node
+    traffic and accounting columns plus fleet walls."""
+    svc = catalog.build_service()
+    pb = PreBuilder(svc)
+    cir = pb.prebuild(ARCHS[arch_id], entrypoint="serve")
+    topo = _fanout_topology(n_edges, simulate)
+    cloud_spec = tpu_single_pod()
+    edge_specs = _edge_specs(n_edges)
+    topo.place(cloud_spec.platform_id, "cloud")
+    for i, s in enumerate(edge_specs):
+        topo.place(s.platform_id, f"edge-{i}")
+    fd = FleetDeployer(svc, topology=topo, use_peers=use_peers,
+                       simulate_links=simulate)
+    seed_res = fd.deploy(cir, [cloud_spec])
+    assert seed_res.ok, seed_res.summary()
+    edge_res = fd.deploy(cir, edge_specs)
+    assert edge_res.ok, edge_res.summary()
+
+    per_node: Dict[str, Dict] = {}
+    for res in (seed_res, edge_res):
+        for d in res.deployments:
+            t = res.node_traffic[d.node_id]
+            assert t.bytes_total == d.report.bytes_delta_fetched, \
+                f"{d.node_id}: wire split {t.bytes_total} != delta " \
+                f"{d.report.bytes_delta_fetched}"
+            assert d.report.bytes_delta_fetched <= d.report.bytes_fetched, \
+                f"{d.node_id}: delta exceeds component fetch bytes"
+            per_node[d.node_id] = {
+                "bytes_from_upstream": t.bytes_from_upstream,
+                "bytes_from_peers": t.bytes_from_peers,
+                "peer_sources": dict(t.peer_sources),
+                "peer_fallbacks": t.peer_fallbacks,
+                "bytes_delta_fetched": d.report.bytes_delta_fetched,
+                "bytes_fetched": d.report.bytes_fetched,
+                "chunks_hit": d.report.chunks_hit,
+                "chunks_missed": d.report.chunks_missed,
+            }
+    upstream = sum(n["bytes_from_upstream"] for n in per_node.values())
+    peer = sum(n["bytes_from_peers"] for n in per_node.values())
+    return {
+        "per_node": per_node,
+        "upstream_bytes": upstream,
+        "peer_bytes": peer,
+        "peer_offload_ratio": peer / (upstream + peer)
+        if upstream + peer else 0.0,
+        "peer_fallbacks": sum(n["peer_fallbacks"] for n in per_node.values()),
+        "seed_wall_s": seed_res.wall_s,
+        "edge_wall_s": edge_res.wall_s,
+        "edge_ready_s_wall": edge_res.ready_s_wall,
+    }
+
+
+def edge_fanout(archs: Sequence[str] = _SMOKE_ARCHS, n_edges: int = 4,
+                quiet: bool = False) -> Dict[str, Dict]:
+    """The headline scenario: byte accounting with peers vs the no-peer
+    baseline (identical per-node chunk columns required), then the same
+    fan-out again on simulated links for the wall-clock ratio."""
+    rows: Dict[str, Dict] = {}
+    for arch_id in archs:
+        peer = _deploy_fanout(arch_id, n_edges, use_peers=True)
+        base = _deploy_fanout(arch_id, n_edges, use_peers=False)
+        # source selection moves bytes between links; it must not change
+        # what each node fetches
+        acct = ("bytes_delta_fetched", "bytes_fetched", "chunks_hit",
+                "chunks_missed")
+        for node, cols in peer["per_node"].items():
+            for f in acct:
+                assert cols[f] == base["per_node"][node][f], \
+                    f"{arch_id}/{node}: {f} differs peer={cols[f]} " \
+                    f"baseline={base['per_node'][node][f]}"
+        sim_peer = _deploy_fanout(arch_id, n_edges, use_peers=True,
+                                  simulate=True)
+        sim_base = _deploy_fanout(arch_id, n_edges, use_peers=False,
+                                  simulate=True)
+        ratio_pct = 100.0 * peer["upstream_bytes"] / base["upstream_bytes"]
+        rows[arch_id] = {
+            "n_edges": n_edges,
+            "upstream_bytes_peer": peer["upstream_bytes"],
+            "upstream_bytes_baseline": base["upstream_bytes"],
+            "upstream_vs_baseline_pct": ratio_pct,
+            "peer_bytes": peer["peer_bytes"],
+            "peer_offload_ratio": peer["peer_offload_ratio"],
+            "peer_fallbacks": peer["peer_fallbacks"],
+            "per_node_accounting_identical": True,
+            "per_node": peer["per_node"],
+            "sim_edge_wall_peer_s": sim_peer["edge_wall_s"],
+            "sim_edge_wall_baseline_s": sim_base["edge_wall_s"],
+            "sim_edge_wall_reduction_pct": 100.0 * (
+                1 - sim_peer["edge_wall_s"]
+                / max(sim_base["edge_wall_s"], 1e-12)),
+        }
+        assert ratio_pct <= UPSTREAM_VS_BASELINE_CEILING_PCT, \
+            f"{arch_id}: peer distribution left {ratio_pct:.1f}% of " \
+            f"baseline upstream bytes on the registry link " \
+            f"(ceiling {UPSTREAM_VS_BASELINE_CEILING_PCT}%)"
+    if not quiet:
+        print(f"-- edge fan-out (1 cloud seed + {n_edges} edge nodes, "
+              f"serve CIRs)")
+        print(f"{'arch':24s} {'base upstr':>10s} {'peer upstr':>10s} "
+              f"{'ratio':>6s} {'offload':>8s} {'sim wall':>15s}")
+        for a, r in rows.items():
+            print(f"{a:24s} {r['upstream_bytes_baseline']/2**30:>8.2f} G "
+                  f"{r['upstream_bytes_peer']/2**30:>8.2f} G "
+                  f"{r['upstream_vs_baseline_pct']:>5.1f}% "
+                  f"{r['peer_offload_ratio']*100:>7.1f}% "
+                  f"{r['sim_edge_wall_baseline_s']:>6.2f}s"
+                  f"->{r['sim_edge_wall_peer_s']:.2f}s")
+        avg = sum(r["upstream_vs_baseline_pct"] for r in rows.values()) \
+            / len(rows)
+        print(f"avg upstream wire vs no-peer baseline: {avg:.1f}%   "
+              f"(ceiling {UPSTREAM_VS_BASELINE_CEILING_PCT}%; ideal "
+              f"{100.0 / (n_edges + 1):.1f}% at N={n_edges})")
+    return rows
+
+
+def fanout_sweep(arch_id: str = "starcoder2-3b",
+                 edge_counts: Sequence[int] = (2, 4, 8),
+                 quiet: bool = False) -> Dict[int, Dict]:
+    """Upstream bytes vs N: with peers the total stays near the 1-node
+    cost, so the per-node upstream share drops near-linearly with N."""
+    rows: Dict[int, Dict] = {}
+    for n in edge_counts:
+        peer = _deploy_fanout(arch_id, n, use_peers=True)
+        base = _deploy_fanout(arch_id, n, use_peers=False)
+        rows[n] = {
+            "upstream_bytes_peer": peer["upstream_bytes"],
+            "upstream_bytes_baseline": base["upstream_bytes"],
+            "upstream_vs_baseline_pct": 100.0 * peer["upstream_bytes"]
+            / base["upstream_bytes"],
+            "peer_offload_ratio": peer["peer_offload_ratio"],
+        }
+    if not quiet:
+        print(f"-- fan-out sweep ({arch_id}): upstream bytes vs edge count")
+        for n, r in rows.items():
+            base_g = r["upstream_bytes_baseline"] / 2**30
+            peer_g = r["upstream_bytes_peer"] / 2**30
+            print(f"  N={n:2d}  baseline={base_g:6.2f} G  "
+                  f"peers={peer_g:6.2f} G "
+                  f"({r['upstream_vs_baseline_pct']:.1f}%)")
+    return rows
+
+
+def write_bench_distribution(path: Optional[str] = None,
+                             smoke: bool = False,
+                             rows: Optional[Dict] = None,
+                             sweep: Optional[Dict] = None) -> str:
+    """Record the distribution trajectory (CI artifact + the committed
+    regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_DISTRIBUTION_PATH",
+                                  "BENCH_distribution.json")
+    if rows is None:
+        rows = edge_fanout(quiet=True)
+    if sweep is None and not smoke:
+        sweep = fanout_sweep(quiet=True)
+    payload = {
+        "config": {
+            "smoke": smoke, "n_edges": 4,
+            "sim_bps": {"cloud_upstream": SIM_CLOUD_UPSTREAM_BPS,
+                        "edge_upstream": SIM_EDGE_UPSTREAM_BPS,
+                        "cloud_edge": SIM_CLOUD_EDGE_BPS,
+                        "edge_edge": SIM_EDGE_EDGE_BPS},
+        },
+        "edge_fanout": rows,
+        "avg_peer_offload_ratio": sum(
+            r["peer_offload_ratio"] for r in rows.values()) / len(rows),
+        "avg_upstream_vs_baseline_pct": sum(
+            r["upstream_vs_baseline_pct"] for r in rows.values()) / len(rows),
+    }
+    if sweep is not None:
+        payload["fanout_sweep"] = sweep
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def main() -> List[str]:
+    rows = edge_fanout(quiet=True)
+    sweep = fanout_sweep(quiet=True)
+    write_bench_distribution(rows=rows, sweep=sweep)
+    avg_ratio = sum(r["upstream_vs_baseline_pct"] for r in rows.values()) \
+        / len(rows)
+    avg_off = sum(r["peer_offload_ratio"] for r in rows.values()) / len(rows)
+    return [
+        csv_row("distribution.edge_fanout", 0.0,
+                f"upstream_vs_baseline={avg_ratio:.1f}%;"
+                f"peer_offload={avg_off * 100:.1f}%;"
+                f"sweep_n8={sweep[8]['upstream_vs_baseline_pct']:.1f}%"),
+    ]
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = edge_fanout()
+    print()
+    sweep = None
+    if not smoke:
+        sweep = fanout_sweep()
+        print()
+    out = write_bench_distribution(smoke=smoke, rows=rows, sweep=sweep)
+    print(f"wrote {out}")

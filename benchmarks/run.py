@@ -9,10 +9,10 @@ import traceback
 
 
 def main() -> None:
-    from . import (bandwidth, build_time, cross_platform, image_size,
-                   roofline, sharing)
+    from . import (bandwidth, build_time, cross_platform, distribution,
+                   image_size, roofline, sharing)
     mods = [image_size, build_time, bandwidth, cross_platform, sharing,
-            roofline]
+            distribution, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -35,7 +35,7 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .cir import CIR
 from .chunkstore import CLAIM_WAIT_TIMEOUT_S, ChunkedComponentStore, FetchPlan
-from .component import DependencyItem, UniformComponent
+from .component import UniformComponent
 from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
                            Lifecycle)
 from .registry import RegistryError, UniformComponentService
@@ -395,16 +395,28 @@ class FetchEngine:
     benchmarks can observe real wall-clock overlap; accounting is identical
     with or without it.  Plain ``LocalComponentStore``s keep the legacy
     serial whole-component path.
+
+    ``peering`` is the optional chunk-source router of a fleet-topology
+    node (``repro.deploy.topology.NodePeering``): when set, every claimed
+    stripe is transferred through ``peering.fetch_stripe`` — which may pull
+    chunks from peer nodes instead of the upstream registry and does its
+    own per-link simulated sleeps — and every committed stripe is announced
+    through ``peering.announce_chunks`` so other nodes can source from this
+    one.  Chunk/byte accounting in the ``BuildReport`` is identical with or
+    without a router; only the upstream-vs-peer split (tracked by the
+    router) changes.
     """
 
     def __init__(self, store: LocalComponentStore,
                  service: UniformComponentService,
                  max_workers: int = 8,
-                 simulate_bps: Optional[float] = None):
+                 simulate_bps: Optional[float] = None,
+                 peering: Optional[Any] = None):
         self.store = store
         self.service = service
         self.max_workers = max(1, max_workers)
         self.simulate_bps = simulate_bps
+        self.peering = peering
 
     def fetch(self, comps: Sequence[UniformComponent],
               report: BuildReport,
@@ -475,13 +487,20 @@ class FetchEngine:
             t = time.perf_counter()
             nbytes = sum(ch.size for ch, _ev in stripe)
             try:
-                if self.simulate_bps:
-                    time.sleep(nbytes / self.simulate_bps)
-                self.service.fetch_chunks(c, nbytes, len(stripe))
+                if self.peering is not None:
+                    # fleet-topology node: the router picks the source per
+                    # chunk (peer vs upstream) and does its own link sleeps
+                    self.peering.fetch_stripe(c, stripe)
+                else:
+                    if self.simulate_bps:
+                        time.sleep(nbytes / self.simulate_bps)
+                    self.service.fetch_chunks(c, nbytes, len(stripe))
                 self.store.commit_chunks(stripe, component=c)
             except BaseException:
                 self.store.abort_chunks(stripe, component=c)
                 raise
+            if self.peering is not None:
+                self.peering.announce_chunks([ch for ch, _ev in stripe])
             return nbytes, len(stripe), time.perf_counter() - t
 
         # shared wait budget for content another build is pulling — both
@@ -687,7 +706,8 @@ class LazyBuilder:
                  plan_cache: Optional[BuildPlanCache] = None,
                  fetch_workers: int = 8,
                  fetch_simulate_bps: Optional[float] = None,
-                 build_graph: Optional[BuildGraph] = None):
+                 build_graph: Optional[BuildGraph] = None,
+                 peering: Optional[Any] = None):
         self.service = service
         self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
@@ -696,7 +716,12 @@ class LazyBuilder:
             else BuildGraph()
         self.fetch_engine = FetchEngine(self.store, service,
                                         max_workers=fetch_workers,
-                                        simulate_bps=fetch_simulate_bps)
+                                        simulate_bps=fetch_simulate_bps,
+                                        peering=peering)
+        # per-component readiness listeners the orchestrator wires into
+        # every build's ComponentReadiness (e.g. a fleet node announcing
+        # proven-present content to the PeerIndex)
+        self.readiness_listeners: List[Callable[[UniformComponent], None]] = []
 
     # -- stage 1: resolve (or replay a cached plan) ---------------------
     def _stage_resolve(self, cir: CIR, spec: SpecSheet,

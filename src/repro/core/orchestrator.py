@@ -38,7 +38,8 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Dict, FrozenSet, List, Optional, Sequence, Set
+from typing import (Any, Callable, Dict, FrozenSet, List, Optional, Sequence,
+                    Set)
 
 from .component import UniformComponent
 
@@ -183,14 +184,23 @@ class ComponentReadiness:
     reclaimed and re-fetched).  Each stage's event fires when its last
     gating component is ready; ``fail`` releases every gate so stage
     drivers observe the fetch error instead of hanging.
+
+    ``listeners`` are per-component callbacks fired on every readiness
+    event (after the stage gates update), e.g. a fleet node announcing the
+    component's chunks to its peers.  Listeners are advisory: one raising
+    is swallowed (and the rest still run) — a failing consumer must not
+    fail the build it observes.
     """
 
     def __init__(self, comps: Sequence[UniformComponent],
-                 graph: BuildGraph):
+                 graph: BuildGraph,
+                 listeners: Optional[Sequence[
+                     Callable[[UniformComponent], None]]] = None):
         self._lock = threading.Lock()
         self._pending = graph.gates_for(comps)
         self._events = {stage: threading.Event() for stage in self._pending}
         self._error: Optional[BaseException] = None
+        self._listeners = list(listeners or ())
         for stage, pend in self._pending.items():
             if not pend:
                 self._events[stage].set()
@@ -205,6 +215,11 @@ class ComponentReadiness:
                     fire.append(self._events[stage])
         for ev in fire:
             ev.set()
+        for listener in self._listeners:
+            try:
+                listener(c)
+            except Exception:  # noqa: BLE001 — advisory consumers only
+                continue
 
     def fail(self, exc: BaseException) -> None:
         with self._lock:
@@ -282,7 +297,9 @@ class BuildOrchestrator:
                overlap: bool) -> None:
         report, life = inst.report, inst.lifecycle
         comps = resolution.components
-        readiness = ComponentReadiness(comps, self.graph)
+        readiness = ComponentReadiness(
+            comps, self.graph,
+            listeners=getattr(self.builder, "readiness_listeners", None))
         report.orchestrated = overlap
         fetch_exc: List[BaseException] = []
         fetch_thread: Optional[threading.Thread] = None

@@ -1,10 +1,15 @@
 """repro.deploy — the deployment-service layer on top of the lazy-builder.
 
 One CIR, many platforms: ``FleetDeployer`` drives the staged build pipeline
-concurrently across N heterogeneous SpecSheets, sharing fetched components
-through one ``LocalComponentStore`` and resolutions through one
-``BuildPlanCache``, so the second-and-later platforms pay only their
-platform-specific delta (the cloud-edge continuum scenario).
+concurrently across N heterogeneous SpecSheets — through one shared
+``LocalComponentStore`` (the single-host fast path), or across a
+``FleetTopology`` of nodes with per-node stores, per-link bandwidths and
+peer-to-peer chunk distribution (the cloud-edge continuum scenario): a
+``PeerIndex`` gossips which node holds which committed chunks, and every
+node's fetch engine prefers the cheapest peer over the upstream registry.
 """
 from .fleet import (FleetDeployer, FleetResult,  # noqa: F401
                     PlatformDeployment)
+from .topology import (FleetNode, FleetTopology, NodePeering,  # noqa: F401
+                       NodeTraffic, PeerIndex, PeerTransferError,
+                       TopologyError)

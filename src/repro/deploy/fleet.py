@@ -27,6 +27,7 @@ from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
 from ..core.registry import UniformComponentService
 from ..core.spec import SpecSheet
 from ..core.store import LocalComponentStore
+from .topology import FleetTopology, NodePeering, NodeTraffic, PeerIndex
 
 
 @dataclasses.dataclass
@@ -37,7 +38,8 @@ class PlatformDeployment:
     (deployable — the weight tail may still have been streaming); ``wall_s``
     runs until COMPLETE.  ``report`` is present even for failed builds that
     got past resolution, so fleet byte accounting can include their partial
-    fetch work instead of silently dropping it.
+    fetch work instead of silently dropping it.  ``node_id`` names the
+    topology node that built this platform (None on the shared-store path).
     """
     platform_id: str
     instance: Optional[ContainerInstance]
@@ -45,6 +47,7 @@ class PlatformDeployment:
     wall_s: float = 0.0
     ready_s: float = 0.0
     report: Optional[BuildReport] = None
+    node_id: Optional[str] = None
 
     @property
     def ok(self) -> bool:
@@ -73,10 +76,23 @@ class FleetResult:
     ready_s_wall: float = 0.0         # slowest platform's wall to READY
     stage_walls: Dict[str, float] = dataclasses.field(default_factory=dict)
     #                                 ^ per-stage max wall offset across fleet
+    # -- peer-distribution columns (topology mode) ----------------------
+    bytes_upstream_total: int = 0     # wire bytes pulled over registry links
+    bytes_peer_total: int = 0         # wire bytes served node-to-node
+    peer_fallbacks_total: int = 0     # failed peer pulls re-routed upstream
+    node_traffic: Dict[str, NodeTraffic] = dataclasses.field(
+        default_factory=dict)         # node id -> this deploy's wire split
 
     @property
     def ok(self) -> bool:
         return all(d.ok for d in self.deployments)
+
+    @property
+    def peer_offload_ratio(self) -> float:
+        """Fraction of the fleet's wire bytes that peers (not the upstream
+        registry) served — the distribution benchmark's headline metric."""
+        total = self.bytes_upstream_total + self.bytes_peer_total
+        return self.bytes_peer_total / total if total else 0.0
 
     def instance(self, platform_id: str) -> ContainerInstance:
         for d in self.deployments:
@@ -108,6 +124,20 @@ class FleetResult:
                 + (f" (asset tail overlapped "
                    f"{(self.wall_s - self.ready_s_wall) * 1e3:.1f} ms)"
                    if self.wall_s > self.ready_s_wall else ""))
+        if self.node_traffic:
+            lines.append(
+                f"  peer distribution: "
+                f"{self.bytes_upstream_total / 2**20:.1f} MiB upstream, "
+                f"{self.bytes_peer_total / 2**20:.1f} MiB from peers "
+                f"({self.peer_offload_ratio * 100:.1f}% offloaded, "
+                f"{self.peer_fallbacks_total} peer fallbacks)")
+            for node_id, t in sorted(self.node_traffic.items()):
+                lines.append(
+                    f"    {node_id:18s} upstream "
+                    f"{t.bytes_from_upstream / 2**20:8.1f} MiB, peers "
+                    f"{t.bytes_from_peers / 2**20:8.1f} MiB"
+                    + (f" (from {', '.join(sorted(t.peer_sources))})"
+                       if t.peer_sources else ""))
         for d in self.deployments:
             if d.ok:
                 rep = d.instance.report
@@ -126,11 +156,27 @@ class FleetResult:
 class FleetDeployer:
     """Deploys one CIR to many SpecSheets through a shared staged pipeline.
 
-    A single ``LazyBuilder`` (one store, one plan cache) serves every
-    platform; per-platform builds run on a thread pool.  The store and the
-    registry are lock-protected, and resolution is read-mostly, so
-    concurrent builds are safe — they just interleave their fetch
-    accounting, which is exactly the sharing the fleet report measures.
+    **Shared-store mode** (default, ``topology=None``): a single
+    ``LazyBuilder`` (one store, one plan cache) serves every platform;
+    per-platform builds run on a thread pool.  The store and the registry
+    are lock-protected, and resolution is read-mostly, so concurrent builds
+    are safe — they just interleave their fetch accounting, which is
+    exactly the sharing the fleet report measures.
+
+    **Topology mode** (``topology=FleetTopology(...)``): every node of the
+    topology gets its *own* ``ChunkedComponentStore`` and builder (per-node
+    singleflight preserved); a fleet-wide ``PeerIndex`` learns which node
+    holds which committed chunks (announced on stripe commit and on the
+    orchestrator's per-component readiness events), and each node's fetch
+    engine sources chunks from the cheapest linked peer that holds them,
+    falling back to the upstream registry on a miss or a failed peer
+    transfer.  Specs must be placed on nodes (``topology.place``);
+    ``FleetResult.node_traffic`` reports the per-node upstream-vs-peer wire
+    split.  The plan cache stays fleet-wide (it is control-plane metadata,
+    not content).  ``use_peers=False`` keeps the per-node plumbing but
+    routes every chunk upstream — the byte-identical no-peer baseline of
+    the distribution benchmark.  ``simulate_links=True`` sleeps transfers
+    at the topology's per-link bandwidths for wall-clock studies.
     """
 
     def __init__(self, service: UniformComponentService,
@@ -140,16 +186,72 @@ class FleetDeployer:
                  max_workers: int = 8,
                  fetch_workers: int = 8,
                  fetch_simulate_bps: Optional[float] = None,
-                 overlap: bool = True):
-        self.store = store if store is not None else ChunkedComponentStore()
+                 overlap: bool = True,
+                 topology: Optional[FleetTopology] = None,
+                 use_peers: bool = True,
+                 simulate_links: bool = False):
         self.plan_cache = plan_cache or BuildPlanCache()
-        self.builder = LazyBuilder(service, self.store,
-                                   link_bandwidth_bps=link_bandwidth_bps,
-                                   plan_cache=self.plan_cache,
-                                   fetch_workers=fetch_workers,
-                                   fetch_simulate_bps=fetch_simulate_bps)
         self.max_workers = max_workers
         self.overlap = overlap
+        self.topology = topology
+        self.peer_index: Optional[PeerIndex] = None
+        self._node_stores: Dict[str, ChunkedComponentStore] = {}
+        self._node_peerings: Dict[str, NodePeering] = {}
+        self._node_builders: Dict[str, LazyBuilder] = {}
+        if topology is None:
+            self.store: Optional[LocalComponentStore] = \
+                store if store is not None else ChunkedComponentStore()
+            self.builder: Optional[LazyBuilder] = LazyBuilder(
+                service, self.store,
+                link_bandwidth_bps=link_bandwidth_bps,
+                plan_cache=self.plan_cache,
+                fetch_workers=fetch_workers,
+                fetch_simulate_bps=fetch_simulate_bps)
+            return
+        if store is not None:
+            raise ValueError(
+                "topology mode builds one store per node — do not pass a "
+                "shared store")
+        self.store = None
+        self.builder = None
+        self.peer_index = PeerIndex()
+        for node_id in topology.node_ids():
+            st = ChunkedComponentStore()
+            peering = NodePeering(node_id, topology, self.peer_index,
+                                  service, st,
+                                  peer_stores=self._node_stores,
+                                  enabled=use_peers,
+                                  simulate=simulate_links)
+            lb = LazyBuilder(service, st,
+                             link_bandwidth_bps=link_bandwidth_bps,
+                             plan_cache=self.plan_cache,
+                             fetch_workers=fetch_workers,
+                             fetch_simulate_bps=None,
+                             peering=peering)
+            lb.readiness_listeners.append(peering.on_component_ready)
+            self._node_stores[node_id] = st
+            self._node_peerings[node_id] = peering
+            self._node_builders[node_id] = lb
+
+    # ------------------------------------------------------------------
+    def node_store(self, node_id: str) -> ChunkedComponentStore:
+        return self._node_stores[node_id]
+
+    def node_traffic(self, node_id: str) -> NodeTraffic:
+        """Cumulative (all deploys) wire split of one node."""
+        return self._node_peerings[node_id].traffic
+
+    def _stores(self) -> List[LocalComponentStore]:
+        return [self.store] if self.store is not None \
+            else list(self._node_stores.values())
+
+    def _builder_for(self, spec: SpecSheet) -> Tuple[LazyBuilder,
+                                                     Optional[str]]:
+        if self.topology is None:
+            assert self.builder is not None
+            return self.builder, None
+        node_id = self.topology.node_for(spec.platform_id)
+        return self._node_builders[node_id], node_id
 
     # ------------------------------------------------------------------
     def deploy(self, cir: CIR, specs: Sequence[SpecSheet],
@@ -166,16 +268,23 @@ class FleetDeployer:
         ``build()`` returning.
         """
         hits_before = self.plan_cache.stats.hits
-        stored_before = self.store.stats.bytes_stored
-        requested_before = self.store.stats.bytes_requested
+        stored_before = sum(s.stats.bytes_stored for s in self._stores())
+        requested_before = sum(s.stats.bytes_requested
+                               for s in self._stores())
+        traffic_before = {n: p.traffic.snapshot()
+                          for n, p in self._node_peerings.items()}
+        # placement is validated up front: a misplaced spec is a caller
+        # error, not a per-platform deployment failure
+        builders = [self._builder_for(s) for s in specs]
         t0 = time.perf_counter()
 
-        def one(spec: SpecSheet) -> PlatformDeployment:
+        def one(spec: SpecSheet, builder: LazyBuilder,
+                node_id: Optional[str]) -> PlatformDeployment:
             t = time.perf_counter()
             inst: Optional[ContainerInstance] = None
             ready_s = 0.0
             try:
-                inst = self.builder.build(
+                inst = builder.build(
                     cir, spec, mesh=mesh, overrides=overrides,
                     assemble=assemble, compile_steps=compile_steps,
                     overlap=self.overlap, block=False)
@@ -185,7 +294,8 @@ class FleetDeployer:
                 return PlatformDeployment(spec.platform_id, inst,
                                           wall_s=time.perf_counter() - t,
                                           ready_s=ready_s,
-                                          report=inst.report)
+                                          report=inst.report,
+                                          node_id=node_id)
             except Exception as e:  # noqa: BLE001 — per-platform isolation
                 # a build that got past resolution leaves a partial report:
                 # its fetch bytes are real work the fleet totals must count,
@@ -196,14 +306,17 @@ class FleetDeployer:
                     error=f"{type(e).__name__}: {e}",
                     wall_s=time.perf_counter() - t,
                     ready_s=ready_s,
-                    report=inst.report if inst is not None else None)
+                    report=inst.report if inst is not None else None,
+                    node_id=node_id)
 
         workers = max(1, min(self.max_workers, len(specs)))
         if workers == 1:
-            deployments = [one(s) for s in specs]
+            deployments = [one(s, b, n) for s, (b, n) in zip(specs, builders)]
         else:
             with ThreadPoolExecutor(max_workers=workers) as pool:
-                deployments = list(pool.map(one, specs))
+                deployments = list(pool.map(
+                    lambda sb: one(sb[0], sb[1][0], sb[1][1]),
+                    zip(specs, builders)))
 
         # all reports — failed builds' partial fetch work included, so the
         # fleet cannot overstate sharing by dropping bytes it transferred
@@ -211,12 +324,16 @@ class FleetDeployer:
         fetched = sum(r.bytes_fetched for r in reports)
         total = sum(r.bytes_total_components for r in reports)
         # sharing over THIS deploy only (the store may serve many deploys)
-        req = self.store.stats.bytes_requested - requested_before
-        stored = self.store.stats.bytes_stored - stored_before
+        req = sum(s.stats.bytes_requested
+                  for s in self._stores()) - requested_before
+        stored = sum(s.stats.bytes_stored
+                     for s in self._stores()) - stored_before
         stage_walls: Dict[str, float] = {}
         for r in reports:
             for stage, off in r.stage_s.items():
                 stage_walls[stage] = max(stage_walls.get(stage, 0.0), off)
+        node_traffic = {n: p.traffic.snapshot().since(traffic_before[n])
+                        for n, p in self._node_peerings.items()}
         return FleetResult(
             cir_name=cir.name,
             deployments=deployments,
@@ -237,6 +354,13 @@ class FleetDeployer:
             ready_s_wall=max((d.ready_s for d in deployments if d.ok),
                              default=0.0),
             stage_walls=stage_walls,
+            bytes_upstream_total=sum(t.bytes_from_upstream
+                                     for t in node_traffic.values()),
+            bytes_peer_total=sum(t.bytes_from_peers
+                                 for t in node_traffic.values()),
+            peer_fallbacks_total=sum(t.peer_fallbacks
+                                     for t in node_traffic.values()),
+            node_traffic=node_traffic,
         )
 
     # ------------------------------------------------------------------
@@ -247,6 +371,28 @@ class FleetDeployer:
         Returns the number of platforms whose plans are now cached — a
         deployment service calls this off the hot path so real deploys
         replay plans and hit the store.
+
+        Under a topology, warming targets the **cloud seed node only**:
+        every platform's plan lands in the fleet-wide plan cache, but all
+        content is fetched into the seed's store (and announced), so the
+        edge nodes' first real deploys replay plans and source their
+        chunks from the seed over peer links instead of their slow
+        upstream — warming an edge node over its own thin registry link
+        is exactly what the topology exists to avoid.
         """
-        res = self.deploy(cir, specs, overrides=overrides, assemble=False)
-        return sum(d.ok for d in res.deployments)
+        if self.topology is None:
+            res = self.deploy(cir, specs, overrides=overrides,
+                              assemble=False)
+            return sum(d.ok for d in res.deployments)
+        seed = self.topology.seed
+        assert seed is not None, "topology has no nodes"
+        builder = self._node_builders[seed]
+        ok = 0
+        for spec in specs:
+            try:
+                builder.build(cir, spec, overrides=overrides,
+                              assemble=False, overlap=self.overlap)
+                ok += 1
+            except Exception:  # noqa: BLE001 — per-platform isolation
+                continue
+        return ok

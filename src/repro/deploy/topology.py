@@ -1,0 +1,413 @@
+"""Fleet topology + peer-to-peer chunk distribution (the sky/edge scenario).
+
+The paper's headline deployment is one CIR across heterogeneous nodes of a
+cloud-edge continuum with minimal wire traffic.  ``FleetDeployer``'s shared
+store models a *single* deployment host; this module models a *fleet of
+hosts*:
+
+  * ``FleetTopology``   — named nodes (each with its own upstream link to
+    the component registry) plus symmetric peer links with per-link
+    bandwidths (cloud↔edge, edge↔edge).
+  * ``PeerIndex``       — the fleet-wide gossip table: which node holds
+    which committed chunks.  Nodes announce chunks as stripes commit and
+    whole components when the orchestrator's readiness event proves their
+    content present; announcements are derived from actual store presence,
+    so a failed transfer can never advertise content a node does not hold.
+  * ``NodePeering``     — one node's chunk-source selector, plugged into
+    the ``FetchEngine``: every claimed stripe is split by source, peers
+    holding a chunk are preferred over the upstream registry (cheapest —
+    highest-bandwidth — link first), and a peer that fails mid-transfer is
+    retracted from the index and the chunks re-pulled from upstream, so
+    one node's crash degrades a neighbour to upstream cost, never to a
+    failed build.
+
+Accounting: a node's ``NodeTraffic`` splits its wire bytes into
+upstream-vs-peer (summing exactly to the build reports'
+``bytes_delta_fetched``), and only upstream pulls charge the component
+service — peer transfers never touch the registry link, which is the
+metric the edge fan-out benchmark (``benchmarks/distribution.py``) drives
+to near-``1/N``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+from ..core.chunkstore import ChunkedComponentStore
+from ..core.component import UniformComponent
+from ..core.registry import UniformComponentService
+from ..core.store import Chunk
+
+# Default node↔registry link when a node does not declare one (500 Mbps —
+# the benchmark suite's representative WAN link).  All ``*_bps`` values in
+# this module are BYTES/s, matching ``FetchEngine.simulate_bps``.
+DEFAULT_UPSTREAM_BPS = 500e6 / 8
+
+
+class TopologyError(ValueError):
+    pass
+
+
+class PeerTransferError(RuntimeError):
+    """A peer-to-peer chunk transfer failed (peer crashed, link dropped, or
+    the peer no longer holds the advertised content)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetNode:
+    """One deployment host of the fleet."""
+    node_id: str
+    upstream_bps: float = DEFAULT_UPSTREAM_BPS   # node ↔ registry link
+
+
+class FleetTopology:
+    """Nodes, per-link bandwidths, and platform placement.
+
+    Links are symmetric and direct (no multi-hop routing): a node can pull
+    chunks from a peer only if an explicit link exists.  ``seed`` names the
+    node that ``FleetDeployer.warm()`` pre-populates — conventionally the
+    cloud node whose upstream link is cheap.
+    """
+
+    def __init__(self) -> None:
+        self._nodes: Dict[str, FleetNode] = {}
+        self._links: Dict[frozenset, float] = {}
+        self._placement: Dict[str, str] = {}     # platform_id -> node_id
+        self.seed: Optional[str] = None
+
+    # -- construction ---------------------------------------------------
+    def add_node(self, node_id: str,
+                 upstream_bps: float = DEFAULT_UPSTREAM_BPS,
+                 seed: bool = False) -> FleetNode:
+        if node_id in self._nodes:
+            raise TopologyError(f"node {node_id!r} already exists")
+        node = FleetNode(node_id, upstream_bps=upstream_bps)
+        self._nodes[node_id] = node
+        if seed or self.seed is None:
+            self.seed = node_id
+        return node
+
+    def link(self, a: str, b: str, bps: float) -> None:
+        """Declare a symmetric peer link between nodes ``a`` and ``b``."""
+        for n in (a, b):
+            if n not in self._nodes:
+                raise TopologyError(f"unknown node {n!r}")
+        if a == b:
+            raise TopologyError("a node cannot link to itself")
+        if bps <= 0:
+            raise TopologyError("link bandwidth must be positive")
+        self._links[frozenset((a, b))] = bps
+
+    def place(self, platform_id: str, node_id: str) -> None:
+        """Assign a platform (SpecSheet.platform_id) to a node."""
+        if node_id not in self._nodes:
+            raise TopologyError(f"unknown node {node_id!r}")
+        self._placement[platform_id] = node_id
+
+    # -- queries --------------------------------------------------------
+    def node_ids(self) -> List[str]:
+        return list(self._nodes)
+
+    def node(self, node_id: str) -> FleetNode:
+        return self._nodes[node_id]
+
+    def bandwidth(self, a: str, b: str) -> Optional[float]:
+        """Peer-link bandwidth between ``a`` and ``b``; None if unlinked."""
+        return self._links.get(frozenset((a, b)))
+
+    def peers_of(self, node_id: str) -> List[str]:
+        return sorted(n for key in self._links for n in key
+                      if node_id in key and n != node_id)
+
+    def node_for(self, platform_id: str) -> str:
+        try:
+            return self._placement[platform_id]
+        except KeyError:
+            raise TopologyError(
+                f"platform {platform_id!r} is not placed on any node — "
+                f"call topology.place(platform_id, node_id)") from None
+
+    # -- canonical shapes -----------------------------------------------
+    @classmethod
+    def edge_fanout(cls, n_edges: int,
+                    cloud_id: str = "cloud",
+                    cloud_upstream_bps: float = 1.25e9,
+                    edge_upstream_bps: float = 6.25e6,
+                    cloud_edge_bps: float = 125e6,
+                    edge_edge_bps: float = 2.5e8) -> "FleetTopology":
+        """One cloud seed + N edge nodes: edges have a slow registry link
+        (50 Mbps default) but fast local links to the cloud (1 Gbps) and
+        faster still to each other (same-site LAN, 2 Gbps) — the sky/edge
+        fan-out of the distribution benchmark.  Bandwidths are bytes/s."""
+        topo = cls()
+        topo.add_node(cloud_id, upstream_bps=cloud_upstream_bps, seed=True)
+        edges = [f"edge-{i}" for i in range(n_edges)]
+        for e in edges:
+            topo.add_node(e, upstream_bps=edge_upstream_bps)
+            topo.link(cloud_id, e, cloud_edge_bps)
+        for i, a in enumerate(edges):
+            for b in edges[i + 1:]:
+                topo.link(a, b, edge_edge_bps)
+        return topo
+
+
+# ---------------------------------------------------------------------------
+# Peer index (fleet-wide chunk gossip)
+# ---------------------------------------------------------------------------
+
+class PeerIndex:
+    """Which node holds which committed chunks.
+
+    Announcements come from two places: the fetch engine announces each
+    stripe the moment its chunks commit (so a peer can serve a large asset
+    while the announcer is still mid-build), and the orchestrator's
+    per-component readiness event announces the whole component once its
+    content is proven present.  Both paths verify against the announcing
+    node's store, so the index can only ever over-forget, never over-claim.
+    """
+
+    def __init__(self) -> None:
+        self._holders: Dict[str, Set[str]] = {}     # chunk id -> node ids
+        self._lock = threading.Lock()
+
+    def announce(self, node_id: str, chunk_ids: Sequence[str]) -> None:
+        with self._lock:
+            for cid in chunk_ids:
+                self._holders.setdefault(cid, set()).add(node_id)
+
+    def retract(self, node_id: str, chunk_ids: Sequence[str]) -> None:
+        """Forget ``node_id`` as a holder of ``chunk_ids`` (a transfer from
+        it failed): later source selections fall back to other peers or
+        upstream instead of retrying a dead advertisement."""
+        with self._lock:
+            for cid in chunk_ids:
+                holders = self._holders.get(cid)
+                if holders is not None:
+                    holders.discard(node_id)
+                    if not holders:
+                        del self._holders[cid]
+
+    def drop_node(self, node_id: str) -> None:
+        """Forget every advertisement of a node (it left the fleet)."""
+        with self._lock:
+            for cid in [cid for cid, h in self._holders.items()
+                        if node_id in h]:
+                self._holders[cid].discard(node_id)
+                if not self._holders[cid]:
+                    del self._holders[cid]
+
+    def holders(self, chunk_id: str) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._holders.get(chunk_id, ())))
+
+    def chunks_held(self, node_id: str) -> int:
+        with self._lock:
+            return sum(1 for h in self._holders.values() if node_id in h)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._holders)
+
+
+# ---------------------------------------------------------------------------
+# Per-node traffic accounting + source selection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class NodeTraffic:
+    """One node's wire-byte split.  ``bytes_from_upstream +
+    bytes_from_peers`` equals the node's builds' ``bytes_delta_fetched``
+    sum — source selection moves bytes between links, it never changes how
+    many are transferred."""
+    node_id: str
+    bytes_from_upstream: int = 0
+    bytes_from_peers: int = 0
+    chunks_from_upstream: int = 0
+    chunks_from_peers: int = 0
+    peer_fallbacks: int = 0          # failed peer pulls re-routed upstream
+    peer_sources: Dict[str, int] = dataclasses.field(default_factory=dict)
+    #                                ^ peer node -> bytes pulled from it
+
+    @property
+    def bytes_total(self) -> int:
+        return self.bytes_from_upstream + self.bytes_from_peers
+
+    @property
+    def peer_offload_ratio(self) -> float:
+        """Fraction of this node's wire bytes served by peers."""
+        return self.bytes_from_peers / self.bytes_total \
+            if self.bytes_total else 0.0
+
+    def as_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["bytes_total"] = self.bytes_total
+        d["peer_offload_ratio"] = self.peer_offload_ratio
+        return d
+
+    def snapshot(self) -> "NodeTraffic":
+        return dataclasses.replace(self, peer_sources=dict(self.peer_sources))
+
+    def since(self, before: "NodeTraffic") -> "NodeTraffic":
+        """The traffic delta accrued after ``before`` was snapshotted."""
+        return NodeTraffic(
+            node_id=self.node_id,
+            bytes_from_upstream=self.bytes_from_upstream
+            - before.bytes_from_upstream,
+            bytes_from_peers=self.bytes_from_peers - before.bytes_from_peers,
+            chunks_from_upstream=self.chunks_from_upstream
+            - before.chunks_from_upstream,
+            chunks_from_peers=self.chunks_from_peers
+            - before.chunks_from_peers,
+            peer_fallbacks=self.peer_fallbacks - before.peer_fallbacks,
+            peer_sources={p: b - before.peer_sources.get(p, 0)
+                          for p, b in self.peer_sources.items()
+                          if b - before.peer_sources.get(p, 0)},
+        )
+
+
+class NodePeering:
+    """One node's chunk-source router, plugged into its ``FetchEngine``.
+
+    ``fetch_stripe`` splits a claimed stripe by best source: a peer that
+    holds the chunk and shares a link with this node beats the upstream
+    registry; among candidate peers the highest-bandwidth link wins
+    (node-id tie-break, deterministic).  A peer pull is verified against
+    the peer's actual store — an advertisement the peer cannot honour (it
+    crashed mid-transfer, or the injection hook below says the link died)
+    raises ``PeerTransferError``: the peer is retracted from the index for
+    those chunks and they are re-pulled from upstream.  With ``enabled=
+    False`` every chunk routes upstream through the same code path, which
+    is what makes the no-peer baseline byte-identical per node.
+
+    ``simulate`` sleeps each pull for ``bytes / link_bps`` (the node's
+    upstream link or the chosen peer link) so wall-clock benchmarks see
+    real link asymmetry; accounting is identical with or without it.
+    """
+
+    def __init__(self, node_id: str, topology: FleetTopology,
+                 index: PeerIndex, service: UniformComponentService,
+                 store: ChunkedComponentStore,
+                 peer_stores: Mapping[str, ChunkedComponentStore],
+                 enabled: bool = True,
+                 simulate: bool = False):
+        self.node_id = node_id
+        self.topology = topology
+        self.index = index
+        self.service = service
+        self.store = store
+        self.peer_stores = peer_stores
+        self.enabled = enabled
+        self.simulate = simulate
+        self.traffic = NodeTraffic(node_id)
+        self._lock = threading.Lock()
+
+    # -- announcements (store-verified, can never over-claim) -----------
+    def announce_chunks(self, chunks: Sequence[Chunk]) -> None:
+        self.index.announce(
+            self.node_id,
+            [ch.id for ch in chunks if self.store.has_chunk(ch.id)])
+
+    def on_component_ready(self, c: UniformComponent) -> None:
+        """Orchestrator readiness listener: a component's content was just
+        proven present — announce every chunk the store actually holds
+        (a degraded-timeout readiness signal announces only what landed)."""
+        self.announce_chunks(self.store.chunks_of(c))
+
+    # -- source selection -----------------------------------------------
+    def _best_source(self, chunk_id: str) -> Optional[str]:
+        best: Optional[Tuple[float, str]] = None
+        for peer in self.index.holders(chunk_id):
+            if peer == self.node_id:
+                continue
+            bps = self.topology.bandwidth(self.node_id, peer)
+            if bps is None:
+                continue
+            if best is None or (-bps, peer) < best:
+                best = (-bps, peer)
+        return best[1] if best is not None else None
+
+    def select(self, chunks: Sequence[Chunk]
+               ) -> List[Tuple[Optional[str], List[Chunk]]]:
+        """Group ``chunks`` by chosen source (None == upstream registry),
+        preserving first-seen source order."""
+        if not self.enabled:
+            return [(None, list(chunks))] if chunks else []
+        groups: Dict[Optional[str], List[Chunk]] = {}
+        order: List[Optional[str]] = []
+        for ch in chunks:
+            src = self._best_source(ch.id)
+            if src not in groups:
+                groups[src] = []
+                order.append(src)
+            groups[src].append(ch)
+        return [(src, groups[src]) for src in order]
+
+    # -- transfers ------------------------------------------------------
+    def _peer_pull(self, src: str, component: UniformComponent,
+                   chunks: Sequence[Chunk]) -> None:
+        """Pull ``chunks`` from peer ``src``.  Tests monkeypatch this to
+        inject mid-transfer failures; the real implementation fails when
+        the peer does not actually hold what the index advertised."""
+        peer_store = self.peer_stores.get(src)
+        if peer_store is None:
+            raise PeerTransferError(f"peer {src!r} is gone")
+        missing = [ch.id for ch in chunks if not peer_store.has_chunk(ch.id)]
+        if missing:
+            raise PeerTransferError(
+                f"peer {src!r} no longer holds {len(missing)} advertised "
+                f"chunk(s)")
+        if self.simulate:
+            bps = self.topology.bandwidth(self.node_id, src)
+            time.sleep(sum(ch.size for ch in chunks) / bps)
+
+    def _upstream_pull(self, component: UniformComponent,
+                       chunks: Sequence[Chunk], staged: NodeTraffic) -> None:
+        nbytes = sum(ch.size for ch in chunks)
+        if self.simulate:
+            time.sleep(nbytes / self.topology.node(self.node_id).upstream_bps)
+        self.service.fetch_chunks(component, nbytes, len(chunks))
+        staged.bytes_from_upstream += nbytes
+        staged.chunks_from_upstream += len(chunks)
+
+    def fetch_stripe(self, component: UniformComponent,
+                     stripe: Sequence[Tuple[Chunk, threading.Event]]) -> None:
+        """Transfer one claimed stripe, peer-first with upstream fallback.
+        Called by the fetch engine before it commits the stripe.
+
+        Traffic is staged locally and folded into ``self.traffic`` only
+        once the whole stripe succeeded: the engine aborts a failed stripe
+        (its bytes never reach ``bytes_delta_fetched``), so a partially
+        transferred group must not be counted either — that is what keeps
+        ``NodeTraffic.bytes_total`` equal to the builds' delta-byte sum
+        even across failures and retries.
+        """
+        staged = NodeTraffic(self.node_id)
+        for src, chunks in self.select([ch for ch, _ev in stripe]):
+            if src is None:
+                self._upstream_pull(component, chunks, staged)
+                continue
+            nbytes = sum(ch.size for ch in chunks)
+            try:
+                self._peer_pull(src, component, chunks)
+            except PeerTransferError:
+                # a dead peer must not poison later selections: retract its
+                # advertisement and pay the upstream price for these chunks
+                self.index.retract(src, [ch.id for ch in chunks])
+                staged.peer_fallbacks += 1
+                self._upstream_pull(component, chunks, staged)
+                continue
+            staged.bytes_from_peers += nbytes
+            staged.chunks_from_peers += len(chunks)
+            staged.peer_sources[src] = \
+                staged.peer_sources.get(src, 0) + nbytes
+        with self._lock:
+            t = self.traffic
+            t.bytes_from_upstream += staged.bytes_from_upstream
+            t.bytes_from_peers += staged.bytes_from_peers
+            t.chunks_from_upstream += staged.chunks_from_upstream
+            t.chunks_from_peers += staged.chunks_from_peers
+            t.peer_fallbacks += staged.peer_fallbacks
+            for src, nbytes in staged.peer_sources.items():
+                t.peer_sources[src] = t.peer_sources.get(src, 0) + nbytes

@@ -1,0 +1,74 @@
+"""The bench-regression gate's comparison logic (no benchmarks are run —
+the smoke runs themselves are exercised by CI's bench-smoke job)."""
+from benchmarks.check_regression import (DISTRIBUTION, FETCH, PIPELINE,
+                                         Check, build_checks)
+
+
+def test_higher_is_better_band():
+    assert Check("m", 100.0, 95.0, True, 0.10).ok          # inside band
+    assert not Check("m", 100.0, 85.0, True, 0.10).ok      # regressed
+    # abs_limit acts as a floor the band cannot drop below
+    c = Check("m", 100.0, 60.0, True, 0.50, abs_limit=65.0)
+    assert not c.ok and c.bound == 65.0
+
+
+def test_lower_is_better_band():
+    assert Check("m", 20.0, 22.0, False, 0.15).ok
+    assert not Check("m", 20.0, 24.0, False, 0.15).ok
+    # hard ceiling wins over a permissive band
+    c = Check("m", 39.0, 41.0, False, 0.15, abs_limit=40.0)
+    assert not c.ok and c.bound == 40.0
+
+
+def test_missing_baseline_skips_but_missing_fresh_fails():
+    # no committed baseline (the PR introducing a benchmark): skip
+    c = Check("m", None, 5.0, True, 0.1)
+    assert c.skipped and c.ok and "SKIP" in c.row()
+    # baseline exists but the fresh run stopped emitting the metric: the
+    # gate must fail, not silently disarm
+    c = Check("m", 5.0, None, True, 0.1)
+    assert not c.skipped and not c.ok and "missing from the fresh run" \
+        in c.row()
+
+
+def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream):
+    fetch = {
+        "delta_redeploy": {
+            "archA": {"delta_saved_pct": delta_pct},
+            "archB": {"delta_saved_pct": delta_pct},
+        },
+        "fleet_fetch": {"double_charged_bytes": double_charged},
+        "fetch_concurrency": {"8": {"speedup_vs_serial": speedup}},
+    }
+    pipe = {"avg_ready_reduction_pct": ready_pct}
+    dist = {"avg_peer_offload_ratio": offload,
+            "avg_upstream_vs_baseline_pct": upstream}
+    return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist}
+
+
+def test_build_checks_pass_and_fail():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
+    checks = build_checks(base, good)
+    assert len(checks) == 6
+    assert all(c.ok for c in checks)
+
+    # a fleet that double-charges a single byte fails outright
+    bad = _docs(29.0, 1, 3.0, 60.0, 0.78, 21.5)
+    assert any(not c.ok for c in build_checks(base, bad))
+
+    # peers never selected: offload collapses, upstream ratio explodes
+    collapsed = _docs(29.0, 0, 3.0, 60.0, 0.0, 99.0)
+    failed = {c.metric for c in build_checks(base, collapsed) if not c.ok}
+    assert any("peer_offload" in m for m in failed)
+    assert any("upstream_vs_baseline" in m for m in failed)
+
+
+def test_build_checks_averages_common_archs_only():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    fresh = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # fresh smoke run covers fewer archs than the committed full baseline
+    del fresh[FETCH]["delta_redeploy"]["archB"]
+    checks = {c.metric: c for c in build_checks(base, fresh)}
+    c = checks[f"{FETCH}:delta_redeploy.avg_delta_saved_pct"]
+    assert c.ok and c.baseline == 30.0 and c.fresh == 30.0

@@ -1,0 +1,299 @@
+"""Peer-to-peer chunk distribution across a fleet topology.
+
+Covers the distribution subsystem's claims: per-node stores with peer-first
+chunk sourcing, store-verified announcements (the index can never
+over-claim), upstream fallback on peer failure without poisoning the
+``PeerIndex``, byte-identical per-node accounting between peer and upstream
+sourcing, and ``warm()`` targeting the cloud seed node only.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import PreBuilder, cpu_smoke, gpu_server, tpu_single_pod
+from repro.deploy import (FleetDeployer, FleetTopology, PeerIndex,
+                          PeerTransferError, TopologyError)
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def _fanout(n_edges=2):
+    """1 cloud seed + N edges, all linked; edge-edge slower than cloud-edge
+    so source selection between them is observable."""
+    topo = FleetTopology.edge_fanout(n_edges, cloud_edge_bps=200e6,
+                                     edge_edge_bps=100e6)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    return topo, cloud, edges
+
+
+# ---------------------------------------------------------------------------
+# Topology + index plumbing
+# ---------------------------------------------------------------------------
+
+def test_topology_validation():
+    topo = FleetTopology()
+    topo.add_node("a")
+    topo.add_node("b", seed=True)
+    assert topo.seed == "b"
+    with pytest.raises(TopologyError):
+        topo.add_node("a")                    # duplicate
+    with pytest.raises(TopologyError):
+        topo.link("a", "missing", 1e6)        # unknown node
+    with pytest.raises(TopologyError):
+        topo.link("a", "a", 1e6)              # self link
+    with pytest.raises(TopologyError):
+        topo.link("a", "b", 0)                # non-positive bandwidth
+    topo.link("a", "b", 5e6)
+    assert topo.bandwidth("a", "b") == topo.bandwidth("b", "a") == 5e6
+    assert topo.bandwidth("a", "missing") is None
+    assert topo.peers_of("a") == ["b"]
+    with pytest.raises(TopologyError):
+        topo.node_for("unplaced-platform")
+
+
+def test_edge_fanout_shape():
+    topo = FleetTopology.edge_fanout(3)
+    assert topo.seed == "cloud"
+    assert set(topo.node_ids()) == {"cloud", "edge-0", "edge-1", "edge-2"}
+    assert topo.bandwidth("cloud", "edge-1") is not None
+    assert topo.bandwidth("edge-0", "edge-2") is not None
+
+
+def test_peer_index_announce_retract_drop():
+    idx = PeerIndex()
+    idx.announce("a", ["c1", "c2"])
+    idx.announce("b", ["c2"])
+    assert idx.holders("c1") == ("a",)
+    assert idx.holders("c2") == ("a", "b")
+    idx.retract("a", ["c2", "never-seen"])
+    assert idx.holders("c2") == ("b",)
+    idx.drop_node("b")
+    assert idx.holders("c2") == ()
+    assert idx.chunks_held("a") == 1
+    assert len(idx) == 1
+
+
+def test_deployer_rejects_shared_store_in_topology_mode(service):
+    from repro.core import ChunkedComponentStore
+    with pytest.raises(ValueError):
+        FleetDeployer(service, store=ChunkedComponentStore(),
+                      topology=FleetTopology.edge_fanout(1))
+
+
+# ---------------------------------------------------------------------------
+# Peer-first sourcing
+# ---------------------------------------------------------------------------
+
+def test_edges_source_from_cloud_seed(service, pb):
+    topo, cloud, edges = _fanout(2)
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+
+    seed_res = fd.deploy(cir, [cloud])
+    assert seed_res.ok
+    # the seed had no peers holding anything: all upstream
+    assert seed_res.bytes_peer_total == 0
+    assert seed_res.bytes_upstream_total > 0
+    # its content is announced
+    assert fd.peer_index.chunks_held("cloud") > 0
+
+    edge_res = fd.deploy(cir, edges)
+    assert edge_res.ok
+    # edges pulled the shared content (weights dominate) from peers, paying
+    # upstream only for chunks no peer held
+    assert edge_res.bytes_peer_total > edge_res.bytes_upstream_total
+    assert edge_res.peer_offload_ratio > 0.5
+    for d in edge_res.deployments:
+        t = edge_res.node_traffic[d.node_id]
+        assert t.bytes_from_peers > 0
+        assert "cloud" in t.peer_sources
+        # wire split must exactly cover the build's delta bytes
+        assert t.bytes_total == d.report.bytes_delta_fetched
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+    # each platform still resolved its own env variant
+    envs = {d.platform_id: {(c.manager, c.name): c.env
+                            for c in d.instance.bundle.components()}
+            for d in edge_res.deployments}
+    for pid in envs:
+        assert envs[pid][("env", "runtime-base")] == "cpu-host"
+
+
+def test_no_peer_baseline_is_byte_identical_per_node(service, pb):
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    per_node = {}
+    for use_peers in (True, False):
+        topo, cloud, edges = _fanout(2)
+        fd = FleetDeployer(service, topology=topo, use_peers=use_peers)
+        fd.deploy(cir, [cloud])
+        res = fd.deploy(cir, edges)
+        assert res.ok
+        if not use_peers:
+            assert res.bytes_peer_total == 0
+        per_node[use_peers] = {
+            d.node_id: (d.report.bytes_delta_fetched,
+                        d.report.bytes_fetched,
+                        d.report.chunks_hit, d.report.chunks_missed)
+            for d in res.deployments}
+    # sourcing moves bytes between links, never changes what is fetched
+    assert per_node[True] == per_node[False]
+
+
+def test_cheapest_peer_wins(service, pb):
+    """With two holders, the higher-bandwidth link is selected."""
+    topo = FleetTopology()
+    topo.add_node("cloud", seed=True)
+    topo.add_node("near")
+    topo.add_node("sink")
+    topo.link("sink", "cloud", 10e6)      # slow
+    topo.link("sink", "near", 100e6)      # fast — must win
+    cloud = tpu_single_pod()
+    near = dataclasses.replace(cpu_smoke(), platform_id="near-host")
+    sink = dataclasses.replace(cpu_smoke(), platform_id="sink-host")
+    topo.place(cloud.platform_id, "cloud")
+    topo.place(near.platform_id, "near")
+    topo.place(sink.platform_id, "sink")
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    fd.deploy(cir, [cloud])
+    fd.deploy(cir, [near])                # near now holds the cpu content
+    res = fd.deploy(cir, [sink])
+    assert res.ok
+    t = res.node_traffic["sink"]
+    # everything peer-sourced came over the fast link
+    assert t.bytes_from_peers > 0
+    assert set(t.peer_sources) == {"near"}
+
+
+def test_unlinked_holder_is_not_a_source(service, pb):
+    """A node with no link to the holder pays the upstream price."""
+    topo = FleetTopology()
+    topo.add_node("cloud", seed=True)
+    topo.add_node("island")               # no links at all
+    cloud = tpu_single_pod()
+    island = dataclasses.replace(cpu_smoke(), platform_id="island-host")
+    topo.place(cloud.platform_id, "cloud")
+    topo.place(island.platform_id, "island")
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    fd.deploy(cir, [cloud])
+    res = fd.deploy(cir, [island])
+    assert res.ok
+    assert res.bytes_peer_total == 0
+    assert res.node_traffic["island"].bytes_from_upstream > 0
+
+
+# ---------------------------------------------------------------------------
+# Failure paths
+# ---------------------------------------------------------------------------
+
+def test_failed_peer_falls_back_upstream_and_is_retracted(service, pb):
+    """A peer that fails mid-transfer: the pulling node re-routes those
+    chunks upstream (build still succeeds, invariant holds) and the dead
+    advertisement is retracted so it is not retried."""
+    topo, cloud, edges = _fanout(2)
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    fd.deploy(cir, [cloud])
+    held_before = fd.peer_index.chunks_held("cloud")
+    assert held_before > 0
+
+    def dead_peer(src, component, chunks):
+        raise PeerTransferError(f"{src} crashed mid-transfer")
+
+    fd._node_peerings["edge-0"]._peer_pull = dead_peer
+    res = fd.deploy(cir, [edges[0]])
+    assert res.ok
+    t = res.node_traffic["edge-0"]
+    assert t.bytes_from_peers == 0
+    assert t.peer_fallbacks > 0
+    # invariant survives the fallback: wire split still covers the delta
+    d = res.deployments[0]
+    assert t.bytes_total == d.report.bytes_delta_fetched
+    assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+    # the failed advertisements were retracted (no poison) ...
+    assert fd.peer_index.chunks_held("cloud") < held_before
+    # ... and the next node is unaffected: it sources from edge-0, which
+    # fetched (upstream) and announced the same content
+    res2 = fd.deploy(cir, [edges[1]])
+    assert res2.ok
+    t2 = res2.node_traffic["edge-1"]
+    assert t2.bytes_from_peers > 0
+    assert "edge-0" in t2.peer_sources
+    assert t2.peer_fallbacks == 0
+
+
+def test_stale_advertisement_retracts_without_failing_the_build(service, pb):
+    """An index entry the holder cannot honour (announced, then lost) is a
+    verified-transfer failure: fallback upstream, entry removed."""
+    topo, cloud, edges = _fanout(1)
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    # poison attempt: advertise chunks the cloud store does NOT hold
+    fake_ids = [f"fake-{i}" for i in range(4)]
+    fd.peer_index.announce("cloud", fake_ids)
+    res = fd.deploy(cir, edges)     # cloud store is empty: every real chunk
+    assert res.ok                   # routes upstream, nothing wedges
+    assert res.node_traffic["edge-0"].bytes_from_upstream > 0
+
+
+def test_announcements_are_store_verified(service, pb):
+    """A node can never advertise chunks it does not hold — announcements
+    derive from store presence, so a crashed fetch cannot over-claim."""
+    topo, cloud, edges = _fanout(1)
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    inst = fd._node_builders["cloud"].build(cir, cloud, assemble=False)
+    comp = inst.bundle.components()[0]
+    peering = fd._node_peerings["edge-0"]     # edge-0's store is EMPTY
+    peering.on_component_ready(comp)
+    for ch in peering.store.chunks_of(comp):
+        assert "edge-0" not in fd.peer_index.holders(ch.id)
+
+
+# ---------------------------------------------------------------------------
+# warm() + shared-store fast path
+# ---------------------------------------------------------------------------
+
+def test_warm_targets_seed_node_only(service, pb):
+    """warm() under a topology pre-populates the cloud seed's store (and
+    every platform's plan), leaving edge stores empty; the subsequent real
+    deploy replays plans and the edges peer off the seed."""
+    topo, cloud, edges = _fanout(2)
+    fd = FleetDeployer(service, topology=topo)
+    cir = pb.prebuild(ARCHS["phi4-mini-3.8b"], entrypoint="train")
+    specs = [cloud] + edges
+    assert fd.warm(cir, specs) == 3
+    assert fd.node_store("cloud").chunk_count() > 0
+    for e in ("edge-0", "edge-1"):
+        assert fd.node_store(e).chunk_count() == 0
+    res = fd.deploy(cir, specs)
+    assert res.ok
+    assert res.plan_cache_hits == 3
+    # the seed refetched nothing; edges sourced from it over peer links
+    assert res.node_traffic["cloud"].bytes_total == 0
+    for e in ("edge-0", "edge-1"):
+        t = res.node_traffic[e]
+        assert t.bytes_from_peers > 0
+        assert t.bytes_from_peers > t.bytes_from_upstream
+
+
+def test_shared_store_path_reports_no_peer_columns(service, pb):
+    """The default (no-topology) deployer is untouched by the subsystem:
+    no node traffic, zero peer columns."""
+    fd = FleetDeployer(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    res = fd.deploy(cir, [tpu_single_pod(), gpu_server()])
+    assert res.ok
+    assert res.node_traffic == {}
+    assert res.bytes_upstream_total == 0 and res.bytes_peer_total == 0
+    assert res.peer_offload_ratio == 0.0
+    assert all(d.node_id is None for d in res.deployments)
