@@ -29,6 +29,8 @@ from typing import Callable, Dict, List, Optional
 FETCH = "BENCH_fetch.json"
 PIPELINE = "BENCH_pipeline.json"
 DISTRIBUTION = "BENCH_distribution.json"
+CHURN = "BENCH_churn.json"
+BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN)
 
 
 @dataclasses.dataclass
@@ -98,7 +100,7 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, distribution
+    from . import build_time, churn, distribution
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -113,8 +115,12 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
     dist = distribution.edge_fanout(quiet=True)
     dist_path = distribution.write_bench_distribution(
         path=os.path.join(out_dir, DISTRIBUTION), smoke=True, rows=dist)
+    churn_rows = churn.policy_comparison(quiet=True)
+    churn.accounting_identity(quiet=True)
+    churn_path = churn.write_bench_churn(
+        path=os.path.join(out_dir, CHURN), smoke=True, rows=churn_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
-            DISTRIBUTION: _load(dist_path)}
+            DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -161,11 +167,18 @@ def build_checks(base: Dict[str, Optional[Dict]],
     add(DISTRIBUTION, ["avg_peer_offload_ratio"], True, 0.10)
     add(DISTRIBUTION, ["avg_upstream_vs_baseline_pct"], False, 0.15,
         abs_limit=40.0)
+
+    # -- store-lifecycle churn: deterministic byte accounting ------------
+    # cheapest-to-restore must keep beating lru's upstream wire bytes ...
+    add(CHURN, ["ctr_vs_lru_upstream_reduction_pct"], True, 0.20,
+        abs_limit=15.0)
+    # ... and the churn hit-rate must not collapse (eviction gone rogue)
+    add(CHURN, ["ctr_hit_rate"], True, 0.10)
     return checks
 
 
 def main(argv: List[str]) -> int:
-    base = {name: _load(name) for name in (FETCH, PIPELINE, DISTRIBUTION)}
+    base = {name: _load(name) for name in BASELINES}
     missing = [n for n, d in base.items() if d is None]
     if missing:
         print(f"warning: no committed baseline for {', '.join(missing)} — "

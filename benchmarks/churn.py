@@ -1,0 +1,341 @@
+"""Store-lifecycle churn under capacity-bounded edge nodes.
+
+The sky/edge pitch assumes nodes with tight disks that continuously rotate
+workloads.  This benchmark makes that scenario measurable: K CIRs rotate
+across capacity-bounded edge nodes of a fleet topology (1 unbounded cloud
+seed that holds the *common* CIR's content + N edges, each rotating the
+common CIR plus its own edge-local CIRs).  Every edge's store evicts under
+the churn; the eviction policy decides what the next round costs:
+
+  * ``lru``                 — evict by recency, blind to restore cost.
+  * ``cheapest-to-restore`` — prefer evicting chunks a linked peer still
+    holds (restoring them later costs a peer link, not the upstream
+    registry), so edge-local content — restorable only from upstream —
+    stays resident.
+
+The headline metric is total **upstream wire bytes** across the churn:
+``cheapest-to-restore`` must come in at least ``CTR_VS_LRU_FLOOR_PCT``
+(15 %) under ``lru`` at the same capacity.  ``hit_rate`` is wire-based:
+the fraction of requested component bytes the store did NOT transfer.
+
+Two invariant phases ride along:
+
+  * *accounting identity* — a bounded store whose capacity is never hit
+    produces byte-identical per-deploy chunk accounting to an unbounded
+    one (capacity must be invisible until it binds);
+  * *concurrent churn* — edges churn concurrently while every eviction is
+    checked against the pin/in-flight exemption (a pinned or claimed
+    chunk must never be dropped).
+
+Writes ``BENCH_churn.json`` (CI artifact + regression-gate baseline; see
+``benchmarks.check_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ARCHS
+from repro.core import (EVICTION_POLICIES, PreBuilder, catalog, cpu_smoke,
+                        tpu_single_pod)
+from repro.core.chunkstore import ChunkedComponentStore
+from repro.deploy import FleetDeployer, FleetTopology
+
+from .common import csv_row
+
+# compare every policy the store implements (canonical tuple — a policy
+# added to the store automatically joins the comparison)
+POLICIES = EVICTION_POLICIES
+# capacity = this fraction of one full rotation's resident bytes: an edge
+# holds most — but never all — of its working set, so every round evicts
+CAPACITY_FRACTION = 0.75
+ROUNDS = 3
+# the common CIR is seeded (and pinned) on the cloud: its chunks are always
+# peer-restorable; each edge's local CIRs exist nowhere else — evicting
+# them is what costs upstream wire
+COMMON_ARCH = "gemma2-9b"
+EDGE_LOCAL_ARCHS = (
+    ("starcoder2-3b", "phi4-mini-3.8b", "qwen2-vl-2b"),
+    ("codeqwen1.5-7b", "musicgen-medium", "rwkv6-1.6b"),
+)
+# acceptance floor: cheapest-to-restore must beat lru's upstream wire bytes
+# by at least this much at the same capacity
+CTR_VS_LRU_FLOOR_PCT = 15.0
+
+
+def _rotations(n_edges: int) -> Dict[str, List[str]]:
+    """Per-edge CIR rotation: the common CIR first, then the edge's own
+    local CIRs (disjoint across edges)."""
+    return {f"edge-{i}": [COMMON_ARCH] + list(EDGE_LOCAL_ARCHS[i])
+            for i in range(n_edges)}
+
+
+def _build_fleet(policy: str,
+                 capacities: Optional[Dict[str, int]],
+                 n_edges: int) -> Tuple[FleetDeployer, Dict, object, Dict]:
+    """Fresh service + fleet: 1 unbounded cloud seed + N bounded edges,
+    cloud↔edge and edge↔edge links, cloud warmed (and pinned) with the
+    common CIR.  Returns (deployer, cirs, cloud_spec, edge_specs)."""
+    svc = catalog.build_service()
+    pb = PreBuilder(svc)
+    rotations = _rotations(n_edges)
+    archs = sorted({a for rot in rotations.values() for a in rot})
+    cirs = {a: pb.prebuild(ARCHS[a], entrypoint="serve") for a in archs}
+    topo = FleetTopology()
+    topo.add_node("cloud", upstream_bps=1.25e9, seed=True)
+    edge_specs = {}
+    for i in range(n_edges):
+        node = f"edge-{i}"
+        cap = capacities.get(node) if capacities else None
+        topo.add_node(node, upstream_bps=6.25e6, capacity_bytes=cap)
+        topo.link("cloud", node, 125e6)
+        spec = dataclasses.replace(cpu_smoke(),
+                                   platform_id=f"edge-host-{i}")
+        topo.place(spec.platform_id, node)
+        edge_specs[node] = spec
+    for i in range(n_edges):
+        for j in range(i + 1, n_edges):
+            topo.link(f"edge-{i}", f"edge-{j}", 2.5e8)
+    cloud_spec = tpu_single_pod()
+    topo.place(cloud_spec.platform_id, "cloud")
+    # fetch_workers=1: serial stripe commits keep the LRU order — and so
+    # the evicted set and the upstream bytes — deterministic run to run
+    fd = FleetDeployer(svc, topology=topo, eviction_policy=policy,
+                       fetch_workers=1)
+    assert fd.warm(cirs[COMMON_ARCH], [cloud_spec]) == 1
+    return fd, cirs, cloud_spec, edge_specs
+
+
+def probe_capacities(n_edges: int = 2,
+                     fraction: float = CAPACITY_FRACTION) -> Dict[str, int]:
+    """One unbounded rotation per edge measures the full working set; the
+    churn capacity is ``fraction`` of it (deterministic byte accounting,
+    so this is stable across runs and machines)."""
+    fd, cirs, _cloud, edge_specs = _build_fleet("lru", None, n_edges)
+    caps = {}
+    for node, rot in _rotations(n_edges).items():
+        for a in rot:
+            res = fd.deploy(cirs[a], [edge_specs[node]])
+            assert res.ok, res.summary()
+        resident = fd.node_store(node).chunk_stats.chunk_bytes_stored
+        caps[node] = int(resident * fraction)
+    return caps
+
+
+def run_churn(policy: str,
+              capacities: Optional[Dict[str, int]],
+              rounds: int = ROUNDS,
+              n_edges: int = 2,
+              concurrent: bool = False) -> Dict[str, object]:
+    """Rotate every edge through its CIR set for ``rounds`` rounds and
+    account the churn.  ``concurrent=True`` churns the edges on parallel
+    threads (the pin/in-flight eviction exemption under real contention);
+    the sequential mode is byte-deterministic and feeds the policy rows."""
+    fd, cirs, _cloud, edge_specs = _build_fleet(policy, capacities, n_edges)
+    rotations = _rotations(n_edges)
+    up0 = {n: fd.node_traffic(n).bytes_from_upstream for n in edge_specs}
+    wire = total = 0
+    per_deploy: List[Tuple] = []
+
+    def one_deploy(node: str, arch: str) -> Tuple:
+        res = fd.deploy(cirs[arch], [edge_specs[node]])
+        assert res.ok, res.summary()
+        rep = res.deployments[0].report
+        # the churn invariant: an evicted chunk re-entering a plan is a
+        # miss, so chunk-delta wire can never exceed component accounting
+        assert rep.bytes_delta_fetched <= rep.bytes_fetched, \
+            f"{node}/{arch}: delta exceeds component fetch bytes"
+        return (node, arch, rep.bytes_delta_fetched, rep.bytes_fetched,
+                rep.bytes_total_components, rep.chunks_hit,
+                rep.chunks_missed)
+
+    if concurrent:
+        with ThreadPoolExecutor(max_workers=n_edges) as pool:
+            def edge_loop(node: str) -> List[Tuple]:
+                return [one_deploy(node, a)
+                        for _r in range(rounds)
+                        for a in rotations[node]]
+            for rows in pool.map(edge_loop, sorted(edge_specs)):
+                per_deploy.extend(rows)
+    else:
+        for _r in range(rounds):
+            for k in range(max(len(r) for r in rotations.values())):
+                for node in sorted(edge_specs):
+                    rot = rotations[node]
+                    per_deploy.append(one_deploy(node, rot[k % len(rot)]))
+    for row in per_deploy:
+        wire += row[2]
+        total += row[4]
+
+    upstream = sum(fd.node_traffic(n).bytes_from_upstream - up0[n]
+                   for n in edge_specs)
+    peers = sum(fd.node_traffic(n).bytes_from_peers for n in edge_specs)
+    stats = [fd.node_store(n).lifecycle_stats for n in edge_specs]
+    return {
+        "policy": policy,
+        "bounded": capacities is not None,
+        "upstream_bytes": upstream,
+        "peer_bytes": peers,
+        "wire_bytes": wire,
+        "hit_rate": 1.0 - wire / total if total else 0.0,
+        "evicted_bytes": sum(s.evicted_bytes for s in stats),
+        "refetch_bytes": sum(s.refetch_bytes for s in stats),
+        "pin_denied_evictions": sum(s.pin_denied_evictions for s in stats),
+        "components_gcd": sum(s.components_gcd for s in stats),
+        "per_deploy": per_deploy,
+    }
+
+
+def policy_comparison(rounds: int = ROUNDS, n_edges: int = 2,
+                      quiet: bool = False) -> Dict[str, Dict]:
+    """The headline table: lru vs cheapest-to-restore at the same capacity,
+    plus the unbounded reference."""
+    caps = probe_capacities(n_edges)
+    rows: Dict[str, Dict] = {}
+    for policy in POLICIES:
+        rows[policy] = run_churn(policy, caps, rounds=rounds,
+                                 n_edges=n_edges)
+    rows["unbounded"] = run_churn("lru", None, rounds=rounds,
+                                  n_edges=n_edges)
+    lru_up = rows["lru"]["upstream_bytes"]
+    ctr_up = rows["cheapest-to-restore"]["upstream_bytes"]
+    reduction = 100.0 * (1.0 - ctr_up / lru_up) if lru_up else 0.0
+    rows["_meta"] = {
+        "capacities": caps,
+        "rounds": rounds,
+        "n_edges": n_edges,
+        "ctr_vs_lru_upstream_reduction_pct": reduction,
+    }
+    assert reduction >= CTR_VS_LRU_FLOOR_PCT, \
+        f"cheapest-to-restore saved only {reduction:.1f}% of lru's " \
+        f"upstream wire bytes (floor {CTR_VS_LRU_FLOOR_PCT}%)"
+    if not quiet:
+        print(f"-- churn: {rounds} rounds x {n_edges} bounded edges "
+              f"(capacity {CAPACITY_FRACTION:.0%} of the working set)")
+        print(f"{'policy':20s} {'upstream':>10s} {'peers':>10s} "
+              f"{'hit rate':>9s} {'evicted':>10s}")
+        for name in (*POLICIES, "unbounded"):
+            r = rows[name]
+            print(f"{name:20s} {r['upstream_bytes']/2**30:>8.2f} G "
+                  f"{r['peer_bytes']/2**30:>8.2f} G "
+                  f"{r['hit_rate']*100:>8.1f}% "
+                  f"{r['evicted_bytes']/2**30:>8.2f} G")
+        print(f"cheapest-to-restore upstream vs lru: -{reduction:.1f}% "
+              f"(floor {CTR_VS_LRU_FLOOR_PCT}%)")
+    return rows
+
+
+def accounting_identity(quiet: bool = False) -> bool:
+    """A bounded store whose capacity never binds must be byte-identical —
+    per deploy — to an unbounded one: capacity is invisible until it
+    evicts."""
+    caps = {f"edge-{i}": 1 << 60 for i in range(2)}   # never reached
+    bounded = run_churn("cheapest-to-restore", caps, rounds=2)
+    unbounded = run_churn("lru", None, rounds=2)
+    same = bounded["per_deploy"] == unbounded["per_deploy"]
+    assert same, "bounded-but-unhit accounting diverged from unbounded"
+    assert bounded["evicted_bytes"] == 0
+    if not quiet:
+        print(f"-- bounded (capacity unhit) vs unbounded: "
+              f"{len(bounded['per_deploy'])} deploys byte-identical")
+    return same
+
+
+def concurrent_churn(rounds: int = 2, quiet: bool = False,
+                     caps: Optional[Dict[str, int]] = None
+                     ) -> Dict[str, int]:
+    """Edges churn on concurrent threads while every eviction pass is
+    checked: a pinned or in-flight-claimed chunk must never be dropped.
+    ``caps`` reuses capacities a prior ``policy_comparison`` probed (the
+    probe is deterministic, so re-running it would only burn time)."""
+    violations: List[str] = []
+    orig = ChunkedComponentStore._drop_chunks_locked
+
+    def checked(self, victims):
+        for cid in victims:
+            if self._chunk_pins.get(cid):
+                violations.append(f"pinned chunk {cid[:12]} evicted")
+            if cid in self._chunk_inflight:
+                violations.append(f"in-flight chunk {cid[:12]} evicted")
+        return orig(self, victims)
+
+    caps = caps if caps is not None else probe_capacities(2)
+    ChunkedComponentStore._drop_chunks_locked = checked
+    try:
+        row = run_churn("cheapest-to-restore", caps, rounds=rounds,
+                        concurrent=True)
+    finally:
+        ChunkedComponentStore._drop_chunks_locked = orig
+    assert not violations, violations[:5]
+    assert row["evicted_bytes"] > 0, "concurrent churn never evicted"
+    out = {"pin_violations": 0, "deploys": len(row["per_deploy"]),
+           "evicted_bytes": row["evicted_bytes"]}
+    if not quiet:
+        print(f"-- concurrent churn: {out['deploys']} deploys, "
+              f"{out['evicted_bytes']/2**30:.2f} G evicted, "
+              f"0 pin/in-flight violations")
+    return out
+
+
+def write_bench_churn(path: Optional[str] = None,
+                      smoke: bool = False,
+                      rows: Optional[Dict] = None) -> str:
+    """Record the churn trajectory (CI artifact + the committed
+    regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_CHURN_PATH", "BENCH_churn.json")
+    if rows is None:
+        rows = policy_comparison(quiet=True)
+    meta = rows["_meta"]
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "rounds": meta["rounds"],
+            "n_edges": meta["n_edges"],
+            "capacity_fraction": CAPACITY_FRACTION,
+            "common_arch": COMMON_ARCH,
+        },
+        "policies": {
+            name: {k: v for k, v in rows[name].items() if k != "per_deploy"}
+            for name in (*POLICIES, "unbounded")
+        },
+        "ctr_vs_lru_upstream_reduction_pct":
+            meta["ctr_vs_lru_upstream_reduction_pct"],
+        "ctr_hit_rate": rows["cheapest-to-restore"]["hit_rate"],
+        "lru_hit_rate": rows["lru"]["hit_rate"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = policy_comparison(quiet=True)
+    accounting_identity(quiet=True)
+    if not smoke:
+        concurrent_churn(quiet=True, caps=rows["_meta"]["capacities"])
+    write_bench_churn(smoke=smoke, rows=rows)
+    meta = rows["_meta"]
+    return [
+        csv_row(
+            "churn.policy_comparison", 0.0,
+            f"ctr_vs_lru=-"
+            f"{meta['ctr_vs_lru_upstream_reduction_pct']:.1f}%;"
+            f"hit_lru={rows['lru']['hit_rate'] * 100:.1f}%;"
+            f"hit_ctr={rows['cheapest-to-restore']['hit_rate'] * 100:.1f}%"),
+    ]
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = policy_comparison()
+    print()
+    accounting_identity()
+    if not smoke:
+        print()
+        concurrent_churn(caps=rows["_meta"]["capacities"])
+    out = write_bench_churn(smoke=smoke, rows=rows)
+    print(f"wrote {out}")

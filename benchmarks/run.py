@@ -1,24 +1,30 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (one line per table)."""
+Prints ``name,us_per_call,derived`` CSV (one line per table).
+``--smoke`` runs the CI-sized variant of benchmarks that support one
+(currently the churn suite, which then skips its concurrent phase)."""
 from __future__ import annotations
 
+import inspect
 import sys
 import time
 import traceback
 
 
-def main() -> None:
-    from . import (bandwidth, build_time, cross_platform, distribution,
-                   image_size, roofline, sharing)
+def main(smoke: bool = False) -> None:
+    from . import (bandwidth, build_time, churn, cross_platform,
+                   distribution, image_size, roofline, sharing)
     mods = [image_size, build_time, bandwidth, cross_platform, sharing,
-            distribution, roofline]
+            distribution, churn, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:
         t0 = time.perf_counter()
         try:
-            rows = mod.main()
+            if smoke and "smoke" in inspect.signature(mod.main).parameters:
+                rows = mod.main(smoke=True)
+            else:
+                rows = mod.main()
             dt_us = (time.perf_counter() - t0) * 1e6
             for row in rows:
                 name, _, derived = row.split(",", 2)
@@ -32,4 +38,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(smoke="--smoke" in sys.argv)

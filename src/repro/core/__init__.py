@@ -10,7 +10,8 @@ from .resolution import (Resolution, ResolutionError,  # noqa: F401
 from .spec import (CHIPS, CPU_HOST, GPU_A100, TPU_V5E, SpecSheet,  # noqa: F401
                    cpu_smoke, gpu_server, probe_host, tpu_multi_pod,
                    tpu_single_pod)
-from .store import (Chunk, LocalComponentStore, StoreStats,  # noqa: F401
+from .store import (Chunk, EVICTION_POLICIES,  # noqa: F401
+                    LifecycleStats, LocalComponentStore, StoreStats,
                     component_pieces)
 from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
                          FetchPlan)

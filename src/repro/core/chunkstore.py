@@ -21,9 +21,11 @@ Concurrency model (what ``FleetDeployer`` relies on):
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import os
 import threading
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .component import UniformComponent
 from .store import (Chunk, LocalComponentStore, SHARED_PIECE_FRACTION,
@@ -48,16 +50,24 @@ class ChunkStats:
     chunks_hit: int = 0
     chunks_missed: int = 0
     chunks_waited: int = 0          # singleflight: in flight elsewhere
-    chunk_bytes_stored: int = 0     # unique chunk bytes committed
+    chunk_bytes_stored: int = 0     # RESIDENT unique chunk bytes (capacity
+    #                                 evictions decrement; == committed on
+    #                                 an unbounded store)
     chunk_bytes_requested: int = 0  # new-component bytes before chunk dedup
+    chunk_bytes_evicted: int = 0    # bytes dropped by capacity eviction —
+    #                                 they DID cross the wire when committed
 
     @property
     def delta_sharing_rate(self) -> float:
-        """Fraction of new-component bytes the chunk layer did NOT transfer —
-        the savings on top of component-level dedup."""
+        """Fraction of new-component bytes the chunk layer did NOT transfer
+        — the savings on top of component-level dedup.  Transfer cost is
+        resident + evicted bytes (eviction does not un-transfer anything);
+        floored at 0 for churn so heavy that re-fetches exceed the savings.
+        """
         if self.chunk_bytes_requested == 0:
             return 0.0
-        return 1.0 - self.chunk_bytes_stored / self.chunk_bytes_requested
+        transferred = self.chunk_bytes_stored + self.chunk_bytes_evicted
+        return max(0.0, 1.0 - transferred / self.chunk_bytes_requested)
 
     def as_dict(self) -> Dict[str, float]:
         d = dataclasses.asdict(self)
@@ -103,14 +113,35 @@ class ChunkedComponentStore(LocalComponentStore):
     unchanged — chunk presence and singleflight claims are layered on, so a
     version-bumped component is a component-level miss whose *wire* cost is
     only its unshared chunks.
+
+    Lifecycle (capacity-bounded stores): ``capacity_bytes`` bounds the
+    resident chunk bytes (``chunk_stats.chunk_bytes_stored`` — evictions
+    decrement it, so it is the *resident* figure).  Eviction runs when a
+    commit pushes the store over budget, in policy order (LRU, or
+    ``cheapest-to-restore`` which prefers chunks the ``peer_probe`` hook
+    says a linked peer still holds), and **never** touches pinned (build
+    lease, see ``acquire_build_lease``) or in-flight-claimed chunks.  Every
+    ``eviction_listeners`` callback fires — under the store lock — *before*
+    the bytes are dropped, so a peering layer can retract its ``PeerIndex``
+    announcements while the content is still present (the never-over-claim
+    invariant); listeners must not call back into this store.  Evicting a
+    chunk marks every component referencing it incomplete (the next plan of
+    that digest re-scans and accounts the re-fetch as a miss, so
+    ``delta <= fetched`` survives churn), and a component whose every chunk
+    was evicted is GC'd entirely — the next build of it is a plain miss.
     """
 
     def __init__(self, path: Optional[str] = None,
                  chunk_size: int = DEFAULT_CHUNK_SIZE,
-                 shared_fraction: float = SHARED_PIECE_FRACTION):
+                 shared_fraction: float = SHARED_PIECE_FRACTION,
+                 capacity_bytes: Optional[int] = None,
+                 eviction_policy: str = "lru"):
         self.chunk_size = chunk_size
         self.shared_fraction = shared_fraction
-        self._chunk_present: Dict[str, int] = {}          # chunk id -> size
+        # insertion/recency order IS the LRU order: plan hits and commits
+        # refresh a chunk's position
+        self._chunk_present: "collections.OrderedDict[str, int]" = \
+            collections.OrderedDict()
         self._chunk_inflight: Dict[str, threading.Event] = {}
         # component digest -> transfer events outstanding for its content,
         # so a component-level hit can still barrier on a mid-flight fetch
@@ -122,21 +153,57 @@ class ChunkedComponentStore(LocalComponentStore):
         # content has fully landed — a crash mid-transfer must not reload
         # as present-with-holes.  digest -> component awaiting persistence.
         self._unpersisted: Dict[str, UniformComponent] = {}
+        # lifecycle bookkeeping: which components reference which chunks
+        # (for incomplete-marking + GC on eviction), chunk pin refcounts
+        # (build leases), previously evicted ids (refetch accounting)
+        self._chunk_refs: Dict[str, Set[str]] = {}   # chunk id -> digests
+        self._comp_chunk_ids: Dict[str, List[str]] = {}
+        self._chunk_pins: Dict[str, int] = {}
+        self._evicted_ids: Set[str] = set()
+        # digests GC'd after eviction whose re-registration should count
+        # refetch at chunk granularity (only the chunks actually re-claimed
+        # cross the wire — plan hits on surviving shared chunks must not
+        # inflate the figure)
+        self._pending_refetch: Set[str] = set()
+        self._chunks_memo: Dict[str, List[Chunk]] = {}
+        # advisory callbacks fired (under the store lock) with the chunk ids
+        # about to be evicted, BEFORE the bytes are dropped
+        self.eviction_listeners: List[Callable[[List[str]], None]] = []
+        # cheapest-to-restore oracles: chunk id -> a linked peer holds it.
+        # The batch form is preferred — one index snapshot per eviction
+        # pass instead of a cross-lock round-trip per resident chunk.
+        self.peer_probe: Optional[Callable[[str], bool]] = None
+        self.peer_probe_batch: Optional[
+            Callable[[Sequence[str]], Set[str]]] = None
         self.chunk_stats = ChunkStats()
-        super().__init__(path)
+        super().__init__(path, capacity_bytes=capacity_bytes,
+                         eviction_policy=eviction_policy)
         # components reloaded from disk already hold all their chunks;
         # count them into requested too so delta_sharing_rate stays in
         # [0, 1) across restarts
         for c in self._by_digest.values():
             self.chunk_stats.chunk_bytes_requested += c.size_bytes
-            for ch in self.chunks_of(c):
+            chunks = self.chunks_of(c)
+            self._register_refs_locked(c.digest(), chunks)
+            for ch in chunks:
                 if ch.id not in self._chunk_present:
                     self._chunk_present[ch.id] = ch.size
                     self.chunk_stats.chunks_stored += 1
                     self.chunk_stats.chunk_bytes_stored += ch.size
+        with self._lock:
+            self._enforce_capacity_locked()
 
     def chunks_of(self, c: UniformComponent) -> List[Chunk]:
-        return component_pieces(c, self.chunk_size, self.shared_fraction)
+        # memoized per digest: leases + plans re-walk the same components;
+        # GIL-atomic get/set (worst case a duplicate compute), entries are
+        # dropped when the component is GC'd
+        dg = c.digest()
+        chunks = self._chunks_memo.get(dg)
+        if chunks is None:
+            chunks = component_pieces(c, self.chunk_size,
+                                      self.shared_fraction)
+            self._chunks_memo[dg] = chunks
+        return chunks
 
     def _persist(self, c: UniformComponent) -> None:
         # deferred until the transfer completes (_maybe_persist_locked)
@@ -154,6 +221,13 @@ class ChunkedComponentStore(LocalComponentStore):
     def has_chunk(self, chunk_id: str) -> bool:
         with self._lock:
             return chunk_id in self._chunk_present
+
+    def present_chunks(self, chunk_ids: Sequence[str]) -> List[str]:
+        """The subset of ``chunk_ids`` resident right now, under one lock
+        acquisition — the batch form announcement verification wants (a
+        per-id ``has_chunk`` loop would hammer the hot store lock)."""
+        with self._lock:
+            return [cid for cid in chunk_ids if cid in self._chunk_present]
 
     def chunk_count(self) -> int:
         with self._lock:
@@ -203,9 +277,13 @@ class ChunkedComponentStore(LocalComponentStore):
                     self.chunk_stats.chunk_bytes_requested += c.size_bytes
                 if chunks is None:     # lost the probe race; rare
                     chunks = self.chunks_of(c)
+                self._register_refs_locked(dg, chunks)
+                refetch = dg in self._pending_refetch
+                self._pending_refetch.discard(dg)
                 for ch in chunks:
                     if ch.id in self._chunk_present:
                         hits.append(ch)
+                        self._chunk_present.move_to_end(ch.id)  # LRU touch
                         self.chunk_stats.chunks_hit += 1
                     elif ch.id in self._chunk_inflight:
                         waits.append((ch, self._chunk_inflight[ch.id]))
@@ -215,6 +293,10 @@ class ChunkedComponentStore(LocalComponentStore):
                         self._chunk_inflight[ch.id] = ev
                         claimed.append((ch, ev))
                         self.chunk_stats.chunks_missed += 1
+                        if refetch:
+                            # a GC'd-after-eviction digest re-entering: its
+                            # re-claimed chunks count as refetch on commit
+                            self._evicted_ids.add(ch.id)
                 pending = [ev for _ch, ev in claimed] + \
                     [ev for _ch, ev in waits]
                 if pending:
@@ -222,6 +304,14 @@ class ChunkedComponentStore(LocalComponentStore):
                 elif self.path:
                     self._maybe_persist_locked(dg)   # all hits: complete now
             else:
+                # a component-level hit is a *use*: on a bounded store its
+                # chunks' LRU positions must refresh (the warm path skips
+                # chunking, so use the registered id list — no hashing),
+                # or eviction would keep targeting the hottest content
+                if self.capacity_bytes is not None:
+                    for cid in self._comp_chunk_ids.get(dg, ()):
+                        if cid in self._chunk_present:
+                            self._chunk_present.move_to_end(cid)
                 live = [ev for ev in self._comp_pending.get(dg, ())
                         if not ev.is_set()]
                 if live:
@@ -246,9 +336,13 @@ class ChunkedComponentStore(LocalComponentStore):
         with self._lock:
             for ch, _ev in claimed:
                 self._chunk_present[ch.id] = ch.size
+                self._chunk_present.move_to_end(ch.id)   # freshest
                 self._chunk_inflight.pop(ch.id, None)
                 self.chunk_stats.chunks_stored += 1
                 self.chunk_stats.chunk_bytes_stored += ch.size
+                if ch.id in self._evicted_ids:
+                    self._evicted_ids.discard(ch.id)
+                    self.lifecycle_stats.refetch_bytes += ch.size
             if component is not None:
                 dg = component.digest()
                 pend = self._comp_pending.get(dg)
@@ -261,6 +355,11 @@ class ChunkedComponentStore(LocalComponentStore):
                         self._comp_pending.pop(dg, None)
                 if self.path:
                     self._maybe_persist_locked(dg)
+            # the batch itself is exempt from the eviction pass its own
+            # commit triggers — landing bytes must not thrash themselves
+            # out (mirrors the base class's exempt=dg registration rule)
+            self._enforce_capacity_locked(
+                exempt_chunks={ch.id for ch, _ev in claimed})
         for _ch, ev in claimed:
             ev.set()
 
@@ -350,3 +449,205 @@ class ChunkedComponentStore(LocalComponentStore):
         if plan.waits or plan.barriers:
             self.mark_incomplete(c)
         return plan.component_new
+
+    # -- lifecycle: pins, eviction, GC ---------------------------------------
+    def _count_refetch_locked(self, c: UniformComponent) -> None:
+        # chunk granularity: the wire-accurate figure is the chunks the
+        # re-registration actually claims — plan_fetch marks them via
+        # _pending_refetch and commit_chunks counts them, so a plan hit on
+        # a surviving shared chunk never inflates refetch_bytes
+        self._pending_refetch.add(c.digest())
+
+    def _register_refs_locked(self, dg: str, chunks: Sequence[Chunk]) -> None:
+        """Record which chunks ``dg``'s content comprises, so eviction can
+        mark referencing components incomplete and GC emptied ones."""
+        if dg in self._comp_chunk_ids:
+            return
+        ids = [ch.id for ch in chunks]
+        self._comp_chunk_ids[dg] = ids
+        for cid in ids:
+            self._chunk_refs.setdefault(cid, set()).add(dg)
+
+    def _lease_chunk_ids(self, comps: Sequence[UniformComponent]
+                         ) -> List[str]:
+        # hashing happens here, outside the store lock (chunks_of memoizes)
+        return [ch.id for c in comps for ch in self.chunks_of(c)]
+
+    def _pin_chunks_locked(self, chunk_ids: Sequence[str]) -> None:
+        for cid in chunk_ids:
+            self._chunk_pins[cid] = self._chunk_pins.get(cid, 0) + 1
+
+    def _unpin_chunks_locked(self, chunk_ids: Sequence[str]) -> None:
+        for cid in chunk_ids:
+            n = self._chunk_pins.get(cid, 0) - 1
+            if n > 0:
+                self._chunk_pins[cid] = n
+            else:
+                self._chunk_pins.pop(cid, None)
+
+    def chunk_pinned(self, chunk_id: str) -> bool:
+        with self._lock:
+            return bool(self._chunk_pins.get(chunk_id))
+
+    @property
+    def resident_chunk_bytes(self) -> int:
+        """Bytes currently resident (evictions decrement)."""
+        return self.chunk_stats.chunk_bytes_stored
+
+    def _enforce_capacity_locked(self, exempt: Optional[str] = None,
+                                 exempt_chunks: Optional[Set[str]] = None
+                                 ) -> None:
+        """Chunk-granularity eviction past ``capacity_bytes``; holds
+        ``_lock``.  Pinned (build-lease) and in-flight-claimed chunks are
+        never victims — the budget is soft against them (counted in
+        ``pin_denied_evictions`` when they keep the store over budget).
+        ``exempt`` (a component digest, from the base registration path) is
+        irrelevant at chunk granularity: registration adds no chunk bytes.
+        ``exempt_chunks`` protects a just-committed batch from the pass its
+        own commit triggered."""
+        if self.capacity_bytes is None:
+            return
+        need = self.chunk_stats.chunk_bytes_stored - self.capacity_bytes
+        if need <= 0:
+            return
+        victims, short, pin_blocked = self._select_victims_locked(
+            need, exempt_chunks)
+        if short > 0 and pin_blocked:
+            # only a real pin/in-flight obstruction counts as a denial — a
+            # shortfall caused solely by the exempt just-committed batch is
+            # a transient oversized commit, not pin pressure
+            self.lifecycle_stats.pin_denied_evictions += 1
+        if not victims:
+            return
+        # retraction BEFORE the drop: listeners (e.g. PeerIndex retraction)
+        # run while the bytes are still present, so a peer that selected
+        # this node either transfers before the drop or sees a store-
+        # verified failure and falls back — the index never over-claims
+        for listener in self.eviction_listeners:
+            try:
+                listener(list(victims))
+            except Exception:  # noqa: BLE001 — advisory consumers only
+                continue
+        self._drop_chunks_locked(victims)
+
+    def _select_victims_locked(self, need: int,
+                               exempt_chunks: Optional[Set[str]] = None
+                               ) -> Tuple[List[str], int, bool]:
+        """Pick eviction victims worth ``need`` bytes in policy order.
+        Returns (victims, bytes still unfreeable, whether a pinned or
+        in-flight chunk blocked the walk).  ``cheapest-to-restore`` walks
+        peer-held chunks (LRU order) first — content a linked peer still
+        holds is restored over a peer link, not the upstream registry —
+        then falls back to plain LRU for the remainder."""
+        victims: List[str] = []
+        pin_blocked = False
+        candidates: List[Tuple[str, int]] = []
+        for cid, size in self._chunk_present.items():
+            if self._chunk_pins.get(cid) or cid in self._chunk_inflight:
+                pin_blocked = True
+                continue
+            if exempt_chunks is not None and cid in exempt_chunks:
+                continue
+            candidates.append((cid, size))
+        groups = [candidates]
+        if self.eviction_policy == "cheapest-to-restore":
+            held = self._peer_held([cid for cid, _sz in candidates])
+            if held is not None:
+                groups = [[cs for cs in candidates if cs[0] in held],
+                          [cs for cs in candidates if cs[0] not in held]]
+        for group in groups:
+            for cid, size in group:
+                if need <= 0:
+                    break
+                victims.append(cid)
+                need -= size
+            if need <= 0:
+                break
+        return victims, need, pin_blocked
+
+    def _peer_held(self, chunk_ids: Sequence[str]) -> Optional[Set[str]]:
+        """Which of ``chunk_ids`` a linked peer still holds; None without
+        an oracle (policy degrades to LRU).  Prefers the batch probe — one
+        peer-index snapshot per eviction pass instead of per chunk."""
+        if self.peer_probe_batch is not None:
+            try:
+                return set(self.peer_probe_batch(chunk_ids))
+            except Exception:  # noqa: BLE001 — oracle is advisory
+                return set()
+        if self.peer_probe is None:
+            return None
+        held: Set[str] = set()
+        for cid in chunk_ids:
+            try:
+                if self.peer_probe(cid):
+                    held.add(cid)
+            except Exception:  # noqa: BLE001 — oracle is advisory
+                continue
+        return held
+
+    def _drop_chunks_locked(self, victims: Sequence[str]) -> None:
+        """Drop ``victims``' bytes, mark referencing components incomplete
+        (their next plan re-scans — a miss), GC components with no content
+        left; holds ``_lock``."""
+        touched: Set[str] = set()
+        for cid in victims:
+            size = self._chunk_present.pop(cid)
+            self._evicted_ids.add(cid)
+            self.chunk_stats.chunks_stored -= 1
+            self.chunk_stats.chunk_bytes_stored -= size
+            self.chunk_stats.chunk_bytes_evicted += size
+            self.lifecycle_stats.evictions += 1
+            self.lifecycle_stats.evicted_bytes += size
+            touched.update(self._chunk_refs.get(cid, ()))
+        for dg in touched:
+            c = self._by_digest.get(dg)
+            if c is None:
+                continue
+            self._incomplete.add(dg)
+            if self.path:
+                # the persisted JSON would reload as present-with-holes;
+                # pull it back until a repair re-lands the content
+                self._unpersisted.setdefault(dg, c)
+                try:
+                    os.remove(os.path.join(self.path, dg + ".json"))
+                except OSError:
+                    pass
+            ids = self._comp_chunk_ids.get(dg, ())
+            if self._digest_pins.get(dg):
+                continue
+            if all(i not in self._chunk_present and
+                   i not in self._chunk_inflight for i in ids):
+                self._gc_component_locked(dg)
+
+    def _gc_component_locked(self, dg: str) -> None:
+        """Remove a component whose every chunk is gone: the next build of
+        this digest is a plain component-level miss; holds ``_lock``."""
+        c = self._by_digest.pop(dg, None)
+        if c is None:
+            return
+        self.stats.bytes_stored -= c.size_bytes
+        # refetch accounting survives GC via one digest-level marker: the
+        # per-chunk markers of chunks only this component referenced are
+        # dropped below (bounded bookkeeping), and a re-registration of the
+        # digest re-marks exactly the chunks it re-claims (plan_fetch)
+        self._evicted_digests.add(dg)
+        self._incomplete.discard(dg)
+        self._unpersisted.pop(dg, None)
+        self._comp_pending.pop(dg, None)
+        self._chunks_memo.pop(dg, None)
+        for cid in self._comp_chunk_ids.pop(dg, ()):
+            refs = self._chunk_refs.get(cid)
+            if refs is not None:
+                refs.discard(dg)
+                if not refs:
+                    del self._chunk_refs[cid]
+                    # no component references this chunk anymore: its
+                    # refetch marker is moot — drop it so a long-lived
+                    # bounded node's bookkeeping stays bounded too
+                    self._evicted_ids.discard(cid)
+        self.lifecycle_stats.components_gcd += 1
+        if self.path:
+            try:
+                os.remove(os.path.join(self.path, dg + ".json"))
+            except OSError:
+                pass

@@ -315,6 +315,7 @@ class BuildReport:
     overlap_s: float = 0.0          # barrier-stage sum minus critical path
     stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     #                               ^ per-lifecycle-stage wall offsets
+    listener_errors: int = 0        # advisory readiness-callback raises
 
     @property
     def bytes_wire_fetched(self) -> int:

@@ -36,12 +36,17 @@ first-weight-use gate and is an alias for COMPLETE.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import (Any, Callable, Dict, FrozenSet, List, Optional, Sequence,
                     Set)
 
 from .component import UniformComponent
+
+# Unique suffix for build pin-lease ids: concurrent builds of the same
+# (CIR, platform) must hold distinct leases
+_LEASE_SEQ = itertools.count(1)
 
 # Lifecycle stages, in order.  "complete" (== "weights") is the only stage
 # gated by the asset tail; "ready" is the deployable point.
@@ -189,7 +194,9 @@ class ComponentReadiness:
     event (after the stage gates update), e.g. a fleet node announcing the
     component's chunks to its peers.  Listeners are advisory: one raising
     is swallowed (and the rest still run) — a failing consumer must not
-    fail the build it observes.
+    fail the build it observes — but never silently: every swallowed raise
+    is counted in ``listener_errors``, which the orchestrator surfaces
+    through ``BuildReport.listener_errors``.
     """
 
     def __init__(self, comps: Sequence[UniformComponent],
@@ -201,6 +208,7 @@ class ComponentReadiness:
         self._events = {stage: threading.Event() for stage in self._pending}
         self._error: Optional[BaseException] = None
         self._listeners = list(listeners or ())
+        self.listener_errors = 0      # advisory-callback raises, swallowed
         for stage, pend in self._pending.items():
             if not pend:
                 self._events[stage].set()
@@ -219,6 +227,8 @@ class ComponentReadiness:
             try:
                 listener(c)
             except Exception:  # noqa: BLE001 — advisory consumers only
+                with self._lock:
+                    self.listener_errors += 1
                 continue
 
     def fail(self, exc: BaseException) -> None:
@@ -304,6 +314,16 @@ class BuildOrchestrator:
         fetch_exc: List[BaseException] = []
         fetch_thread: Optional[threading.Thread] = None
 
+        # pin lease: the build's resolved content is unevictable from plan
+        # time until lifecycle COMPLETE (released in the finally below, so
+        # error paths release too — a crashed build must not pin forever)
+        store = getattr(self.builder, "store", None)
+        lease_id = None
+        if store is not None and hasattr(store, "acquire_build_lease"):
+            lease_id = f"{inst.cir.name}@{inst.spec.platform_id}" \
+                       f"#lease{next(_LEASE_SEQ)}"
+            store.acquire_build_lease(lease_id, comps)
+
         def run_fetch() -> None:
             try:
                 self.builder.fetch_engine.fetch(comps, report,
@@ -357,9 +377,16 @@ class BuildOrchestrator:
                 + report.assemble_s + report.compile_s
             report.overlap_s = max(0.0,
                                    barrier_sum - report.critical_path_s)
+            report.listener_errors = readiness.listener_errors
             life.advance("complete")
         except BaseException as e:
             if fetch_thread is not None and fetch_thread.is_alive():
                 fetch_thread.join()            # settle claims + accounting
+            report.listener_errors = readiness.listener_errors
             life.fail(e)
             raise
+        finally:
+            # release after the fetch has settled on both paths (the tail
+            # joined above), so nothing mid-transfer loses its pin
+            if lease_id is not None:
+                store.release_build(lease_id)

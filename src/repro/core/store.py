@@ -14,15 +14,25 @@ version-bumped re-deploy pays only the unshared delta.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 import json
 import math
 import os
 import threading
-from typing import Dict, Iterable, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import (Dict, Iterable, List, Mapping, Optional,
+                    Sequence, Set, Tuple)
 
 from .component import UniformComponent
+
+# Pluggable eviction policies a capacity-bounded store understands.
+#   lru                 — evict the least-recently-used unpinned entry.
+#   cheapest-to-restore — peer-aware: prefer evicting content a linked peer
+#                         still holds (restoring it later costs a peer link,
+#                         not the upstream registry), LRU within each tier.
+#                         Without a peer probe it degrades to plain LRU.
+EVICTION_POLICIES = ("lru", "cheapest-to-restore")
 
 # Fraction of a component's pieces whose identity is stable across versions
 # and env variants of the same (manager, name) — the paper's Table 1 partial
@@ -98,23 +108,67 @@ class StoreStats:
         return d
 
 
+@dataclasses.dataclass
+class LifecycleStats:
+    """Capacity/eviction/lease accounting of a lifecycle-managed store."""
+    evictions: int = 0              # entries (components or chunks) evicted
+    evicted_bytes: int = 0          # bytes dropped by eviction, cumulative
+    refetch_bytes: int = 0          # bytes re-fetched after being evicted
+    pin_denied_evictions: int = 0   # passes pins/in-flight kept over budget
+    components_gcd: int = 0         # components GC'd (every chunk evicted)
+    leases_acquired: int = 0
+    leases_released: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
 class LocalComponentStore:
     """Content-addressed store: digest -> component metadata (+virtual bytes).
 
     Thread-safe: every read of ``_by_digest`` / ``_builds`` snapshots or
     checks under the lock, so concurrent ``FleetDeployer`` builds can freely
     interleave ``put()`` with ``digests()`` / ``get()`` / report calls.
+
+    Lifecycle-managed: ``capacity_bytes`` bounds the resident bytes.  At
+    component granularity (this class) the LRU unpinned component is evicted
+    past the budget; ``ChunkedComponentStore`` refines this to chunk
+    granularity.  A build **pin lease** (``acquire_build_lease`` at plan
+    time, ``release_build`` at lifecycle COMPLETE — the ``BuildOrchestrator``
+    drives both, error paths included) makes the build's resolved content
+    unevictable while the build runs; the capacity budget is *soft* against
+    pins — if everything resident is pinned or in flight the store stays
+    over budget and counts a ``pin_denied_evictions`` instead of evicting.
     """
 
-    def __init__(self, path: Optional[str] = None):
+    def __init__(self, path: Optional[str] = None,
+                 capacity_bytes: Optional[int] = None,
+                 eviction_policy: str = "lru"):
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError("capacity_bytes must be positive (or None)")
+        if eviction_policy not in EVICTION_POLICIES:
+            raise ValueError(f"unknown eviction policy {eviction_policy!r} "
+                             f"(one of {EVICTION_POLICIES})")
         self.path = path
-        self._by_digest: Dict[str, UniformComponent] = {}
+        self.capacity_bytes = capacity_bytes
+        self.eviction_policy = eviction_policy
+        # insertion/recency order IS the LRU order (get()/put()-hit refresh)
+        self._by_digest: "collections.OrderedDict[str, UniformComponent]" = \
+            collections.OrderedDict()
         self.stats = StoreStats()
+        self.lifecycle_stats = LifecycleStats()
         self._builds: Dict[str, List[str]] = {}   # build id -> digests
+        # build id -> (pinned digests, pinned chunk ids); chunk ids are
+        # always empty at component granularity (see ChunkedComponentStore)
+        self._leases: Dict[str, Tuple[List[str], List[str]]] = {}
+        self._digest_pins: Dict[str, int] = {}    # digest -> lease refcount
+        self._evicted_digests: Set[str] = set()   # for refetch accounting
         self._lock = threading.RLock()
         if path:
             os.makedirs(path, exist_ok=True)
             self._load()
+            with self._lock:
+                self._enforce_capacity_locked()
 
     # -- cache protocol -------------------------------------------------------
     def has(self, c: UniformComponent) -> bool:
@@ -128,7 +182,9 @@ class LocalComponentStore:
 
     def get(self, digest: str) -> UniformComponent:
         with self._lock:
-            return self._by_digest[digest]
+            c = self._by_digest[digest]
+            self._by_digest.move_to_end(digest)      # LRU refresh
+            return c
 
     def put(self, c: UniformComponent) -> bool:
         """Returns True if the component was newly stored (a miss)."""
@@ -142,14 +198,25 @@ class LocalComponentStore:
         self.stats.bytes_requested += c.size_bytes
         if dg in self._by_digest:
             self.stats.hits += 1
+            self._by_digest.move_to_end(dg)          # LRU refresh
             return False
         self._by_digest[dg] = c
         self.stats.puts += 1
         self.stats.misses += 1
         self.stats.bytes_stored += c.size_bytes
+        if dg in self._evicted_digests:
+            self._evicted_digests.discard(dg)
+            self._count_refetch_locked(c)
         if self.path:
             self._persist(c)
+        self._enforce_capacity_locked(exempt=dg)
         return True
+
+    def _count_refetch_locked(self, c: UniformComponent) -> None:
+        """A previously evicted entry came back; holds ``_lock``.  At
+        component granularity the whole size is the re-fetch; the chunk
+        store refines this to the actually re-claimed chunk bytes."""
+        self.lifecycle_stats.refetch_bytes += c.size_bytes
 
     def _persist(self, c: UniformComponent) -> None:
         """Write one component's JSON; subclasses may defer (the chunk
@@ -162,6 +229,94 @@ class LocalComponentStore:
                      comps: Sequence[UniformComponent]) -> None:
         with self._lock:
             self._builds[build_id] = [c.digest() for c in comps]
+
+    # -- pin leases (build lifecycle) ----------------------------------------
+    def acquire_build_lease(self, build_id: str,
+                            comps: Sequence[UniformComponent]) -> None:
+        """Pin ``comps`` for ``build_id``: from plan time until
+        ``release_build``, none of this content is evictable.  One lease per
+        build id — re-acquiring an active id is a caller bug."""
+        digests = [c.digest() for c in comps]
+        chunk_ids = self._lease_chunk_ids(comps)
+        with self._lock:
+            if build_id in self._leases:
+                raise ValueError(f"build lease {build_id!r} already active")
+            for dg in digests:
+                self._digest_pins[dg] = self._digest_pins.get(dg, 0) + 1
+            self._pin_chunks_locked(chunk_ids)
+            self._leases[build_id] = (digests, chunk_ids)
+            self.lifecycle_stats.leases_acquired += 1
+
+    def release_build(self, build_id: str) -> bool:
+        """Release ``build_id``'s pin lease (idempotent; the ``_builds``
+        history written by ``record_build`` is kept — it is accounting, the
+        lease is lifecycle).  Newly unpinned content becomes evictable, so a
+        store held over budget by pins shrinks back here."""
+        with self._lock:
+            rec = self._leases.pop(build_id, None)
+            if rec is None:
+                return False
+            digests, chunk_ids = rec
+            for dg in digests:
+                n = self._digest_pins.get(dg, 0) - 1
+                if n > 0:
+                    self._digest_pins[dg] = n
+                else:
+                    self._digest_pins.pop(dg, None)
+            self._unpin_chunks_locked(chunk_ids)
+            self.lifecycle_stats.leases_released += 1
+            self._enforce_capacity_locked()
+            return True
+
+    def lease_active(self, build_id: str) -> bool:
+        with self._lock:
+            return build_id in self._leases
+
+    def pinned_digests(self) -> Set[str]:
+        with self._lock:
+            return set(self._digest_pins)
+
+    # chunk-granularity hooks the ChunkedComponentStore overrides
+    def _lease_chunk_ids(self, comps: Sequence[UniformComponent]
+                         ) -> List[str]:
+        return []
+
+    def _pin_chunks_locked(self, chunk_ids: Sequence[str]) -> None:
+        pass
+
+    def _unpin_chunks_locked(self, chunk_ids: Sequence[str]) -> None:
+        pass
+
+    # -- capacity enforcement (component granularity) -------------------------
+    def _enforce_capacity_locked(self, exempt: Optional[str] = None) -> None:
+        """Evict LRU unpinned components past ``capacity_bytes``; holds
+        ``_lock``.  ``ChunkedComponentStore`` replaces this with chunk-level
+        eviction.  The budget is soft against pins (and against the entry
+        just being stored, ``exempt`` — inserting must not thrash itself
+        out): when nothing else is evictable the store stays over budget,
+        counted in ``pin_denied_evictions``."""
+        if self.capacity_bytes is None:
+            return
+        while self.stats.bytes_stored > self.capacity_bytes:
+            victim = next((dg for dg in self._by_digest
+                           if dg != exempt and not self._digest_pins.get(dg)),
+                          None)
+            if victim is None:
+                self.lifecycle_stats.pin_denied_evictions += 1
+                return
+            self._evict_component_locked(victim)
+
+    def _evict_component_locked(self, dg: str) -> None:
+        c = self._by_digest.pop(dg)
+        self.stats.bytes_stored -= c.size_bytes
+        self._evicted_digests.add(dg)
+        self.lifecycle_stats.evictions += 1
+        self.lifecycle_stats.evicted_bytes += c.size_bytes
+        if self.path:
+            try:
+                os.remove(os.path.join(self.path, dg + ".json"))
+            except OSError:
+                pass
 
     def _load(self) -> None:
         for fn in sorted(os.listdir(self.path)):
@@ -196,12 +351,15 @@ class LocalComponentStore:
         by_digest, builds = self._snapshot()
         report: Dict[str, Dict[str, float]] = {}
 
-        # --- component level
+        # --- component level  (digests evicted/GC'd since their build was
+        # recorded are skipped — the history outlives bounded-store content)
         before_b = before_o = 0
         uniq: Dict[str, int] = {}
         for _bid, dgs in builds:
             for dg in dgs:
-                c = by_digest[dg]
+                c = by_digest.get(dg)
+                if c is None:
+                    continue
                 before_b += c.size_bytes
                 before_o += 1
                 uniq[dg] = c.size_bytes
@@ -216,7 +374,9 @@ class LocalComponentStore:
         for _bid, dgs in builds:
             groups: Dict[str, List[str]] = {}
             for dg in dgs:
-                c = by_digest[dg]
+                c = by_digest.get(dg)
+                if c is None:
+                    continue
                 groups.setdefault(c.manager, []).append(dg)
             for mgr, group in sorted(groups.items()):
                 size = sum(by_digest[d].size_bytes for d in group)
@@ -235,6 +395,8 @@ class LocalComponentStore:
             piece_uniq: Dict[str, int] = {}
             for _bid, dgs in builds:
                 for dg in dgs:
+                    if dg not in by_digest:
+                        continue
                     for ch in component_pieces(by_digest[dg], piece):
                         before_b += ch.size
                         before_o += 1
@@ -256,7 +418,7 @@ class LocalComponentStore:
         out: Dict[Tuple[str, str], float] = {}
         for i, (a, da) in enumerate(builds):
             for b, db in builds[i + 1:]:
-                sa, sb = set(da), set(db)
+                sa, sb = set(da) & set(by_digest), set(db) & set(by_digest)
                 union_bytes = sum(by_digest[d].size_bytes for d in sa | sb)
                 inter_bytes = sum(by_digest[d].size_bytes for d in sa & sb)
                 out[(a, b)] = inter_bytes / union_bytes if union_bytes else 0.0

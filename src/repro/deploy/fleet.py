@@ -26,7 +26,7 @@ from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
                               LazyBuilder)
 from ..core.registry import UniformComponentService
 from ..core.spec import SpecSheet
-from ..core.store import LocalComponentStore
+from ..core.store import EVICTION_POLICIES, LocalComponentStore
 from .topology import FleetTopology, NodePeering, NodeTraffic, PeerIndex
 
 
@@ -82,6 +82,12 @@ class FleetResult:
     peer_fallbacks_total: int = 0     # failed peer pulls re-routed upstream
     node_traffic: Dict[str, NodeTraffic] = dataclasses.field(
         default_factory=dict)         # node id -> this deploy's wire split
+    # -- store-lifecycle columns (capacity-bounded nodes) ---------------
+    evicted_bytes_total: int = 0      # bytes evicted across stores, this
+    #                                   deploy (capacity churn)
+    pin_denied_evictions_total: int = 0   # passes pins kept over budget
+    refetch_bytes_total: int = 0      # re-fetched bytes of evicted content
+    #                                   (the wire price of churn)
 
     @property
     def ok(self) -> bool:
@@ -124,6 +130,13 @@ class FleetResult:
                 + (f" (asset tail overlapped "
                    f"{(self.wall_s - self.ready_s_wall) * 1e3:.1f} ms)"
                    if self.wall_s > self.ready_s_wall else ""))
+        if self.evicted_bytes_total or self.refetch_bytes_total or \
+                self.pin_denied_evictions_total:
+            lines.append(
+                f"  store churn: {self.evicted_bytes_total / 2**20:.1f} MiB "
+                f"evicted, {self.refetch_bytes_total / 2**20:.1f} MiB "
+                f"re-fetched, {self.pin_denied_evictions_total} "
+                f"pin-denied eviction passes")
         if self.node_traffic:
             lines.append(
                 f"  peer distribution: "
@@ -189,7 +202,11 @@ class FleetDeployer:
                  overlap: bool = True,
                  topology: Optional[FleetTopology] = None,
                  use_peers: bool = True,
-                 simulate_links: bool = False):
+                 simulate_links: bool = False,
+                 eviction_policy: str = "lru"):
+        if eviction_policy not in EVICTION_POLICIES:
+            raise ValueError(f"unknown eviction policy {eviction_policy!r} "
+                             f"(one of {EVICTION_POLICIES})")
         self.plan_cache = plan_cache or BuildPlanCache()
         self.max_workers = max_workers
         self.overlap = overlap
@@ -198,9 +215,14 @@ class FleetDeployer:
         self._node_stores: Dict[str, ChunkedComponentStore] = {}
         self._node_peerings: Dict[str, NodePeering] = {}
         self._node_builders: Dict[str, LazyBuilder] = {}
+        self._warm_leases: Dict[str, str] = {}   # warm base id -> lease id
+        self._warm_gen = 0
         if topology is None:
+            # a caller-supplied store keeps its own policy; the default
+            # store gets the requested one
             self.store: Optional[LocalComponentStore] = \
-                store if store is not None else ChunkedComponentStore()
+                store if store is not None \
+                else ChunkedComponentStore(eviction_policy=eviction_policy)
             self.builder: Optional[LazyBuilder] = LazyBuilder(
                 service, self.store,
                 link_bandwidth_bps=link_bandwidth_bps,
@@ -216,12 +238,20 @@ class FleetDeployer:
         self.builder = None
         self.peer_index = PeerIndex()
         for node_id in topology.node_ids():
-            st = ChunkedComponentStore()
+            # the node's capacity bounds its store; eviction retracts this
+            # node's PeerIndex announcements before dropping bytes, and the
+            # cheapest-to-restore policy consults the peering layer for
+            # which chunks a linked peer could restore
+            st = ChunkedComponentStore(
+                capacity_bytes=topology.node(node_id).capacity_bytes,
+                eviction_policy=eviction_policy)
             peering = NodePeering(node_id, topology, self.peer_index,
                                   service, st,
                                   peer_stores=self._node_stores,
                                   enabled=use_peers,
                                   simulate=simulate_links)
+            st.eviction_listeners.append(peering.on_chunks_evicted)
+            st.peer_probe_batch = peering.peer_held_subset
             lb = LazyBuilder(service, st,
                              link_bandwidth_bps=link_bandwidth_bps,
                              plan_cache=self.plan_cache,
@@ -244,6 +274,18 @@ class FleetDeployer:
     def _stores(self) -> List[LocalComponentStore]:
         return [self.store] if self.store is not None \
             else list(self._node_stores.values())
+
+    def _lifecycle_totals(self) -> Tuple[int, int, int]:
+        """(evicted_bytes, pin_denied_evictions, refetch_bytes) summed
+        across this deployer's stores — cumulative; deploy() reports the
+        per-deploy delta."""
+        ev = pd = rf = 0
+        for s in self._stores():
+            ls = s.lifecycle_stats
+            ev += ls.evicted_bytes
+            pd += ls.pin_denied_evictions
+            rf += ls.refetch_bytes
+        return ev, pd, rf
 
     def _builder_for(self, spec: SpecSheet) -> Tuple[LazyBuilder,
                                                      Optional[str]]:
@@ -273,6 +315,7 @@ class FleetDeployer:
                                for s in self._stores())
         traffic_before = {n: p.traffic.snapshot()
                           for n, p in self._node_peerings.items()}
+        lc_before = self._lifecycle_totals()
         # placement is validated up front: a misplaced spec is a caller
         # error, not a per-platform deployment failure
         builders = [self._builder_for(s) for s in specs]
@@ -334,6 +377,7 @@ class FleetDeployer:
                 stage_walls[stage] = max(stage_walls.get(stage, 0.0), off)
         node_traffic = {n: p.traffic.snapshot().since(traffic_before[n])
                         for n, p in self._node_peerings.items()}
+        lc_after = self._lifecycle_totals()
         return FleetResult(
             cir_name=cir.name,
             deployments=deployments,
@@ -361,6 +405,9 @@ class FleetDeployer:
             peer_fallbacks_total=sum(t.peer_fallbacks
                                      for t in node_traffic.values()),
             node_traffic=node_traffic,
+            evicted_bytes_total=lc_after[0] - lc_before[0],
+            pin_denied_evictions_total=lc_after[1] - lc_before[1],
+            refetch_bytes_total=lc_after[2] - lc_before[2],
         )
 
     # ------------------------------------------------------------------
@@ -379,20 +426,93 @@ class FleetDeployer:
         chunks from the seed over peer links instead of their slow
         upstream — warming an edge node over its own thin registry link
         is exactly what the topology exists to avoid.
+
+        Warmed content is **pinned** (a ``warm:<cir digest>`` lease on the
+        warmed store): on a capacity-bounded node, a churny workload must
+        not silently evict the seed content edges are about to peer off.
+        The pin is acquired as soon as the build's components are known
+        (usually while the build's own plan-time lease §8 still holds) and
+        then *verified*: anything a concurrent deploy's eviction managed to
+        take in the hand-over race is re-fetched under the already-held
+        warm pin, which cannot be evicted again — so warm() returning
+        means the content is resident AND pinned.  A re-warm acquires the
+        new lease generation before releasing the old one.
+        ``release_warm`` drops the lease when the CIR is retired.
         """
         if self.topology is None:
-            res = self.deploy(cir, specs, overrides=overrides,
-                              assemble=False)
-            return sum(d.ok for d in res.deployments)
-        seed = self.topology.seed
-        assert seed is not None, "topology has no nodes"
-        builder = self._node_builders[seed]
+            assert self.store is not None
+            builder, store = self.builder, self.store
+        else:
+            seed = self.topology.seed
+            assert seed is not None, "topology has no nodes"
+            builder, store = self._node_builders[seed], \
+                self._node_stores[seed]
         ok = 0
+        comps: Dict[str, Any] = {}
+        insts = []
         for spec in specs:
+            # non-blocking: every spec's build is launched up front (they
+            # run concurrently on their driver threads) and resolution is
+            # done when build() returns, so all components can be pinned
+            # while the builds — and their plan-time leases — are in flight
             try:
-                builder.build(cir, spec, overrides=overrides,
-                              assemble=False, overlap=self.overlap)
+                inst = builder.build(cir, spec, overrides=overrides,
+                                     assemble=False, overlap=self.overlap,
+                                     block=False)
+            except Exception:  # noqa: BLE001 — per-platform isolation
+                continue
+            insts.append((spec, inst))
+            for c in inst.bundle.components():
+                comps[c.digest()] = c
+        if comps:
+            self._pin_warm(store, cir, list(comps.values()))
+        for spec, inst in insts:
+            try:
+                inst.wait("complete")
+                # a build's lease can release (lifecycle COMPLETE on the
+                # driver thread) before our pin landed — verify, and
+                # re-land anything evicted in that window under the pin
+                if self._warmed_missing(store,
+                                        inst.bundle.components()):
+                    builder.build(cir, spec, overrides=overrides,
+                                  assemble=False, overlap=self.overlap)
                 ok += 1
             except Exception:  # noqa: BLE001 — per-platform isolation
                 continue
         return ok
+
+    @staticmethod
+    def _warmed_missing(store: LocalComponentStore, comps) -> bool:
+        """Did any warmed content go absent before the warm pin landed?"""
+        if isinstance(store, ChunkedComponentStore):
+            return any(store.missing_chunks(c) for c in comps)
+        return any(not store.has(c) for c in comps)
+
+    def _pin_warm(self, store: LocalComponentStore, cir: CIR,
+                  comps: Sequence[Any]) -> None:
+        """Pin warmed content under a fresh generation-suffixed lease, then
+        release the previous generation: overlap-then-release, so neither a
+        re-warm nor the per-spec pin growth above ever leaves a window
+        where already-warmed content is unpinned."""
+        base = f"warm:{cir.digest()[:16]}"
+        self._warm_gen += 1
+        new_id = f"{base}#{self._warm_gen}"
+        store.acquire_build_lease(new_id, comps)
+        old_id = self._warm_leases.get(base)
+        if old_id is not None:
+            store.release_build(old_id)
+        self._warm_leases[base] = new_id
+
+    def release_warm(self, cir: CIR) -> bool:
+        """Release the pin lease ``warm()`` took for ``cir`` (the seed
+        content becomes evictable again)."""
+        base = f"warm:{cir.digest()[:16]}"
+        lease = self._warm_leases.pop(base, None)
+        if lease is None:
+            return False
+        if self.topology is None:
+            assert self.store is not None
+            return self.store.release_build(lease)
+        seed = self.topology.seed
+        return seed is not None and \
+            self._node_stores[seed].release_build(lease)

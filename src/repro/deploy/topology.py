@@ -57,9 +57,12 @@ class PeerTransferError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class FleetNode:
-    """One deployment host of the fleet."""
+    """One deployment host of the fleet.  ``capacity_bytes`` bounds the
+    node's chunk store (None == unbounded — the classic datacenter host);
+    a bounded node evicts under churn, see ``docs/cir-format.md`` §8."""
     node_id: str
     upstream_bps: float = DEFAULT_UPSTREAM_BPS   # node ↔ registry link
+    capacity_bytes: Optional[int] = None         # store budget (disk)
 
 
 class FleetTopology:
@@ -80,10 +83,14 @@ class FleetTopology:
     # -- construction ---------------------------------------------------
     def add_node(self, node_id: str,
                  upstream_bps: float = DEFAULT_UPSTREAM_BPS,
-                 seed: bool = False) -> FleetNode:
+                 seed: bool = False,
+                 capacity_bytes: Optional[int] = None) -> FleetNode:
         if node_id in self._nodes:
             raise TopologyError(f"node {node_id!r} already exists")
-        node = FleetNode(node_id, upstream_bps=upstream_bps)
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise TopologyError("capacity_bytes must be positive (or None)")
+        node = FleetNode(node_id, upstream_bps=upstream_bps,
+                         capacity_bytes=capacity_bytes)
         self._nodes[node_id] = node
         if seed or self.seed is None:
             self.seed = node_id
@@ -136,16 +143,23 @@ class FleetTopology:
                     cloud_upstream_bps: float = 1.25e9,
                     edge_upstream_bps: float = 6.25e6,
                     cloud_edge_bps: float = 125e6,
-                    edge_edge_bps: float = 2.5e8) -> "FleetTopology":
+                    edge_edge_bps: float = 2.5e8,
+                    edge_capacity_bytes: Optional[int] = None,
+                    cloud_capacity_bytes: Optional[int] = None
+                    ) -> "FleetTopology":
         """One cloud seed + N edge nodes: edges have a slow registry link
         (50 Mbps default) but fast local links to the cloud (1 Gbps) and
         faster still to each other (same-site LAN, 2 Gbps) — the sky/edge
-        fan-out of the distribution benchmark.  Bandwidths are bytes/s."""
+        fan-out of the distribution benchmark.  Bandwidths are bytes/s.
+        ``edge_capacity_bytes`` bounds every edge's chunk store (the tight
+        disks of the churn benchmark); the cloud is unbounded by default."""
         topo = cls()
-        topo.add_node(cloud_id, upstream_bps=cloud_upstream_bps, seed=True)
+        topo.add_node(cloud_id, upstream_bps=cloud_upstream_bps, seed=True,
+                      capacity_bytes=cloud_capacity_bytes)
         edges = [f"edge-{i}" for i in range(n_edges)]
         for e in edges:
-            topo.add_node(e, upstream_bps=edge_upstream_bps)
+            topo.add_node(e, upstream_bps=edge_upstream_bps,
+                          capacity_bytes=edge_capacity_bytes)
             topo.link(cloud_id, e, cloud_edge_bps)
         for i, a in enumerate(edges):
             for b in edges[i + 1:]:
@@ -201,6 +215,14 @@ class PeerIndex:
     def holders(self, chunk_id: str) -> Tuple[str, ...]:
         with self._lock:
             return tuple(sorted(self._holders.get(chunk_id, ())))
+
+    def holders_many(self, chunk_ids: Sequence[str]
+                     ) -> Dict[str, Tuple[str, ...]]:
+        """Batch holder lookup under one lock acquisition (unsorted — the
+        callers below only test membership)."""
+        with self._lock:
+            return {cid: tuple(self._holders.get(cid, ()))
+                    for cid in chunk_ids}
 
     def chunks_held(self, node_id: str) -> int:
         with self._lock:
@@ -305,15 +327,56 @@ class NodePeering:
 
     # -- announcements (store-verified, can never over-claim) -----------
     def announce_chunks(self, chunks: Sequence[Chunk]) -> None:
-        self.index.announce(
-            self.node_id,
-            [ch.id for ch in chunks if self.store.has_chunk(ch.id)])
+        present = self.store.present_chunks([ch.id for ch in chunks])
+        self.index.announce(self.node_id, present)
+        # a capacity eviction can interleave between the presence check and
+        # the announce landing (its retract-before-drop fires first, so our
+        # announce would re-add chunks already gone): re-verify and retract
+        # anything that went absent — the index may over-forget, never
+        # over-claim
+        still = set(self.store.present_chunks(present))
+        stale = [cid for cid in present if cid not in still]
+        if stale:
+            self.index.retract(self.node_id, stale)
 
     def on_component_ready(self, c: UniformComponent) -> None:
         """Orchestrator readiness listener: a component's content was just
         proven present — announce every chunk the store actually holds
         (a degraded-timeout readiness signal announces only what landed)."""
         self.announce_chunks(self.store.chunks_of(c))
+
+    # -- eviction hooks (store lifecycle, docs/cir-format.md §8) --------
+    def on_chunks_evicted(self, chunk_ids: Sequence[str]) -> None:
+        """Store eviction listener.  Fired — under the store lock — BEFORE
+        the bytes are dropped, so this node's advertisements are retracted
+        while the content is still present: a peer that races the eviction
+        either transfers in time or sees a store-verified failure and
+        falls back upstream; the index never over-claims.  Must not call
+        back into the store (it holds the store lock)."""
+        self.index.retract(self.node_id, list(chunk_ids))
+
+    def peer_holds(self, chunk_id: str) -> bool:
+        """Cheapest-to-restore eviction oracle: does a *linked* peer still
+        hold this chunk?  If yes, evicting it is cheap — restoring costs a
+        peer link, not the upstream registry.  May run under the store
+        lock; touches only the index and the topology."""
+        for peer in self.index.holders(chunk_id):
+            if peer == self.node_id:
+                continue
+            if self.topology.bandwidth(self.node_id, peer) is not None:
+                return True
+        return False
+
+    def peer_held_subset(self, chunk_ids: Sequence[str]) -> Set[str]:
+        """Batch form of ``peer_holds`` — one index snapshot for a whole
+        eviction pass instead of a cross-lock round-trip per chunk.  May
+        run under the store lock."""
+        linked = set(self.topology.peers_of(self.node_id))
+        out: Set[str] = set()
+        for cid, holders in self.index.holders_many(chunk_ids).items():
+            if any(h != self.node_id and h in linked for h in holders):
+                out.add(cid)
+        return out
 
     # -- source selection -----------------------------------------------
     def _best_source(self, chunk_id: str) -> Optional[str]:

@@ -1,7 +1,7 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
-from benchmarks.check_regression import (DISTRIBUTION, FETCH, PIPELINE,
-                                         Check, build_checks)
+from benchmarks.check_regression import (CHURN, DISTRIBUTION, FETCH,
+                                         PIPELINE, Check, build_checks)
 
 
 def test_higher_is_better_band():
@@ -31,7 +31,8 @@ def test_missing_baseline_skips_but_missing_fresh_fails():
         in c.row()
 
 
-def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream):
+def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
+          churn_reduction=27.0, churn_hit=0.34):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -43,14 +44,16 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream):
     pipe = {"avg_ready_reduction_pct": ready_pct}
     dist = {"avg_peer_offload_ratio": offload,
             "avg_upstream_vs_baseline_pct": upstream}
-    return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist}
+    churn = {"ctr_vs_lru_upstream_reduction_pct": churn_reduction,
+             "ctr_hit_rate": churn_hit}
+    return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 6
+    assert len(checks) == 8
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -62,6 +65,14 @@ def test_build_checks_pass_and_fail():
     failed = {c.metric for c in build_checks(base, collapsed) if not c.ok}
     assert any("peer_offload" in m for m in failed)
     assert any("upstream_vs_baseline" in m for m in failed)
+
+    # cheapest-to-restore losing its edge over lru fails the churn gate
+    # (the 15% abs floor binds even within the relative band)
+    worse = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, churn_reduction=12.0,
+                  churn_hit=0.10)
+    failed = {c.metric for c in build_checks(base, worse) if not c.ok}
+    assert any("ctr_vs_lru" in m for m in failed)
+    assert any("ctr_hit_rate" in m for m in failed)
 
 
 def test_build_checks_averages_common_archs_only():

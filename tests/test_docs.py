@@ -101,3 +101,51 @@ def test_topology_section_names_real_api():
     params = inspect.signature(FleetDeployer.__init__).parameters
     assert "topology" in params and "use_peers" in params
     assert "simulate_links" in params
+
+
+def test_lifecycle_section_names_real_api():
+    """§8 documents the store-lifecycle subsystem — the names and semantics
+    it promises must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (EVICTION_POLICIES, ChunkedComponentStore,
+                            LifecycleStats, LocalComponentStore)
+    from repro.deploy import FleetDeployer, FleetNode, NodePeering
+    from repro.deploy.fleet import FleetResult
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 8. Store lifecycle: capacity, pin leases, eviction, GC" \
+        in text
+    for name in ("acquire_build_lease", "release_build", "capacity_bytes",
+                 "pin_denied_evictions", "eviction_listeners",
+                 "cheapest-to-restore", "refetch_bytes", "release_warm",
+                 "BENCH_churn.json", "Retract before drop"):
+        assert name in text, f"§8 lost its {name} reference"
+    # the documented surface
+    for attr in ("acquire_build_lease", "release_build", "record_build"):
+        assert hasattr(LocalComponentStore, attr)
+    for pol in ("lru", "cheapest-to-restore"):
+        assert pol in EVICTION_POLICIES
+    for attr in ("eviction_listeners", "peer_probe"):
+        assert attr in inspect.signature(
+            ChunkedComponentStore.__init__).parameters or \
+            attr in ChunkedComponentStore(chunk_size=1024).__dict__
+    for field in ("evicted_bytes", "refetch_bytes", "pin_denied_evictions",
+                  "components_gcd"):
+        assert field in LifecycleStats.__dataclass_fields__
+    assert "capacity_bytes" in FleetNode.__dataclass_fields__
+    for attr in ("on_chunks_evicted", "peer_holds"):
+        assert hasattr(NodePeering, attr)
+    for attr in ("warm", "release_warm"):
+        assert hasattr(FleetDeployer, attr)
+    assert "eviction_policy" in inspect.signature(
+        FleetDeployer.__init__).parameters
+    for field in ("evicted_bytes_total", "pin_denied_evictions_total",
+                  "refetch_bytes_total"):
+        assert field in FleetResult.__dataclass_fields__
+    # README documents the capacity/churn workflow
+    with open(README) as f:
+        readme = f.read()
+    assert "capacity_bytes" in readme
+    assert "cheapest-to-restore" in readme
