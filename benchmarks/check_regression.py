@@ -30,7 +30,8 @@ FETCH = "BENCH_fetch.json"
 PIPELINE = "BENCH_pipeline.json"
 DISTRIBUTION = "BENCH_distribution.json"
 CHURN = "BENCH_churn.json"
-BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN)
+SCALE = "BENCH_scale.json"
+BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE)
 
 
 @dataclasses.dataclass
@@ -100,7 +101,7 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, churn, distribution
+    from . import build_time, churn, distribution, scale
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -119,8 +120,12 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
     churn.accounting_identity(quiet=True)
     churn_path = churn.write_bench_churn(
         path=os.path.join(out_dir, CHURN), smoke=True, rows=churn_rows)
+    scale_rows = scale.collect(smoke=True, quiet=True)
+    scale_path = scale.write_bench_scale(
+        path=os.path.join(out_dir, SCALE), smoke=True, rows=scale_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
-            DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path)}
+            DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path),
+            SCALE: _load(scale_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -174,6 +179,20 @@ def build_checks(base: Dict[str, Optional[Dict]],
         abs_limit=15.0)
     # ... and the churn hit-rate must not collapse (eviction gone rogue)
     add(CHURN, ["ctr_hit_rate"], True, 0.10)
+
+    # -- discrete-event scale: the 200-node smoke-time claim -------------
+    # wall clock: wide band for shared runners, hard 30 s ceiling — the
+    # number that makes a 200-node fleet deployable in a CI smoke job
+    add(SCALE, ["scale", "wall_s"], False, 1.5, abs_limit=30.0)
+    add(SCALE, ["scale", "peer_offload_ratio"], True, 0.15)
+    # per-node accounting must stay byte-identical across transports
+    add(SCALE, ["identity", "ok"], True, 0.0, abs_limit=1.0)
+    # hub death mid-deploy: must converge, and the fault-recovery wire
+    # overhead (extra registry bytes / fleet wire bytes) must stay small
+    add(SCALE, ["faults", "node_loss", "converged"], True, 0.0,
+        abs_limit=1.0)
+    add(SCALE, ["faults", "node_loss", "extra_upstream_pct"], False, 0.75,
+        abs_limit=15.0)
     return checks
 
 

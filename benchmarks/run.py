@@ -2,7 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV (one line per table).
 ``--smoke`` runs the CI-sized variant of benchmarks that support one
-(currently the churn suite, which then skips its concurrent phase)."""
+(the churn suite skips its concurrent phase; the scale suite keeps the
+full 200-node fan-out — that IS the smoke-time claim — but runs only the
+hub-death fault scenario)."""
 from __future__ import annotations
 
 import inspect
@@ -13,9 +15,9 @@ import traceback
 
 def main(smoke: bool = False) -> None:
     from . import (bandwidth, build_time, churn, cross_platform,
-                   distribution, image_size, roofline, sharing)
+                   distribution, image_size, roofline, scale, sharing)
     mods = [image_size, build_time, bandwidth, cross_platform, sharing,
-            distribution, churn, roofline]
+            distribution, churn, scale, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -1,0 +1,306 @@
+"""Fleet scale on the discrete-event transport: 200 nodes in CI smoke time.
+
+The threaded fetch path sleeps real wall clock per stripe; at WAN
+bandwidths a 200-node fan-out would sleep for hours.  The simulated
+transport (``repro.core.simnet``) replaces the sleeps with virtual-time
+link reservations, so the same deploy — same code, same byte accounting —
+finishes in seconds of wall clock while reporting thousands of seconds of
+virtual WAN time.  This benchmark pins that contract:
+
+  * *scale fan-out* — 1 cloud hub + ``SCALE_N_EDGES`` edges (hub spokes +
+    a same-site ring) deploys under ``WALL_CEILING_S`` of wall clock,
+    with the peer mesh carrying nearly all edge bytes;
+  * *identity* — a small fan-out run under BOTH transports produces
+    byte-identical per-node accounting (the simulation earns its speed
+    by changing nothing else);
+  * *fault scenarios* — seeded WAN faults (hub death mid-deploy, uplink
+    flap, partition) against the same topologies: every scenario must
+    converge, and the wire-byte overhead of recovering from a dead hub is
+    measured as ``extra_upstream_pct``.
+
+Writes ``BENCH_scale.json`` (CI artifact + regression-gate baseline; see
+``benchmarks.check_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS
+from repro.core import PreBuilder, SimNetwork, UPSTREAM, catalog, \
+    cpu_smoke, tpu_single_pod
+from repro.deploy import FleetDeployer, FleetTopology
+
+from .common import csv_row
+
+ARCH = "starcoder2-3b"
+SCALE_N_EDGES = 199              # + 1 cloud hub = a 200-node fleet
+WALL_CEILING_S = 30.0            # hard wall-clock budget for the fan-out
+FAULT_N_EDGES = 24               # fault scenarios run on a smaller fleet
+IDENTITY_N_EDGES = 4
+
+
+def _scale_topology(n_edges: int) -> FleetTopology:
+    """Hub-and-spoke + same-site ring: every edge links the cloud hub
+    (125 MB/s) and its two ring neighbours (250 MB/s); edge uplinks are
+    slow WAN (6.25 MB/s).  Constant links per node — selection stays
+    O(links), not O(fleet)."""
+    topo = FleetTopology()
+    topo.add_node("cloud", upstream_bps=1.25e9, seed=True)
+    edges = [f"edge-{i}" for i in range(n_edges)]
+    for e in edges:
+        topo.add_node(e, upstream_bps=6.25e6)
+        topo.link("cloud", e, 1.25e8)
+    if n_edges == 2:                     # a 2-ring is a single link
+        topo.link(edges[0], edges[1], 2.5e8)
+    elif n_edges > 2:
+        for i in range(n_edges):
+            topo.link(edges[i], edges[(i + 1) % n_edges], 2.5e8)
+    return topo
+
+
+def _place(topo: FleetTopology, n_edges: int):
+    cloud = tpu_single_pod()
+    topo.place(cloud.platform_id, "cloud")
+    edges = []
+    for i in range(n_edges):
+        s = dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+        topo.place(s.platform_id, f"edge-{i}")
+        edges.append(s)
+    return cloud, edges
+
+
+def scale_fanout(service=None, n_edges: int = SCALE_N_EDGES,
+                 quiet: bool = False) -> Dict[str, float]:
+    """Deploy a serve CIR to the full fleet on the simulated transport;
+    the wall-clock ceiling is the headline assertion."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    topo = _scale_topology(n_edges)
+    cloud, edges = _place(topo, n_edges)
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=16, fetch_workers=2)
+    t0 = time.perf_counter()
+    assert fd.deploy(cir, [cloud]).ok
+    res = fd.deploy(cir, edges)
+    wall = time.perf_counter() - t0
+    assert res.ok, res.summary()
+    for d in res.deployments:
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+        assert res.node_traffic[d.node_id].bytes_total == \
+            d.report.bytes_delta_fetched
+    assert wall < WALL_CEILING_S, \
+        f"{n_edges + 1}-node deploy took {wall:.1f}s wall " \
+        f"(ceiling {WALL_CEILING_S}s)"
+    row = {
+        "n_nodes": float(n_edges + 1),
+        "wall_s": wall,
+        "sim_elapsed_s": res.sim_elapsed_s,
+        "peer_offload_ratio": res.peer_offload_ratio,
+        "bytes_upstream": float(res.bytes_upstream_total),
+        "bytes_peers": float(res.bytes_peer_total),
+    }
+    if not quiet:
+        print(f"-- scale fan-out ({n_edges + 1} nodes, {ARCH} serve)")
+        print(f"   wall {wall:.2f}s (ceiling {WALL_CEILING_S:.0f}s), "
+              f"{res.sim_elapsed_s:.0f}s virtual WAN time, "
+              f"peer offload {res.peer_offload_ratio * 100:.1f}%")
+    return row
+
+
+def identity_check(service=None, n_edges: int = IDENTITY_N_EDGES,
+                   quiet: bool = False) -> Dict[str, float]:
+    """The accounting contract: simulated vs threaded transport, same
+    sequential fan-out, byte-identical per-node columns."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+
+    def run(simulated: bool):
+        topo = _scale_topology(n_edges)
+        cloud, edges = _place(topo, n_edges)
+        net = SimNetwork(topo) if simulated else None
+        fd = FleetDeployer(service, topology=topo, simnet=net,
+                           max_workers=1, fetch_workers=1)
+        out = {}
+        for res in (fd.deploy(cir, [cloud]), fd.deploy(cir, edges)):
+            assert res.ok, res.summary()
+            for d in res.deployments:
+                t = res.node_traffic[d.node_id]
+                out[d.node_id] = (
+                    t.bytes_from_upstream, t.bytes_from_peers,
+                    d.report.bytes_delta_fetched, d.report.bytes_fetched,
+                    d.report.chunks_hit, d.report.chunks_missed)
+        return out
+
+    threaded, sim = run(False), run(True)
+    ok = sim == threaded
+    assert ok, "simulated transport drifted from threaded accounting"
+    if not quiet:
+        print(f"-- identity check ({n_edges + 1} nodes): per-node "
+              f"accounting {'identical' if ok else 'DIFFERS'} "
+              f"across transports")
+    return {"ok": 1.0 if ok else 0.0, "n_nodes": float(n_edges + 1)}
+
+
+def _fault_fleet(service, n_edges: int):
+    topo = _scale_topology(n_edges)
+    cloud, edges = _place(topo, n_edges)
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1)
+    return net, fd, cloud, edges
+
+
+def fault_node_loss(service=None, n_edges: int = FAULT_N_EDGES,
+                    quiet: bool = False) -> Dict[str, float]:
+    """Kill the cloud hub mid-deploy and measure the recovery overhead:
+    the edges that lose their best peer source converge anyway, paying
+    ``extra_upstream_pct`` more registry wire than a fault-free run of
+    the identical shape."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+
+    def run(kill_hub: bool) -> Dict[str, float]:
+        net, fd, cloud, edges = _fault_fleet(service, n_edges)
+        assert fd.deploy(cir, [cloud]).ok
+        if kill_hub:
+            # lands inside the first edge's first transfer window: the
+            # hub dies mid-stripe, before any other node holds content
+            net.inject_node_loss("cloud", at=net.clock.now + 0.01)
+        res = fd.deploy(cir, edges)
+        assert res.ok, res.summary()
+        total = sum(t.bytes_total for t in res.node_traffic.values())
+        return {"upstream": float(res.bytes_upstream_total),
+                "total": float(total),
+                "fallbacks": float(res.peer_fallbacks_total),
+                "faults_fired": float(res.faults_fired_total)}
+
+    base = run(kill_hub=False)
+    faulted = run(kill_hub=True)
+    assert faulted["fallbacks"] > 0, "hub death never struck a transfer"
+    # recovery overhead as a fraction of the fleet's wire bytes: what the
+    # dead hub's orphaned pulls cost the registry link
+    extra_pct = 100.0 * (faulted["upstream"] - base["upstream"]) \
+        / max(faulted["total"], 1.0)
+    row = {
+        "converged": 1.0,
+        "extra_upstream_pct": extra_pct,
+        "peer_fallbacks": faulted["fallbacks"],
+        "faults_fired": faulted["faults_fired"],
+    }
+    if not quiet:
+        print(f"-- fault: hub death mid-deploy ({n_edges} edges): "
+              f"converged, +{extra_pct:.1f}% upstream wire, "
+              f"{faulted['fallbacks']:.0f} peer fallbacks")
+    return row
+
+
+def fault_link_flap(service=None, quiet: bool = False) -> Dict[str, float]:
+    """Flap one edge's WAN uplink during its deploy: the transient
+    ``LinkDownError`` is retried with virtual backoff until the window
+    closes — the deploy converges with the retries on the books."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    topo = FleetTopology()
+    topo.add_node("n0", upstream_bps=6.25e6)
+    spec = dataclasses.replace(cpu_smoke(), platform_id="plat-n0")
+    topo.place(spec.platform_id, "n0")
+    net = SimNetwork(topo)
+    net.inject_link_flap("n0", UPSTREAM, at=0.0, until=4.0)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1)
+    res = fd.deploy(cir, [spec])
+    assert res.ok, res.summary()
+    assert res.link_retries_total > 0
+    if not quiet:
+        print(f"-- fault: uplink flap: converged after "
+              f"{res.link_retries_total} virtual-backoff retries")
+    return {"converged": 1.0, "link_retries": float(res.link_retries_total)}
+
+
+def fault_partition(service=None, quiet: bool = False) -> Dict[str, float]:
+    """Partition one edge away from every peer: it converges purely
+    upstream while the rest of the fleet keeps peering."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    net, fd, cloud, edges = _fault_fleet(service, 3)
+    assert fd.deploy(cir, [cloud]).ok
+    net.inject_partition(["edge-0"], at=net.clock.now, until=float("inf"))
+    res = fd.deploy(cir, edges)
+    assert res.ok, res.summary()
+    isolated = res.node_traffic["edge-0"]
+    assert isolated.bytes_from_peers == 0
+    if not quiet:
+        print(f"-- fault: partition: isolated edge fell back upstream "
+              f"({isolated.peer_fallbacks} fallbacks), fleet converged")
+    return {"converged": 1.0,
+            "isolated_peer_bytes": float(isolated.bytes_from_peers)}
+
+
+def write_bench_scale(path: Optional[str] = None,
+                      smoke: bool = False,
+                      rows: Optional[Dict] = None) -> str:
+    """Record the scale/fault trajectory (CI artifact + the committed
+    regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_SCALE_PATH", "BENCH_scale.json")
+    if rows is None:
+        rows = collect(smoke=smoke, quiet=True)
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "arch": ARCH,
+            "n_edges": SCALE_N_EDGES,
+            "wall_ceiling_s": WALL_CEILING_S,
+        },
+        "scale": rows["scale"],
+        "identity": rows["identity"],
+        "faults": rows["faults"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def collect(smoke: bool = False, quiet: bool = False,
+            service=None) -> Dict[str, Dict]:
+    """All phases; smoke keeps the full 200-node fan-out (that IS the
+    smoke-time claim) but runs only the hub-death fault scenario."""
+    service = service or catalog.build_service()
+    rows: Dict[str, Dict] = {
+        "scale": scale_fanout(service, quiet=quiet),
+        "identity": identity_check(service, quiet=quiet),
+        "faults": {"node_loss": fault_node_loss(service, quiet=quiet)},
+    }
+    if not smoke:
+        rows["faults"]["link_flap"] = fault_link_flap(service, quiet=quiet)
+        rows["faults"]["partition"] = fault_partition(service, quiet=quiet)
+    return rows
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = collect(smoke=smoke, quiet=True)
+    write_bench_scale(smoke=smoke, rows=rows)
+    s, nl = rows["scale"], rows["faults"]["node_loss"]
+    return [
+        csv_row(
+            "scale.fanout", 0.0,
+            f"nodes={s['n_nodes']:.0f};wall={s['wall_s']:.2f}s;"
+            f"virtual={s['sim_elapsed_s']:.0f}s;"
+            f"offload={s['peer_offload_ratio'] * 100:.1f}%"),
+        csv_row(
+            "scale.fault_node_loss", 0.0,
+            f"converged={nl['converged']:.0f};"
+            f"extra_upstream={nl['extra_upstream_pct']:.1f}%"),
+    ]
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = collect(smoke=smoke)
+    out = write_bench_scale(smoke=smoke, rows=rows)
+    print(f"wrote {out}")

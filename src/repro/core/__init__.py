@@ -16,6 +16,9 @@ from .store import (Chunk, EVICTION_POLICIES,  # noqa: F401
 from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
                          FetchPlan)
 from .cir import CIR, PreBuilder  # noqa: F401
+from .simnet import (FAULT_KINDS, UPSTREAM, Fault,  # noqa: F401
+                     FaultError, FaultPlan, LinkDownError, NodeDownError,
+                     SimClock, SimNetwork, SimTransport, WallClockTransport)
 from .orchestrator import (STAGES, BuildGraph,  # noqa: F401
                            BuildOrchestrator, ComponentReadiness, Lifecycle)
 from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401

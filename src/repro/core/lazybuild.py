@@ -41,6 +41,7 @@ from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
 from .registry import RegistryError, UniformComponentService
 from .resolution import (Resolution, ResolutionError, resolution_from_pins,
                          uniform_dependency_resolution)
+from .simnet import WallClockTransport
 from .spec import SpecSheet
 from .store import LocalComponentStore
 
@@ -392,10 +393,17 @@ class FetchEngine:
     still on the wire.  Accounting is independent of the overlap: byte and
     chunk columns are identical with or without a readiness consumer.
 
-    ``simulate_bps`` optionally sleeps each stripe for ``bytes / bps`` so
-    benchmarks can observe real wall-clock overlap; accounting is identical
-    with or without it.  Plain ``LocalComponentStore``s keep the legacy
-    serial whole-component path.
+    Link time is modelled behind a **transport** (``upstream_transfer`` /
+    ``peer_transfer`` / ``backoff``): ``simulate_bps`` installs the
+    legacy real-sleep ``WallClockTransport`` (each stripe sleeps
+    ``bytes / bps`` so benchmarks can observe real wall-clock overlap);
+    a ``repro.core.simnet.SimTransport`` advances a *virtual* clock
+    instead — milliseconds of wall time for a WAN-sized fleet — and may
+    raise fault errors.  Accounting is identical under any transport (or
+    none): the transport replaces only the sleeps, never the
+    ``service.fetch_chunks`` charges or the claim/commit protocol.
+    Plain ``LocalComponentStore``s keep the legacy serial
+    whole-component path.
 
     ``peering`` is the optional chunk-source router of a fleet-topology
     node (``repro.deploy.topology.NodePeering``): when set, every claimed
@@ -412,12 +420,16 @@ class FetchEngine:
                  service: UniformComponentService,
                  max_workers: int = 8,
                  simulate_bps: Optional[float] = None,
-                 peering: Optional[Any] = None):
+                 peering: Optional[Any] = None,
+                 transport: Optional[Any] = None):
         self.store = store
         self.service = service
         self.max_workers = max(1, max_workers)
         self.simulate_bps = simulate_bps
         self.peering = peering
+        if transport is None and simulate_bps:
+            transport = WallClockTransport(default_bps=simulate_bps)
+        self.transport = transport
 
     def fetch(self, comps: Sequence[UniformComponent],
               report: BuildReport,
@@ -493,8 +505,9 @@ class FetchEngine:
                     # chunk (peer vs upstream) and does its own link sleeps
                     self.peering.fetch_stripe(c, stripe)
                 else:
-                    if self.simulate_bps:
-                        time.sleep(nbytes / self.simulate_bps)
+                    if self.transport is not None:
+                        self.transport.upstream_transfer(
+                            nbytes, bps=self.simulate_bps)
                     self.service.fetch_chunks(c, nbytes, len(stripe))
                 self.store.commit_chunks(stripe, component=c)
             except BaseException:
@@ -708,7 +721,8 @@ class LazyBuilder:
                  fetch_workers: int = 8,
                  fetch_simulate_bps: Optional[float] = None,
                  build_graph: Optional[BuildGraph] = None,
-                 peering: Optional[Any] = None):
+                 peering: Optional[Any] = None,
+                 fetch_transport: Optional[Any] = None):
         self.service = service
         self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
@@ -718,7 +732,8 @@ class LazyBuilder:
         self.fetch_engine = FetchEngine(self.store, service,
                                         max_workers=fetch_workers,
                                         simulate_bps=fetch_simulate_bps,
-                                        peering=peering)
+                                        peering=peering,
+                                        transport=fetch_transport)
         # per-component readiness listeners the orchestrator wires into
         # every build's ComponentReadiness (e.g. a fleet node announcing
         # proven-present content to the PeerIndex)

@@ -66,6 +66,7 @@ class Lifecycle:
         self._events = {s: threading.Event() for s in STAGES}
         self._completed: Set[str] = set()
         self._error: Optional[BaseException] = None
+        self._failed_stage: Optional[str] = None
         self._lock = threading.Lock()
         self.advance("planned")
 
@@ -77,17 +78,28 @@ class Lifecycle:
                            f"(one of {STAGES} or {tuple(_STAGE_ALIASES)})")
         return s
 
+    def _stage_locked(self) -> str:
+        for s in reversed(STAGES):
+            if s in self._completed:
+                return s
+        return "planned"
+
     @property
     def stage(self) -> str:
         with self._lock:
-            for s in reversed(STAGES):
-                if s in self._completed:
-                    return s
-        return "planned"
+            return self._stage_locked()
 
     @property
     def error(self) -> Optional[BaseException]:
         return self._error
+
+    @property
+    def failed_stage(self) -> Optional[str]:
+        """The last stage the build had reached when it failed (None for
+        a healthy build) — under injected WAN faults this is where the
+        fault struck the pipeline, e.g. ``"fetching"`` for a dead node
+        mid-stripe, ``"ready"`` for a fault in the asset tail."""
+        return self._failed_stage
 
     def advance(self, stage: str) -> None:
         stage = self._resolve(stage)
@@ -100,6 +112,7 @@ class Lifecycle:
         with self._lock:
             if self._error is None:
                 self._error = exc
+                self._failed_stage = self._stage_locked()
             for ev in self._events.values():
                 ev.set()          # wake every waiter; wait() re-raises
 

@@ -1,0 +1,442 @@
+"""Discrete-event transport: virtual-time link simulation + WAN faults.
+
+The threaded fetch path models link bandwidth by *sleeping* each stripe
+for ``bytes / bps`` — honest wall-clock, but a 200-node fleet deploy at
+WAN bandwidths would sleep for hours.  This module replaces the sleeps
+with an explicit discrete-event scheduler:
+
+  * ``SimClock``    — a global virtual timeline.  Transfers *reserve* an
+    interval on their link and advance the clock to the transfer's
+    completion event; scheduled events (fault activations) fire exactly
+    when the clock passes their timestamp.  No real time passes.
+  * ``SimNetwork``  — binds a ``FleetTopology`` to a clock and a
+    ``FaultPlan``: per-link FIFO serialization (a link is busy until its
+    previous transfer's completion event), per-node transports for the
+    fetch/peering layer, and node-loss hooks (e.g. ``PeerIndex.drop_node``).
+  * ``FaultPlan``   — deterministic, seeded WAN fault schedules: node
+    loss, link flap, and network partition, each a ``[t_start, t_end)``
+    window in virtual time.  Faults gate transfer *admission*: a transfer
+    overlapping an outage window raises ``LinkDownError`` (transient —
+    the peering layer retries with virtual backoff) or ``NodeDownError``
+    (the source or the puller died — retract-and-fallback, or build
+    failure when the puller itself is gone).
+
+Byte accounting is untouched by construction: the simulated transport
+replaces only the *sleeps* of the threaded path — every
+``service.fetch_chunks`` charge, singleflight claim and commit runs
+through the exact same code — which is what the accounting-identity
+tests in ``tests/test_simnet.py`` pin.
+
+Determinism: same topology + same seed ⇒ identical ``FaultPlan``.  Byte
+totals per node are deterministic regardless of concurrency (per-node
+singleflight); virtual timestamps and the peer-vs-upstream split are
+additionally deterministic when deploys are sequential
+(``max_workers=1``) and fully so with ``fetch_workers=1`` — concurrent
+transfers serialize their virtual intervals in arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+import random
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+# Sentinel peer name for a node's upstream-registry link in fault specs
+# and link keys ("flap the edge's WAN uplink" = link_flap(node, UPSTREAM)).
+UPSTREAM = "@upstream"
+
+FAULT_KINDS = ("node-loss", "link-flap", "partition")
+
+
+class FaultError(RuntimeError):
+    """Base class of injected-fault transfer failures."""
+
+
+class LinkDownError(FaultError):
+    """A link outage window overlaps the transfer — transient: the link
+    heals at ``until``; the peering layer retries with (virtual) backoff
+    or falls back to another source."""
+
+    def __init__(self, a: str, b: str, until: float):
+        self.a, self.b, self.until = a, b, until
+        healed = "never heals" if math.isinf(until) \
+            else f"heals at t={until:.3f}s"
+        super().__init__(f"link {a}<->{b} is down ({healed})")
+
+
+class NodeDownError(FaultError):
+    """A node died before the transfer could complete — permanent for
+    that node: a source is retracted and re-routed around, the puller's
+    own build fails."""
+
+    def __init__(self, node_id: str):
+        self.node_id = node_id
+        super().__init__(f"node {node_id!r} is down")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One fault window on the virtual timeline.
+
+    ``node-loss``: every node in ``nodes`` is dead on [t_start, t_end)
+    (default: forever).  ``link-flap``: every link in ``links`` is down
+    for the window (``UPSTREAM`` as an endpoint flaps a WAN uplink).
+    ``partition``: every peer link with exactly one endpoint in ``nodes``
+    is down for the window — the group is isolated from the rest of the
+    fleet, but upstream registry links still work (the fallback path the
+    convergence tests pin).
+    """
+    kind: str
+    t_start: float
+    t_end: float = math.inf
+    nodes: Tuple[str, ...] = ()
+    links: Tuple[Tuple[str, str], ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {FAULT_KINDS})")
+        if self.t_end <= self.t_start:
+            raise ValueError("fault window must have t_end > t_start")
+
+    def overlaps(self, t0: float, t1: float) -> bool:
+        return self.t_start < t1 and self.t_end > t0
+
+    def cuts_link(self, a: str, b: str) -> bool:
+        """Is the (a, b) link down while this fault is active?"""
+        if self.kind == "link-flap":
+            return any({a, b} == {la, lb} for la, lb in self.links)
+        if self.kind == "partition":
+            # partitions cut peer links crossing the group boundary only;
+            # upstream registry links are unaffected
+            return b != UPSTREAM and a != UPSTREAM and \
+                (a in self.nodes) != (b in self.nodes)
+        return False
+
+
+class FaultPlan:
+    """A deterministic schedule of WAN faults in virtual time.
+
+    Build one by hand (``node_loss`` / ``link_flap`` / ``partition``, each
+    returns the added ``Fault``) or seeded via ``FaultPlan.random`` —
+    same topology + same seed gives the identical plan.  Queried at
+    transfer admission (``check_transfer``) and compiled into clock
+    events by ``SimNetwork`` (node-loss fires ``drop_node`` hooks the
+    moment virtual time passes it).
+    """
+
+    def __init__(self, faults: Sequence[Fault] = ()):
+        self.faults: List[Fault] = list(faults)
+
+    # -- construction ---------------------------------------------------
+    def node_loss(self, node_id: str, at: float,
+                  until: float = math.inf) -> Fault:
+        f = Fault("node-loss", at, until, nodes=(node_id,))
+        self.faults.append(f)
+        return f
+
+    def link_flap(self, a: str, b: str, at: float, until: float) -> Fault:
+        f = Fault("link-flap", at, until, links=((a, b),))
+        self.faults.append(f)
+        return f
+
+    def partition(self, nodes: Sequence[str], at: float,
+                  until: float) -> Fault:
+        f = Fault("partition", at, until, nodes=tuple(sorted(nodes)))
+        self.faults.append(f)
+        return f
+
+    @classmethod
+    def random(cls, topology: Any, seed: int, n_faults: int = 4,
+               horizon_s: float = 30.0,
+               kinds: Sequence[str] = FAULT_KINDS,
+               protect: Sequence[str] = ()) -> "FaultPlan":
+        """A seeded random plan over ``topology``'s nodes and peer links.
+
+        ``protect`` names nodes never killed or isolated (conventionally
+        the seed node).  Transient windows span 5–30% of the horizon;
+        node losses are permanent.  Deterministic: the node/link pools
+        are sorted before sampling.
+        """
+        rng = random.Random(seed)
+        nodes = sorted(topology.node_ids())
+        candidates = [n for n in nodes if n not in set(protect)]
+        links = sorted({tuple(sorted((a, b))) for a in nodes
+                        for b in topology.peers_of(a)})
+        plan = cls()
+        for _ in range(n_faults):
+            kind = rng.choice(list(kinds))
+            t0 = rng.uniform(0.0, horizon_s)
+            dur = rng.uniform(0.05, 0.30) * horizon_s
+            if kind == "node-loss" and candidates:
+                plan.node_loss(rng.choice(candidates), at=t0)
+            elif kind == "link-flap" and links:
+                a, b = links[rng.randrange(len(links))]
+                plan.link_flap(a, b, at=t0, until=t0 + dur)
+            elif kind == "partition" and candidates:
+                plan.partition([rng.choice(candidates)], at=t0,
+                               until=t0 + dur)
+        return plan
+
+    # -- queries --------------------------------------------------------
+    def node_alive(self, node_id: str, t: float) -> bool:
+        return self.node_death_in(node_id, t, t + 1e-12) is None
+
+    def node_death_in(self, node_id: str, t0: float,
+                      t1: float) -> Optional[Fault]:
+        """The first node-loss window of ``node_id`` overlapping
+        [t0, t1), if any."""
+        for f in self.faults:
+            if f.kind == "node-loss" and node_id in f.nodes \
+                    and f.overlaps(t0, t1):
+                return f
+        return None
+
+    def link_outage_in(self, a: str, b: str, t0: float,
+                       t1: float) -> Optional[Fault]:
+        """The longest-lasting outage of the (a, b) link overlapping
+        [t0, t1), if any (longest so the retry backoff hint is honest)."""
+        hit: Optional[Fault] = None
+        for f in self.faults:
+            if f.cuts_link(a, b) and f.overlaps(t0, t1):
+                if hit is None or f.t_end > hit.t_end:
+                    hit = f
+        return hit
+
+    def check_transfer(self, dst: str, src: str, t0: float,
+                       t1: float) -> None:
+        """Admission gate for a transfer to ``dst`` from ``src``
+        (``UPSTREAM`` for the registry) occupying [t0, t1) of virtual
+        time.  Raises ``NodeDownError`` / ``LinkDownError`` if a fault
+        interdicts it; a fault striking anywhere in the window kills the
+        whole transfer (mid-stripe failure semantics)."""
+        if self.node_death_in(dst, t0, t1) is not None:
+            raise NodeDownError(dst)
+        if src != UPSTREAM and self.node_death_in(src, t0, t1) is not None:
+            raise NodeDownError(src)
+        outage = self.link_outage_in(dst, src, t0, t1)
+        if outage is not None:
+            raise LinkDownError(dst, src, until=outage.t_end)
+
+    def __len__(self) -> int:
+        return len(self.faults)
+
+
+class SimClock:
+    """Global virtual timeline with scheduled events and per-key link
+    reservations.
+
+    ``reserve(key, duration, admission)`` is the discrete-event kernel:
+    the transfer starts at ``max(now, busy_until[key])`` (per-link FIFO),
+    its completion event is ``start + duration``; admission (fault
+    checks) runs against that exact window *before* the link is reserved
+    or time advances, so a rejected transfer occupies nothing.  On
+    success the clock advances to the completion event and fires every
+    scheduled event it passed, in timestamp order (sequence-number
+    tie-break — deterministic).
+    """
+
+    def __init__(self) -> None:
+        self._now = 0.0
+        self._busy: Dict[Any, float] = {}
+        self._events: List[Tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+
+    @property
+    def now(self) -> float:
+        with self._lock:
+            return self._now
+
+    def schedule(self, t: float, fn: Callable[[], None]) -> None:
+        """Fire ``fn()`` when virtual time first passes ``t``."""
+        with self._lock:
+            heapq.heappush(self._events, (max(0.0, t), next(self._seq), fn))
+
+    def _due_locked(self, t: float) -> List[Callable[[], None]]:
+        due = []
+        while self._events and self._events[0][0] <= t:
+            due.append(heapq.heappop(self._events)[2])
+        return due
+
+    def _fire(self, due: Sequence[Callable[[], None]]) -> None:
+        for fn in due:
+            fn()                      # outside the lock: hooks take their own
+
+    def advance_to(self, t: float) -> float:
+        with self._lock:
+            self._now = max(self._now, t)
+            due = self._due_locked(self._now)
+        self._fire(due)
+        return self.now
+
+    def sleep(self, duration: float) -> None:
+        """Advance virtual time by ``duration`` (a virtual backoff)."""
+        with self._lock:
+            self._now += max(0.0, duration)
+            due = self._due_locked(self._now)
+        self._fire(due)
+
+    def reserve(self, key: Any, duration: float,
+                admission: Optional[Callable[[float, float], None]] = None
+                ) -> Tuple[float, float]:
+        """Reserve [start, start+duration) on link ``key``; see class doc.
+        Returns the (start, end) window the transfer occupied."""
+        with self._lock:
+            start = max(self._now, self._busy.get(key, 0.0))
+            end = start + duration
+            if admission is not None:
+                admission(start, end)     # may raise; nothing reserved yet
+            self._busy[key] = end
+            self._now = max(self._now, end)
+            due = self._due_locked(self._now)
+        self._fire(due)
+        return start, end
+
+
+class SimTransport:
+    """One node's view of a ``SimNetwork`` — the object the fetch engine
+    and ``NodePeering`` talk to.  All three methods are virtual-time:
+    no real sleeping ever happens."""
+
+    def __init__(self, net: "SimNetwork", node_id: str):
+        self.net = net
+        self.node_id = node_id
+
+    def upstream_transfer(self, nbytes: int,
+                          bps: Optional[float] = None) -> float:
+        return self.net.transfer(self.node_id, UPSTREAM, nbytes, bps=bps)
+
+    def peer_transfer(self, src: str, nbytes: int,
+                      bps: Optional[float] = None) -> float:
+        return self.net.transfer(self.node_id, src, nbytes, bps=bps)
+
+    def backoff(self, seconds: float) -> None:
+        self.net.clock.sleep(seconds)
+
+
+class WallClockTransport:
+    """The legacy real-sleep transport behind the same interface: each
+    transfer sleeps ``bytes / bps`` of *wall* clock.  Never raises fault
+    errors — faults are a simulated-transport feature."""
+
+    def __init__(self, default_bps: Optional[float] = None):
+        self.default_bps = default_bps
+
+    def upstream_transfer(self, nbytes: int,
+                          bps: Optional[float] = None) -> float:
+        bps = bps if bps is not None else self.default_bps
+        dt = nbytes / bps if bps else 0.0
+        if dt:
+            time.sleep(dt)
+        return dt
+
+    peer_transfer_bps = None
+
+    def peer_transfer(self, src: str, nbytes: int,
+                      bps: Optional[float] = None) -> float:
+        del src
+        return self.upstream_transfer(nbytes, bps=bps)
+
+    def backoff(self, seconds: float) -> None:
+        time.sleep(seconds)
+
+
+class SimNetwork:
+    """A topology's links on a shared virtual clock, with fault events.
+
+    One instance per fleet: every node's transport shares the clock (so
+    peer and upstream transfers interleave on one timeline) and the
+    fault plan.  Node-loss faults are compiled into clock events at
+    construction — when virtual time passes a death, the registered
+    ``on_node_loss`` hooks fire (the fleet deployer retracts the node
+    from the ``PeerIndex``); link flaps and partitions act purely at
+    transfer admission.  ``inject_*`` adds faults after construction
+    (e.g. "kill the seed at now + ε" mid-test).
+    """
+
+    def __init__(self, topology: Any,
+                 faults: Optional[FaultPlan] = None,
+                 latency_s: float = 0.0):
+        self.topology = topology
+        self.plan = faults if faults is not None else FaultPlan()
+        self.latency_s = latency_s
+        self.clock = SimClock()
+        self.faults_fired = 0
+        self.n_transfers = 0
+        self.bytes_moved = 0
+        self._node_loss_hooks: List[Callable[[str], None]] = []
+        self._lock = threading.Lock()
+        for f in self.plan.faults:
+            self._schedule_fault(f)
+
+    # -- fault events ---------------------------------------------------
+    def on_node_loss(self, hook: Callable[[str], None]) -> None:
+        """Register a hook fired (with the node id) when virtual time
+        passes a node-loss fault."""
+        self._node_loss_hooks.append(hook)
+
+    def _schedule_fault(self, f: Fault) -> None:
+        def fire() -> None:
+            with self._lock:
+                self.faults_fired += 1
+            if f.kind == "node-loss":
+                for node in f.nodes:
+                    for hook in self._node_loss_hooks:
+                        hook(node)
+        self.clock.schedule(f.t_start, fire)
+
+    def inject(self, f: Fault) -> Fault:
+        """Add a fault to the plan after construction and schedule its
+        activation event."""
+        self.plan.faults.append(f)
+        self._schedule_fault(f)
+        return f
+
+    def inject_node_loss(self, node_id: str, at: float,
+                         until: float = math.inf) -> Fault:
+        return self.inject(Fault("node-loss", at, until, nodes=(node_id,)))
+
+    def inject_link_flap(self, a: str, b: str, at: float,
+                         until: float) -> Fault:
+        return self.inject(Fault("link-flap", at, until, links=((a, b),)))
+
+    def inject_partition(self, nodes: Sequence[str], at: float,
+                         until: float) -> Fault:
+        return self.inject(Fault("partition", at, until,
+                                 nodes=tuple(sorted(nodes))))
+
+    # -- transfers ------------------------------------------------------
+    def transport_for(self, node_id: str) -> SimTransport:
+        if node_id not in self.topology.node_ids():
+            raise KeyError(f"unknown node {node_id!r}")
+        return SimTransport(self, node_id)
+
+    def transfer(self, dst: str, src: str, nbytes: int,
+                 bps: Optional[float] = None) -> float:
+        """Run one transfer to ``dst`` from ``src`` (``UPSTREAM`` = the
+        registry) in virtual time; returns the virtual duration.  Raises
+        ``NodeDownError``/``LinkDownError`` when the fault plan
+        interdicts the occupied window."""
+        if bps is None:
+            if src == UPSTREAM:
+                bps = self.topology.node(dst).upstream_bps
+            else:
+                bps = self.topology.bandwidth(dst, src)
+        if not bps:
+            raise ValueError(f"no link between {dst!r} and {src!r}")
+        key = (dst, UPSTREAM) if src == UPSTREAM \
+            else tuple(sorted((dst, src)))
+        duration = self.latency_s + nbytes / bps
+        start, end = self.clock.reserve(
+            key, duration,
+            admission=lambda t0, t1: self.plan.check_transfer(
+                dst, src, t0, t1))
+        with self._lock:
+            self.n_transfers += 1
+            self.bytes_moved += nbytes
+        return end - start

@@ -32,18 +32,26 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
-from typing import Dict, List, Mapping, Optional, Sequence, Set, Tuple
+from typing import (Any, Dict, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
 
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.component import UniformComponent
 from ..core.registry import UniformComponentService
+from ..core.simnet import LinkDownError, NodeDownError, WallClockTransport
 from ..core.store import Chunk
 
 # Default node↔registry link when a node does not declare one (500 Mbps —
 # the benchmark suite's representative WAN link).  All ``*_bps`` values in
 # this module are BYTES/s, matching ``FetchEngine.simulate_bps``.
 DEFAULT_UPSTREAM_BPS = 500e6 / 8
+
+# Transient-link-fault retry policy: an upstream pull that hits a
+# ``LinkDownError`` (simulated transport, flapping WAN uplink) backs off
+# in *virtual* time — base doubling per attempt — and retries; the fault
+# is permanent for the build once the attempts are exhausted.
+LINK_RETRY_BACKOFF_S = 0.05
+MAX_LINK_RETRIES = 10
 
 
 class TopologyError(ValueError):
@@ -224,6 +232,36 @@ class PeerIndex:
             return {cid: tuple(self._holders.get(cid, ()))
                     for cid in chunk_ids}
 
+    def best_many(self, chunk_ids: Sequence[str],
+                  link_bps: Mapping[str, float],
+                  exclude: str) -> Dict[str, Optional[str]]:
+        """Per-chunk cheapest holder among ``link_bps``'s peers (highest
+        bandwidth, node-id tie-break), ``None`` where no linked peer
+        advertises the chunk.  One lock acquisition for a whole stripe,
+        iterating the smaller of (linked peers, holders) per chunk — at
+        fleet scale a popular chunk has hundreds of holders but a node
+        only a handful of links, so selection must not walk the holder
+        set per chunk."""
+        out: Dict[str, Optional[str]] = {}
+        with self._lock:
+            for cid in chunk_ids:
+                holders = self._holders.get(cid)
+                best: Optional[Tuple[float, str]] = None
+                if holders:
+                    if len(link_bps) < len(holders):
+                        cands = ((p, bps) for p, bps in link_bps.items()
+                                 if p in holders)
+                    else:
+                        cands = ((p, link_bps[p]) for p in holders
+                                 if p in link_bps)
+                    for peer, bps in cands:
+                        if peer == exclude:
+                            continue
+                        if best is None or (-bps, peer) < best:
+                            best = (-bps, peer)
+                out[cid] = best[1] if best is not None else None
+        return out
+
     def chunks_held(self, node_id: str) -> int:
         with self._lock:
             return sum(1 for h in self._holders.values() if node_id in h)
@@ -249,6 +287,7 @@ class NodeTraffic:
     chunks_from_upstream: int = 0
     chunks_from_peers: int = 0
     peer_fallbacks: int = 0          # failed peer pulls re-routed upstream
+    link_retries: int = 0            # transient-link-fault backoff retries
     peer_sources: Dict[str, int] = dataclasses.field(default_factory=dict)
     #                                ^ peer node -> bytes pulled from it
 
@@ -283,6 +322,7 @@ class NodeTraffic:
             chunks_from_peers=self.chunks_from_peers
             - before.chunks_from_peers,
             peer_fallbacks=self.peer_fallbacks - before.peer_fallbacks,
+            link_retries=self.link_retries - before.link_retries,
             peer_sources={p: b - before.peer_sources.get(p, 0)
                           for p, b in self.peer_sources.items()
                           if b - before.peer_sources.get(p, 0)},
@@ -303,9 +343,17 @@ class NodePeering:
     False`` every chunk routes upstream through the same code path, which
     is what makes the no-peer baseline byte-identical per node.
 
-    ``simulate`` sleeps each pull for ``bytes / link_bps`` (the node's
-    upstream link or the chosen peer link) so wall-clock benchmarks see
-    real link asymmetry; accounting is identical with or without it.
+    Link time runs through a **transport**: ``simulate=True`` installs
+    the real-sleep ``WallClockTransport`` (each pull sleeps ``bytes /
+    link_bps`` on the node's upstream link or the chosen peer link, so
+    wall-clock benchmarks see real link asymmetry); a ``simnet``-backed
+    ``SimTransport`` advances virtual time instead and may raise injected
+    fault errors — a ``NodeDownError``/``LinkDownError`` on a peer pull
+    degrades to ``PeerTransferError`` (retract + upstream fallback), a
+    transient ``LinkDownError`` on the upstream link is retried with
+    exponential virtual backoff (counted in ``NodeTraffic.link_retries``)
+    and only fails the build once ``MAX_LINK_RETRIES`` is exhausted.
+    Accounting is identical under any transport (or none).
     """
 
     def __init__(self, node_id: str, topology: FleetTopology,
@@ -313,7 +361,10 @@ class NodePeering:
                  store: ChunkedComponentStore,
                  peer_stores: Mapping[str, ChunkedComponentStore],
                  enabled: bool = True,
-                 simulate: bool = False):
+                 simulate: bool = False,
+                 transport: Optional[Any] = None,
+                 max_link_retries: int = MAX_LINK_RETRIES,
+                 link_retry_backoff_s: float = LINK_RETRY_BACKOFF_S):
         self.node_id = node_id
         self.topology = topology
         self.index = index
@@ -322,6 +373,11 @@ class NodePeering:
         self.peer_stores = peer_stores
         self.enabled = enabled
         self.simulate = simulate
+        if transport is None and simulate:
+            transport = WallClockTransport()
+        self.transport = transport
+        self.max_link_retries = max_link_retries
+        self.link_retry_backoff_s = link_retry_backoff_s
         self.traffic = NodeTraffic(node_id)
         self._lock = threading.Lock()
 
@@ -394,13 +450,21 @@ class NodePeering:
     def select(self, chunks: Sequence[Chunk]
                ) -> List[Tuple[Optional[str], List[Chunk]]]:
         """Group ``chunks`` by chosen source (None == upstream registry),
-        preserving first-seen source order."""
+        preserving first-seen source order.  Selection is batched: one
+        index lock acquisition per stripe (``PeerIndex.best_many``), so
+        a 200-node fleet — where a hot chunk's holder set approaches the
+        fleet size — selects in O(chunks × links), not O(chunks ×
+        holders)."""
         if not self.enabled:
             return [(None, list(chunks))] if chunks else []
+        link_bps = {p: self.topology.bandwidth(self.node_id, p)
+                    for p in self.topology.peers_of(self.node_id)}
+        best = self.index.best_many([ch.id for ch in chunks], link_bps,
+                                    exclude=self.node_id)
         groups: Dict[Optional[str], List[Chunk]] = {}
         order: List[Optional[str]] = []
         for ch in chunks:
-            src = self._best_source(ch.id)
+            src = best[ch.id]
             if src not in groups:
                 groups[src] = []
                 order.append(src)
@@ -412,7 +476,9 @@ class NodePeering:
                    chunks: Sequence[Chunk]) -> None:
         """Pull ``chunks`` from peer ``src``.  Tests monkeypatch this to
         inject mid-transfer failures; the real implementation fails when
-        the peer does not actually hold what the index advertised."""
+        the peer does not actually hold what the index advertised, or
+        when the transport's fault plan kills the source node or the
+        peer link inside the transfer window."""
         peer_store = self.peer_stores.get(src)
         if peer_store is None:
             raise PeerTransferError(f"peer {src!r} is gone")
@@ -421,15 +487,42 @@ class NodePeering:
             raise PeerTransferError(
                 f"peer {src!r} no longer holds {len(missing)} advertised "
                 f"chunk(s)")
-        if self.simulate:
+        if self.transport is not None:
+            nbytes = sum(ch.size for ch in chunks)
             bps = self.topology.bandwidth(self.node_id, src)
-            time.sleep(sum(ch.size for ch in chunks) / bps)
+            try:
+                self.transport.peer_transfer(src, nbytes, bps=bps)
+            except NodeDownError as e:
+                if e.node_id == self.node_id:
+                    # *this* node died — no fallback can save its build
+                    raise
+                raise PeerTransferError(str(e)) from e
+            except LinkDownError as e:
+                # a peer-link outage is not worth waiting out: upstream
+                # fallback converges the build now
+                raise PeerTransferError(str(e)) from e
 
     def _upstream_pull(self, component: UniformComponent,
                        chunks: Sequence[Chunk], staged: NodeTraffic) -> None:
         nbytes = sum(ch.size for ch in chunks)
-        if self.simulate:
-            time.sleep(nbytes / self.topology.node(self.node_id).upstream_bps)
+        if self.transport is not None:
+            bps = self.topology.node(self.node_id).upstream_bps
+            attempt = 0
+            while True:
+                try:
+                    self.transport.upstream_transfer(nbytes, bps=bps)
+                    break
+                except LinkDownError:
+                    # transient WAN flap: back off in (virtual) time and
+                    # retry — there is no alternative source for content
+                    # no peer holds, so the uplink fault is only fatal
+                    # once the budget is exhausted
+                    attempt += 1
+                    if attempt > self.max_link_retries:
+                        raise
+                    staged.link_retries += 1
+                    self.transport.backoff(
+                        self.link_retry_backoff_s * 2 ** (attempt - 1))
         self.service.fetch_chunks(component, nbytes, len(chunks))
         staged.bytes_from_upstream += nbytes
         staged.chunks_from_upstream += len(chunks)
@@ -472,5 +565,6 @@ class NodePeering:
             t.chunks_from_upstream += staged.chunks_from_upstream
             t.chunks_from_peers += staged.chunks_from_peers
             t.peer_fallbacks += staged.peer_fallbacks
+            t.link_retries += staged.link_retries
             for src, nbytes in staged.peer_sources.items():
                 t.peer_sources[src] = t.peer_sources.get(src, 0) + nbytes

@@ -1,7 +1,8 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
 from benchmarks.check_regression import (CHURN, DISTRIBUTION, FETCH,
-                                         PIPELINE, Check, build_checks)
+                                         PIPELINE, SCALE, Check,
+                                         build_checks)
 
 
 def test_higher_is_better_band():
@@ -32,7 +33,9 @@ def test_missing_baseline_skips_but_missing_fresh_fails():
 
 
 def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
-          churn_reduction=27.0, churn_hit=0.34):
+          churn_reduction=27.0, churn_hit=0.34, scale_wall=8.0,
+          scale_offload=0.99, identity_ok=1.0, loss_converged=1.0,
+          loss_extra=4.0):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -46,14 +49,22 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
             "avg_upstream_vs_baseline_pct": upstream}
     churn = {"ctr_vs_lru_upstream_reduction_pct": churn_reduction,
              "ctr_hit_rate": churn_hit}
-    return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn}
+    scale = {
+        "scale": {"wall_s": scale_wall,
+                  "peer_offload_ratio": scale_offload},
+        "identity": {"ok": identity_ok},
+        "faults": {"node_loss": {"converged": loss_converged,
+                                 "extra_upstream_pct": loss_extra}},
+    }
+    return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn,
+            SCALE: scale}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 8
+    assert len(checks) == 13
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -83,3 +94,46 @@ def test_build_checks_averages_common_archs_only():
     checks = {c.metric: c for c in build_checks(base, fresh)}
     c = checks[f"{FETCH}:delta_redeploy.avg_delta_saved_pct"]
     assert c.ok and c.baseline == 30.0 and c.fresh == 30.0
+
+
+def test_scale_gate_binds_on_regressions():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # the 30 s ceiling caps the wall band even off a generous baseline
+    slow = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, scale_wall=31.0)
+    failed = {c.metric for c in build_checks(base, slow) if not c.ok}
+    assert f"{SCALE}:scale.wall_s" in failed
+    # transport accounting drift is a hard failure (identity is 0/1)
+    drifted = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, identity_ok=0.0)
+    failed = {c.metric for c in build_checks(base, drifted) if not c.ok}
+    assert f"{SCALE}:identity.ok" in failed
+    # a fault scenario that stops converging, or whose recovery wire
+    # overhead explodes, fails the gate
+    diverged = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, loss_converged=0.0,
+                     loss_extra=40.0)
+    failed = {c.metric for c in build_checks(base, diverged) if not c.ok}
+    assert f"{SCALE}:faults.node_loss.converged" in failed
+    assert f"{SCALE}:faults.node_loss.extra_upstream_pct" in failed
+
+
+def test_new_baseline_file_missing_on_old_branch_skips_cleanly():
+    """The PR that introduces ``BENCH_scale.json`` runs the gate against
+    a base branch that has no such committed baseline: every scale check
+    must SKIP (ok), never fail ``--write`` mode — while the other gates
+    still bind."""
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    del base[SCALE]                      # old branch: file never committed
+    base[SCALE] = None                   # exactly what _load() returns
+    fresh = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
+    checks = build_checks(base, fresh)
+    scale_checks = [c for c in checks if c.metric.startswith(SCALE)]
+    assert len(scale_checks) == 5
+    assert all(c.skipped and c.ok for c in scale_checks)
+    others = [c for c in checks if not c.metric.startswith(SCALE)]
+    assert all(not c.skipped for c in others)
+    # ... and a fresh run that lost a scale metric (baseline present)
+    # still fails rather than silently disarming
+    lost = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
+    del lost[SCALE]["scale"]["wall_s"]
+    full_base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    failed = {c.metric for c in build_checks(full_base, lost) if not c.ok}
+    assert f"{SCALE}:scale.wall_s" in failed

@@ -149,3 +149,46 @@ def test_lifecycle_section_names_real_api():
         readme = f.read()
     assert "capacity_bytes" in readme
     assert "cheapest-to-restore" in readme
+
+
+def test_simnet_section_names_real_api():
+    """§9 documents the simulated transport — the names and semantics it
+    promises must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (Fault, FaultPlan, LinkDownError, NodeDownError,
+                            SimClock, SimNetwork, UPSTREAM)
+    from repro.core.orchestrator import Lifecycle
+    from repro.deploy import FleetDeployer, NodeTraffic
+    from repro.deploy.fleet import FleetResult
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 9. Simulated transport: discrete-event links & WAN fault " \
+        "injection" in text
+    for name in ("SimClock", "SimNetwork", "FaultPlan", "node_loss",
+                 "link_flap", "partition", "LinkDownError", "NodeDownError",
+                 "failed_stage", "sim_elapsed_s", "link_retries",
+                 "BENCH_scale.json", "UPSTREAM"):
+        assert name in text, f"§9 lost its {name} reference"
+    # the documented surface
+    for attr in ("schedule", "advance_to", "sleep", "reserve"):
+        assert hasattr(SimClock, attr)
+    for attr in ("node_loss", "link_flap", "partition", "random",
+                 "check_transfer"):
+        assert hasattr(FaultPlan, attr)
+    for attr in ("transport_for", "transfer", "on_node_loss",
+                 "inject_node_loss", "inject_link_flap",
+                 "inject_partition"):
+        assert hasattr(SimNetwork, attr)
+    for kind in ("node-loss", "link-flap", "partition"):
+        Fault(kind, 0.0, 1.0)            # every documented kind validates
+    assert issubclass(LinkDownError, RuntimeError)
+    assert issubclass(NodeDownError, RuntimeError)
+    assert UPSTREAM == "@upstream"
+    assert "simnet" in inspect.signature(FleetDeployer.__init__).parameters
+    for field in ("sim_elapsed_s", "faults_fired_total",
+                  "link_retries_total", "listener_errors_total"):
+        assert field in FleetResult.__dataclass_fields__
+    assert "link_retries" in NodeTraffic.__dataclass_fields__
+    assert isinstance(Lifecycle.failed_stage, property)

@@ -1,0 +1,279 @@
+"""WAN fault injection under the simulated transport.
+
+The fault matrix of ISSUE 6: a node dying mid-stripe, a link flapping
+during a peer transfer, a partition isolating an edge from every peer,
+and a fault striking during an eviction-triggered refetch.  Every
+scenario pins the two invariants the discrete-event transport must not
+bend: ``bytes_delta_fetched <= bytes_fetched`` on every node (partial
+work included), and the ``PeerIndex`` never over-claiming — every
+holder it advertises really has the chunk in its store.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (FaultPlan, PreBuilder, SimNetwork, UPSTREAM,
+                        cpu_smoke, tpu_single_pod)
+from repro.deploy import FleetDeployer, FleetTopology
+
+
+@pytest.fixture(scope="module")
+def cir(service):
+    return PreBuilder(service).prebuild(ARCHS["starcoder2-3b"],
+                                        entrypoint="serve")
+
+
+@pytest.fixture(scope="module")
+def other_cir(service):
+    return PreBuilder(service).prebuild(ARCHS["phi4-mini-3.8b"],
+                                        entrypoint="serve")
+
+
+def _fleet(service, n_edges, faults=None, **kw):
+    """1 cloud seed + N edges on a simulated network, sequential and
+    single-fetch-worker so fault timing is deterministic."""
+    topo = FleetTopology.edge_fanout(n_edges)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    net = SimNetwork(topo, faults=faults)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1, **kw)
+    return topo, net, fd, cloud, edges
+
+
+def _assert_no_overclaim(fd, topo, comps):
+    """Every chunk holder the index advertises truly has the chunk."""
+    store = fd.node_store(topo.seed)
+    for comp in comps:
+        for ch in store.chunks_of(comp):
+            for node in fd.peer_index.holders(ch.id):
+                assert fd.node_store(node).has_chunk(ch.id), \
+                    f"index over-claims {ch.id} on {node}"
+
+
+def _assert_partial_work_sane(res):
+    for d in res.deployments:
+        if d.report is not None:
+            assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+
+
+# ---------------------------------------------------------------------------
+# Dead node mid-stripe
+# ---------------------------------------------------------------------------
+
+def test_dead_node_mid_stripe_falls_back_upstream(service, cir):
+    """The seed dies while an edge is mid-transfer from it: the admission
+    window overlaps the death, the peer pull fails, the edge re-routes
+    the stripe upstream — and once virtual time passes the death, the
+    ``PeerIndex`` drops the node so later selections route around it."""
+    topo, net, fd, cloud, edges = _fleet(service, 3)
+    res0 = fd.deploy(cir, [cloud])
+    assert res0.ok
+    comps = res0.deployments[0].instance.bundle.components()
+
+    # the first edge transfer is always longer than 10 ms of virtual
+    # time, so the death lands inside its admission window: mid-stripe
+    net.inject_node_loss("cloud", at=net.clock.now + 0.01)
+    res = fd.deploy(cir, edges)
+    assert res.ok, res.summary()
+    assert res.faults_fired_total >= 1
+    assert res.peer_fallbacks_total > 0       # a pull actually died
+    for d in res.deployments:
+        assert res.node_traffic[d.node_id].bytes_total == \
+            d.report.bytes_delta_fetched
+    _assert_partial_work_sane(res)
+    for comp in comps:
+        for ch in fd.node_store("edge-0").chunks_of(comp):
+            assert "cloud" not in fd.peer_index.holders(ch.id)
+    _assert_no_overclaim(fd, topo, comps)
+
+
+# ---------------------------------------------------------------------------
+# Link flap during peer transfer
+# ---------------------------------------------------------------------------
+
+def test_link_flap_during_peer_transfer(service, cir):
+    """The only peer link is down when the edge tries its peer pull: the
+    transfer is refused at admission, the stripe falls back upstream and
+    the deploy still converges — with zero peer bytes."""
+    topo, net, fd, cloud, edges = _fleet(service, 1)
+    assert fd.deploy(cir, [cloud]).ok
+    net.inject_link_flap("cloud", "edge-0", at=net.clock.now,
+                         until=math.inf)
+    res = fd.deploy(cir, edges)
+    assert res.ok, res.summary()
+    t = res.node_traffic["edge-0"]
+    assert t.bytes_from_peers == 0
+    assert t.peer_fallbacks > 0
+    assert t.bytes_from_upstream == \
+        res.deployments[0].report.bytes_delta_fetched
+    _assert_partial_work_sane(res)
+
+
+# ---------------------------------------------------------------------------
+# Partition isolating one edge
+# ---------------------------------------------------------------------------
+
+def test_partition_isolated_edge_converges_upstream(service, cir):
+    """A partition cuts every peer link with exactly one endpoint in the
+    group: the isolated edge converges purely upstream while the rest of
+    the fleet keeps peering normally."""
+    topo, net, fd, cloud, edges = _fleet(service, 3)
+    assert fd.deploy(cir, [cloud]).ok
+    net.inject_partition(["edge-0"], at=net.clock.now, until=math.inf)
+    res = fd.deploy(cir, edges)
+    assert res.ok, res.summary()
+    isolated = res.node_traffic["edge-0"]
+    assert isolated.bytes_from_peers == 0 and isolated.peer_fallbacks > 0
+    # the others still reach the cloud (outside the group boundary)
+    assert any(res.node_traffic[f"edge-{i}"].bytes_from_peers > 0
+               for i in (1, 2))
+    _assert_partial_work_sane(res)
+    comps = res.deployments[0].instance.bundle.components()
+    _assert_no_overclaim(fd, topo, comps)
+
+
+# ---------------------------------------------------------------------------
+# Fault during eviction-triggered refetch
+# ---------------------------------------------------------------------------
+
+def test_link_flap_during_eviction_refetch(service, cir, other_cir):
+    """A capacity-bounded node churns A → B → A; the uplink flaps just as
+    the re-deploy starts refetching evicted content.  The transient
+    ``LinkDownError`` is retried with exponential virtual backoff until
+    the link heals — the deploy converges and the retries are counted."""
+    def build(capacity):
+        topo = FleetTopology()
+        topo.add_node("n0", upstream_bps=6.25e6, capacity_bytes=capacity)
+        spec = dataclasses.replace(cpu_smoke(), platform_id="plat-n0")
+        topo.place(spec.platform_id, "n0")
+        net = SimNetwork(topo)
+        fd = FleetDeployer(service, topology=topo, simnet=net,
+                           max_workers=1, fetch_workers=1)
+        return net, fd, spec
+
+    # measure the A∪B working set unbounded, then bound below it
+    net, fd, spec = build(None)
+    for c in (cir, other_cir):
+        assert fd.deploy(c, [spec]).ok
+    union = fd.node_traffic("n0").bytes_from_upstream
+    net, fd, spec = build(int(union * 0.75))
+    assert fd.deploy(cir, [spec]).ok
+    assert fd.deploy(other_cir, [spec]).ok    # evicts part of A
+    # flap the WAN uplink across the start of the re-deploy; the window
+    # (4 s) is far inside the ~51 s cumulative retry budget
+    net.inject_link_flap("n0", UPSTREAM, at=net.clock.now,
+                         until=net.clock.now + 4.0)
+    res = fd.deploy(cir, [spec])
+    assert res.ok, res.summary()
+    assert res.refetch_bytes_total > 0, "capacity never forced a refetch"
+    assert res.link_retries_total > 0, "flap never hit the refetch"
+    _assert_partial_work_sane(res)
+
+
+# ---------------------------------------------------------------------------
+# Permanent faults: failure propagation through the lifecycle
+# ---------------------------------------------------------------------------
+
+def test_permanent_upstream_outage_fails_build_cleanly(service, cir):
+    """An uplink that never heals exhausts the retry budget: the build
+    fails with the link error, partial fetch accounting stays sane, the
+    store's build lease is released (content is evictable again), and
+    ``Lifecycle.failed_stage`` records where the fault struck."""
+    topo = FleetTopology()
+    topo.add_node("n0", upstream_bps=6.25e6)
+    spec = dataclasses.replace(cpu_smoke(), platform_id="plat-n0")
+    topo.place(spec.platform_id, "n0")
+    net = SimNetwork(topo)
+    net.inject_link_flap("n0", UPSTREAM, at=0.0, until=math.inf)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1)
+    res = fd.deploy(cir, [spec])
+    assert not res.ok and res.n_failed == 1
+    assert "LinkDownError" in res.deployments[0].error
+    _assert_partial_work_sane(res)
+    assert not fd.node_store("n0")._leases    # lease released on failure
+
+    # the lifecycle pins the failed stage for error propagation
+    inst = fd._node_builders["n0"].build(cir, spec, block=False)
+    with pytest.raises(Exception, match="down"):
+        inst.wait("complete")
+    assert inst.lifecycle.failed_stage == "fetching"
+
+
+def test_building_node_death_fails_its_own_build(service, cir):
+    """The puller itself dying is not retried or re-routed: its build
+    fails with ``NodeDownError``."""
+    topo, net, fd, cloud, edges = _fleet(service, 1)
+    assert fd.deploy(cir, [cloud]).ok
+    net.inject_node_loss("edge-0", at=net.clock.now + 0.01)
+    res = fd.deploy(cir, edges)
+    assert not res.ok and res.n_failed == 1
+    assert "NodeDownError" in res.deployments[0].error
+    _assert_partial_work_sane(res)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: listener errors surfaced in FleetResult
+# ---------------------------------------------------------------------------
+
+def test_listener_errors_aggregate_into_fleet_result(service, cir):
+    """Advisory readiness listeners that raise are swallowed per build
+    (the deploy still succeeds) but never silently: ``FleetResult``
+    aggregates them as ``listener_errors_total``."""
+    topo, net, fd, cloud, edges = _fleet(service, 2)
+
+    def bad_listener(comp):
+        raise RuntimeError("advisory consumer exploded")
+
+    for lb in fd._node_builders.values():
+        lb.readiness_listeners.append(bad_listener)
+    res0 = fd.deploy(cir, [cloud])
+    res1 = fd.deploy(cir, edges)
+    assert res0.ok and res1.ok                # advisory: never fails a build
+    assert res0.listener_errors_total > 0
+    assert res1.listener_errors_total == \
+        sum(d.report.listener_errors for d in res1.deployments)
+    assert res1.listener_errors_total > 0
+    assert "readiness-listener" in res1.summary()
+
+
+# ---------------------------------------------------------------------------
+# Seeded random fault plans: convergence property
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [11, 29])
+def test_random_fault_plan_converges_or_fails_typed(service, cir, seed):
+    """Under an arbitrary seeded fault plan (seed node protected), every
+    deployment either converges or fails with a typed fault error — and
+    the accounting/index invariants hold either way."""
+    topo = FleetTopology.edge_fanout(4)
+    plan = FaultPlan.random(topo, seed=seed, n_faults=5, horizon_s=30.0,
+                            protect=("cloud",))
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(4)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    net = SimNetwork(topo, faults=plan)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1)
+    res0 = fd.deploy(cir, [cloud])
+    assert res0.ok                            # protected seed always lands
+    res = fd.deploy(cir, edges)
+    for d in res.deployments:
+        assert d.ok or "DownError" in d.error, d.error
+    _assert_partial_work_sane(res)
+    comps = res0.deployments[0].instance.bundle.components()
+    _assert_no_overclaim(fd, topo, comps)
+    # failed nodes must not leak pin leases
+    for d in res.deployments:
+        if not d.ok:
+            assert not fd.node_store(d.node_id)._leases

@@ -1,0 +1,320 @@
+"""Discrete-event transport core (repro.core.simnet).
+
+Unit coverage for the virtual clock, per-link FIFO reservation and the
+seeded ``FaultPlan``, plus the contract that makes the simulated
+transport trustworthy at all: a property-style sweep over randomized
+(seeded) topologies of 2–32 nodes asserting the simulated path's
+per-node byte accounting — upstream/peer split, delta, refetch — is
+**byte-identical** to the threaded engine's.
+"""
+import dataclasses
+import math
+import random
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (FaultPlan, LinkDownError, NodeDownError, PreBuilder,
+                        SimClock, SimNetwork, UPSTREAM, WallClockTransport,
+                        cpu_smoke, tpu_single_pod)
+from repro.core.simnet import Fault
+from repro.deploy import FleetDeployer, FleetTopology
+
+ARCH = "starcoder2-3b"
+
+
+# ---------------------------------------------------------------------------
+# SimClock
+# ---------------------------------------------------------------------------
+
+def test_clock_starts_at_zero_and_is_monotonic():
+    clk = SimClock()
+    assert clk.now == 0.0
+    clk.advance_to(5.0)
+    clk.advance_to(3.0)          # never goes backwards
+    assert clk.now == 5.0
+    clk.sleep(2.5)
+    assert clk.now == 7.5
+
+
+def test_clock_fires_scheduled_events_in_time_order():
+    clk = SimClock()
+    fired = []
+    clk.schedule(3.0, lambda: fired.append("b"))
+    clk.schedule(1.0, lambda: fired.append("a"))
+    clk.schedule(9.0, lambda: fired.append("late"))
+    clk.advance_to(5.0)
+    assert fired == ["a", "b"]   # time order, not scheduling order
+    clk.sleep(10.0)              # sleep fires due events too
+    assert fired == ["a", "b", "late"]
+
+
+def test_clock_link_reservation_serializes_per_key():
+    clk = SimClock()
+    s1, e1 = clk.reserve("link", 4.0)
+    assert (s1, e1) == (0.0, 4.0)
+    # same link: FIFO behind the previous transfer's completion event
+    s2, e2 = clk.reserve("link", 2.0)
+    assert (s2, e2) == (4.0, 6.0)
+    # a different link is independent, but virtual time already advanced
+    s3, e3 = clk.reserve("other", 1.0)
+    assert s3 == 6.0 and e3 == 7.0
+    assert clk.now == 7.0
+
+
+def test_clock_rejected_admission_reserves_nothing():
+    clk = SimClock()
+
+    def veto(t0, t1):
+        raise LinkDownError("a", "b", until=9.0)
+
+    with pytest.raises(LinkDownError):
+        clk.reserve("link", 4.0, admission=veto)
+    assert clk.now == 0.0                      # no time passed
+    assert clk.reserve("link", 1.0) == (0.0, 1.0)   # link was never busied
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_fault_windows_and_queries():
+    plan = FaultPlan()
+    plan.node_loss("n1", at=10.0)                     # permanent
+    plan.link_flap("a", "b", at=2.0, until=4.0)
+    plan.partition(["edge"], at=5.0, until=8.0)
+
+    assert plan.node_alive("n1", 9.9) and not plan.node_alive("n1", 10.0)
+    assert not plan.node_alive("n1", 1e9)             # never heals
+    assert plan.link_outage_in("a", "b", 0.0, 2.0) is None   # [t0, t1)
+    assert plan.link_outage_in("b", "a", 3.0, 3.5) is not None   # symmetric
+    # the partition cuts peer links crossing the boundary ...
+    assert plan.link_outage_in("edge", "other", 6.0, 7.0) is not None
+    # ... not links inside either side, and never the upstream registry
+    assert plan.link_outage_in("other", "third", 6.0, 7.0) is None
+    assert plan.link_outage_in("edge", UPSTREAM, 6.0, 7.0) is None
+
+
+def test_fault_admission_raises_typed_errors():
+    plan = FaultPlan()
+    plan.node_loss("src", at=5.0)
+    plan.link_flap("dst", UPSTREAM, at=1.0, until=2.0)
+
+    plan.check_transfer("dst", "src", 0.0, 4.0)       # clean window
+    with pytest.raises(NodeDownError) as ei:
+        plan.check_transfer("dst", "src", 4.0, 6.0)   # src dies mid-window
+    assert ei.value.node_id == "src"
+    with pytest.raises(LinkDownError) as ei:
+        plan.check_transfer("dst", UPSTREAM, 1.5, 3.0)
+    assert ei.value.until == 2.0                      # honest retry hint
+    # the puller's own death beats any link state
+    plan.node_loss("dst", at=0.0)
+    with pytest.raises(NodeDownError) as ei:
+        plan.check_transfer("dst", UPSTREAM, 0.0, 1.0)
+    assert ei.value.node_id == "dst"
+
+
+def test_fault_kind_and_window_validation():
+    with pytest.raises(ValueError):
+        Fault("meteor-strike", 0.0, 1.0)
+    with pytest.raises(ValueError):
+        Fault("link-flap", 2.0, 2.0)
+
+
+def test_random_fault_plan_is_seed_deterministic():
+    topo = FleetTopology.edge_fanout(6)
+    a = FaultPlan.random(topo, seed=7, n_faults=6, protect=("cloud",))
+    b = FaultPlan.random(topo, seed=7, n_faults=6, protect=("cloud",))
+    assert a.faults == b.faults and len(a) == 6
+    c = FaultPlan.random(topo, seed=8, n_faults=6, protect=("cloud",))
+    assert a.faults != c.faults
+    for f in a.faults:
+        assert "cloud" not in f.nodes            # protected node untouched
+
+
+# ---------------------------------------------------------------------------
+# SimNetwork / transports
+# ---------------------------------------------------------------------------
+
+def _two_nodes() -> FleetTopology:
+    topo = FleetTopology()
+    topo.add_node("a", upstream_bps=100.0, seed=True)
+    topo.add_node("b", upstream_bps=50.0)
+    topo.link("a", "b", 200.0)
+    return topo
+
+
+def test_simnetwork_transfer_durations_and_counters():
+    net = SimNetwork(_two_nodes())
+    ta = net.transport_for("a")
+    assert ta.upstream_transfer(400) == pytest.approx(4.0)   # 400 B @ 100 B/s
+    assert ta.peer_transfer("b", 400) == pytest.approx(2.0)  # 400 B @ 200 B/s
+    assert net.clock.now == pytest.approx(6.0)
+    assert net.n_transfers == 2 and net.bytes_moved == 800
+    with pytest.raises(KeyError):
+        net.transport_for("nope")
+    with pytest.raises(ValueError):
+        net.transfer("a", "zzz", 100)            # no such link
+
+
+def test_simnetwork_node_loss_event_fires_hooks():
+    net = SimNetwork(_two_nodes())
+    lost = []
+    net.on_node_loss(lost.append)
+    net.inject_node_loss("b", at=3.0)
+    net.transport_for("a").upstream_transfer(100)    # clock: 0 -> 1.0
+    assert lost == [] and net.faults_fired == 0
+    net.clock.sleep(5.0)                             # passes t=3.0
+    assert lost == ["b"] and net.faults_fired == 1
+
+
+def test_wall_clock_transport_is_inert_without_bps():
+    t = WallClockTransport()
+    assert t.upstream_transfer(10**12) == 0.0        # no bps -> no sleep
+    assert t.peer_transfer("x", 10**12) == 0.0
+    assert t.upstream_transfer(100, bps=1e9) == pytest.approx(1e-7)
+
+
+def test_fleet_deployer_simnet_validation(service):
+    topo = _two_nodes()
+    other = _two_nodes()
+    with pytest.raises(ValueError):
+        FleetDeployer(service, simnet=SimNetwork(topo))      # no topology
+    with pytest.raises(ValueError):
+        FleetDeployer(service, topology=topo,
+                      simnet=SimNetwork(other))              # wrong topology
+    with pytest.raises(ValueError):
+        FleetDeployer(service, topology=topo, simnet=SimNetwork(topo),
+                      simulate_links=True)                   # wall + virtual
+
+
+# ---------------------------------------------------------------------------
+# Accounting identity: simulated transport == threaded engine, per node
+# ---------------------------------------------------------------------------
+
+def _random_topology(seed: int, n_nodes: int) -> FleetTopology:
+    """A seeded random fleet: node 0 is the well-connected seed; every
+    other node gets a random upstream bandwidth, a likely link to the
+    seed and a few random peer links (some nodes may end up unlinked —
+    they must deploy purely upstream)."""
+    rng = random.Random(seed)
+    pool = (5e6, 2.5e7, 1.25e8, 6.25e8)
+    topo = FleetTopology()
+    ids = [f"n{i}" for i in range(n_nodes)]
+    topo.add_node(ids[0], upstream_bps=1.25e9, seed=True)
+    for nid in ids[1:]:
+        topo.add_node(nid, upstream_bps=rng.choice(pool))
+        if rng.random() < 0.8:
+            topo.link(ids[0], nid, rng.choice(pool))
+    for _ in range(n_nodes):
+        a, b = rng.sample(ids, 2)
+        if topo.bandwidth(a, b) is None:
+            topo.link(a, b, rng.choice(pool))
+    return topo
+
+
+def _place_specs(topo: FleetTopology):
+    seed_spec = tpu_single_pod()
+    topo.place(seed_spec.platform_id, topo.seed)
+    others = []
+    for nid in topo.node_ids():
+        if nid == topo.seed:
+            continue
+        s = dataclasses.replace(cpu_smoke(), platform_id=f"plat-{nid}")
+        topo.place(s.platform_id, nid)
+        others.append(s)
+    return seed_spec, others
+
+
+def _deploy_accounting(service, cir, seed: int, n_nodes: int,
+                       simulated: bool):
+    """Seed node first, the rest sequentially (``max_workers=1`` +
+    ``fetch_workers=1``: the deterministic configuration §9 documents),
+    returning the per-node accounting tuple."""
+    topo = _random_topology(seed, n_nodes)
+    seed_spec, others = _place_specs(topo)
+    net = SimNetwork(topo) if simulated else None
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1)
+    out = {}
+    for res in (fd.deploy(cir, [seed_spec]), fd.deploy(cir, others)):
+        assert res.ok, res.summary()
+        for d in res.deployments:
+            t = res.node_traffic[d.node_id]
+            r = d.report
+            assert t.bytes_total == r.bytes_delta_fetched
+            assert r.bytes_delta_fetched <= r.bytes_fetched
+            out[d.node_id] = (
+                t.bytes_from_upstream, t.bytes_from_peers,
+                t.peer_fallbacks, dict(t.peer_sources),
+                r.bytes_delta_fetched, r.bytes_fetched,
+                r.chunks_hit, r.chunks_missed, r.chunks_waited,
+                fd.node_store(d.node_id).lifecycle_stats.refetch_bytes,
+            )
+    return out
+
+
+@pytest.fixture(scope="module")
+def cir(service):
+    return PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+
+
+@pytest.mark.parametrize("seed,n_nodes",
+                         [(0, 2), (1, 5), (2, 11), (3, 32)])
+def test_sim_accounting_identical_to_threaded(service, cir, seed, n_nodes):
+    threaded = _deploy_accounting(service, cir, seed, n_nodes,
+                                  simulated=False)
+    sim = _deploy_accounting(service, cir, seed, n_nodes, simulated=True)
+    assert sim == threaded
+
+
+def test_sim_refetch_identity_on_bounded_node(service, cir):
+    """Eviction-triggered refetch accounting must match too: a
+    capacity-bounded edge churns between two CIRs, and the re-fetched
+    bytes of the re-deploy are identical under both transports."""
+    other = PreBuilder(service).prebuild(ARCHS["phi4-mini-3.8b"],
+                                         entrypoint="serve")
+
+    def run(capacity, simulated):
+        topo = FleetTopology()
+        topo.add_node("cloud", upstream_bps=1.25e9, seed=True)
+        topo.add_node("edge", upstream_bps=6.25e6, capacity_bytes=capacity)
+        topo.link("cloud", "edge", 1.25e8)
+        spec = dataclasses.replace(cpu_smoke(), platform_id="plat-edge")
+        topo.place(spec.platform_id, "edge")
+        net = SimNetwork(topo) if simulated else None
+        fd = FleetDeployer(service, topology=topo, simnet=net,
+                           max_workers=1, fetch_workers=1)
+        results = [fd.deploy(c, [spec]) for c in (cir, other, cir)]
+        assert all(r.ok for r in results)
+        t = fd.node_traffic("edge")
+        return (t.bytes_from_upstream, t.bytes_from_peers,
+                fd.node_store("edge").lifecycle_stats.refetch_bytes,
+                results[-1].refetch_bytes_total)
+
+    # size the budget off an unbounded measuring pass: big enough for one
+    # CIR's working set, too small for both -> the second deploy evicts
+    unbounded = run(None, simulated=False)
+    capacity = int(unbounded[0] * 0.75)
+    threaded = run(capacity, simulated=False)
+    sim = run(capacity, simulated=True)
+    assert threaded == sim
+    assert threaded[2] > 0, "capacity never forced a refetch"
+
+
+def test_sim_deploy_reports_virtual_elapsed(service, cir):
+    topo = FleetTopology.edge_fanout(2)
+    seed_spec, others = _place_specs(topo)
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net, max_workers=1,
+                       fetch_workers=1)
+    r0 = fd.deploy(cir, [seed_spec])
+    r1 = fd.deploy(cir, others)
+    assert r0.ok and r1.ok
+    # virtual link time dwarfs wall time, and the deltas partition the
+    # clock: WAN seconds elapsed without wall-clock sleeping
+    assert r0.sim_elapsed_s > 0 and r1.sim_elapsed_s > 0
+    assert r0.sim_elapsed_s + r1.sim_elapsed_s == \
+        pytest.approx(net.clock.now)
+    assert r0.wall_s + r1.wall_s < r0.sim_elapsed_s + r1.sim_elapsed_s
+    assert math.isfinite(net.clock.now)
