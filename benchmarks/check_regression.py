@@ -31,7 +31,8 @@ PIPELINE = "BENCH_pipeline.json"
 DISTRIBUTION = "BENCH_distribution.json"
 CHURN = "BENCH_churn.json"
 SCALE = "BENCH_scale.json"
-BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE)
+COLDSTART = "BENCH_coldstart.json"
+BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE, COLDSTART)
 
 
 @dataclasses.dataclass
@@ -101,7 +102,7 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, churn, distribution, scale
+    from . import build_time, churn, coldstart, distribution, scale
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -123,9 +124,12 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
     scale_rows = scale.collect(smoke=True, quiet=True)
     scale_path = scale.write_bench_scale(
         path=os.path.join(out_dir, SCALE), smoke=True, rows=scale_rows)
+    cold_rows = coldstart.collect(smoke=True, quiet=True)
+    cold_path = coldstart.write_bench_coldstart(
+        path=os.path.join(out_dir, COLDSTART), smoke=True, rows=cold_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
             DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path),
-            SCALE: _load(scale_path)}
+            SCALE: _load(scale_path), COLDSTART: _load(cold_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -193,6 +197,21 @@ def build_checks(base: Dict[str, Optional[Dict]],
         abs_limit=1.0)
     add(SCALE, ["faults", "node_loss", "extra_upstream_pct"], False, 0.75,
         abs_limit=15.0)
+
+    # -- scale-to-zero cold starts: virtual-time, deterministic ----------
+    # the second cold node must keep riding the fleet compile cache (the
+    # benchmark's own floor is 60%; the gate holds the committed margin)
+    add(COLDSTART, ["cold_vs_peer", "ready_reduction_pct"], True, 0.10,
+        abs_limit=60.0)
+    add(COLDSTART, ["cold_vs_peer", "accounting_identical"], True, 0.0,
+        abs_limit=1.0)
+    # snapshot restore must stay a near-free pin replay
+    add(COLDSTART, ["snapshot", "restore_reduction_pct"], True, 0.05,
+        abs_limit=80.0)
+    # p99 cold-READY under the bursty trace, and the cache hit rate that
+    # keeps it there — a collapsed cache shows up in both
+    add(COLDSTART, ["autoscale", "p99_ready_s"], False, 0.25)
+    add(COLDSTART, ["autoscale", "compile_hit_rate"], True, 0.10)
     return checks
 
 

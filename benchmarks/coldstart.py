@@ -1,0 +1,339 @@
+"""Scale-to-zero cold starts: fleet compile cache + snapshot/restore.
+
+A serverless fleet pays three costs to bring a cold node to READY:
+resolution, chunk fetch, and XLA compile.  The compile cache
+(``repro.core.compilecache``) makes the compile a fleet-wide
+content-addressed component — one node compiles, every same-platform-class
+peer restores the executable over a peer link — and the snapshot path
+(``repro.core.snapshot``) replays a retired instance's lock against a
+still-resident store, so scale-from-zero is a pin replay plus a free
+compile-cache hit.  All timings below are **virtual** seconds on the
+simulated transport (``repro.core.simnet``) with a fixed virtual compile
+cost per step entry, so the benchmark is deterministic.  Phases:
+
+  * *cold vs peer* — first cold edge pays fetch + compile; the second
+    same-class edge peers both chunks AND the compiled artifact.  Its
+    time-to-READY must be ``>= COLD_PEER_MIN_REDUCTION_PCT`` lower, and
+    its resolved-content byte accounting must be **identical** to the
+    cache-miss build (compile skips are explicit, never byte-smuggled);
+  * *snapshot restore* — a snapshotted instance restored on its own node
+    must reach READY ``>= RESTORE_MIN_REDUCTION_PCT`` cheaper than the
+    full cold build, in sub-second virtual time;
+  * *poisson autoscale* — a bursty Poisson request trace drives
+    scale-up/scale-to-zero over a fleet of edges; reports p50/p99
+    time-to-READY of cold provisioning, instances-per-(virtual)-second,
+    and the fleet compile-cache hit rate.
+
+Writes ``BENCH_coldstart.json`` (CI artifact + regression-gate baseline;
+see ``benchmarks.check_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.core import PreBuilder, SimNetwork, catalog, cpu_smoke, \
+    restore_instance, snapshot_instance, tpu_single_pod
+from repro.deploy import FleetDeployer, FleetTopology
+
+from .common import csv_row
+
+ARCH = "starcoder2-3b"
+COLD_PEER_MIN_REDUCTION_PCT = 60.0   # second cold node vs first
+RESTORE_MIN_REDUCTION_PCT = 80.0     # snapshot restore vs full cold build
+AUTOSCALE_N_EDGES = 6                # fleet size for the Poisson trace
+AUTOSCALE_N_REQUESTS = 48
+AUTOSCALE_SMOKE_REQUESTS = 20
+SERVICE_TIME_S = 2.0                 # virtual busy time per request
+IDLE_RETIRE_S = 6.0                  # idle instances scale to zero after
+
+
+def _fleet(service, n_edges: int):
+    """Cloud seed + N same-platform-class edges on the virtual clock.
+    Sequential workers + no overlap: virtual timings are exact replays.
+    Links are same-site LAN (fast), so time-to-READY is dominated by the
+    XLA compile — the cost this benchmark exists to amortise."""
+    topo = FleetTopology.edge_fanout(n_edges, cloud_edge_bps=5e8,
+                                     edge_edge_bps=1e9)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1, overlap=False)
+    return net, fd, cloud, edges
+
+
+def _pct(xs: List[float], q: float) -> float:
+    if not xs:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, dtype=float), q))
+
+
+def cold_vs_peer(service=None, quiet: bool = False) -> Dict[str, float]:
+    """First cold edge compiles; the second restores the executable from
+    the fleet — and must come up >= 60% faster with identical resolved-
+    content byte accounting."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    net, fd, cloud, edges = _fleet(service, 2)
+    assert fd.deploy(cir, [cloud]).ok            # seed content on the cloud
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    r1 = fd.deploy(cir, [edges[1]], assemble=True, compile_steps=True)
+    assert r0.ok and r1.ok, r0.summary() + r1.summary()
+    t_cold, t_peer = r0.sim_elapsed_s, r1.sim_elapsed_s
+    miss, hit = r0.deployments[0].report, r1.deployments[0].report
+    assert not miss.compile_cache_hit and miss.artifact_bytes_published > 0
+    assert hit.compile_cache_hit and hit.compile_skips == hit.n_compiled > 0
+    # accounting identity: the cache hit changes WHEN bytes move (peer
+    # artifact stripe, no compile), never the resolved-content columns
+    for f in ("bytes_fetched", "bytes_delta_fetched", "chunks_hit",
+              "chunks_missed", "cache_hits", "cache_misses",
+              "n_components", "n_compiled", "bytes_total_components"):
+        assert getattr(miss, f) == getattr(hit, f), f
+    for res in (r0, r1):
+        d = res.deployments[0]
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+        assert res.node_traffic[d.node_id].bytes_total == \
+            d.report.bytes_delta_fetched
+    reduction = 100.0 * (1.0 - t_peer / t_cold)
+    assert reduction >= COLD_PEER_MIN_REDUCTION_PCT, \
+        f"peer cold start only {reduction:.1f}% faster " \
+        f"(floor {COLD_PEER_MIN_REDUCTION_PCT:.0f}%): " \
+        f"cold {t_cold:.2f}s vs peer {t_peer:.2f}s virtual"
+    row = {
+        "cold_ready_s": t_cold,
+        "peer_ready_s": t_peer,
+        "ready_reduction_pct": reduction,
+        "compile_skips": float(hit.compile_skips),
+        "artifact_mib": hit.artifact_bytes_fetched / 2**20,
+        "accounting_identical": 1.0,
+    }
+    if not quiet:
+        print(f"-- cold vs peer ({ARCH} serve): first edge {t_cold:.1f}s, "
+              f"second {t_peer:.1f}s virtual (-{reduction:.1f}%), "
+              f"{hit.compile_skips} compile(s) skipped, accounting identical")
+    return row
+
+
+def snapshot_restore(service=None, quiet: bool = False) -> Dict[str, float]:
+    """Scale an edge to zero after its cold build, then restore it from the
+    snapshot: pin replay + resident chunks + compile-cache hit must land
+    READY >= 80% cheaper than the cold build, in sub-second virtual time."""
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    net, fd, cloud, edges = _fleet(service, 1)
+    assert fd.deploy(cir, [cloud]).ok
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    assert r0.ok, r0.summary()
+    t_cold = r0.sim_elapsed_s
+    snap = snapshot_instance(r0.deployments[0].instance)
+
+    t0 = net.clock.now
+    restored = restore_instance(snap, fd.node_builder("edge-0"))
+    t_restore = net.clock.now - t0
+    rep = restored.report
+    assert restored.stage == "complete"
+    assert rep.locked and rep.compile_cache_hit
+    assert rep.bytes_delta_fetched == 0          # store still resident
+    reduction = 100.0 * (1.0 - t_restore / t_cold)
+    assert reduction >= RESTORE_MIN_REDUCTION_PCT, \
+        f"restore only {reduction:.1f}% cheaper than cold " \
+        f"(floor {RESTORE_MIN_REDUCTION_PCT:.0f}%)"
+    assert t_restore < 1.0, \
+        f"restore took {t_restore:.2f}s virtual (sub-second required)"
+    row = {
+        "cold_ready_s": t_cold,
+        "restore_ready_s": t_restore,
+        "restore_reduction_pct": reduction,
+        "restore_refetched_bytes": float(rep.bytes_delta_fetched),
+    }
+    if not quiet:
+        print(f"-- snapshot restore: cold {t_cold:.1f}s vs restore "
+              f"{t_restore:.3f}s virtual (-{reduction:.1f}%), "
+              f"0 bytes refetched")
+    return row
+
+
+def poisson_autoscale(service=None, quiet: bool = False,
+                      smoke: bool = False) -> Dict[str, float]:
+    """Bursty Poisson request trace against autoscaling edge instances.
+
+    The event loop runs on its own virtual timeline; every provisioning
+    cost it charges is *measured live* on the simnet (a real deploy or
+    restore advancing the virtual clock), not assumed.  Instances that sit
+    idle past ``IDLE_RETIRE_S`` scale to zero behind a snapshot; a later
+    burst restores them.  Reports p50/p99 time-to-READY over the cold
+    provisioning events and the fleet compile-cache hit rate.
+    """
+    service = service or catalog.build_service()
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    n_req = AUTOSCALE_SMOKE_REQUESTS if smoke else AUTOSCALE_N_REQUESTS
+    net, fd, cloud, edges = _fleet(service, AUTOSCALE_N_EDGES)
+    assert fd.deploy(cir, [cloud]).ok
+
+    # bursty arrivals: a slow trickle punctuated by dense bursts, so the
+    # fleet repeatedly scales up from zero and back down (seeded: the
+    # trace — and every virtual timing under it — is deterministic)
+    rng = np.random.default_rng(0)
+    arrivals, t = [], 0.0
+    while len(arrivals) < n_req:
+        t += float(rng.exponential(IDLE_RETIRE_S * 3))      # quiet gap
+        for _ in range(int(rng.integers(3, 7))):            # then a burst
+            t += float(rng.exponential(0.4))
+            arrivals.append(t)
+    arrivals = arrivals[:n_req]
+
+    # node -> {"state": zero|snap|up, "free_at": float, "snap": snapshot}
+    nodes = {f"edge-{i}": {"state": "zero", "free_at": 0.0, "snap": None,
+                           "spec": edges[i]} for i in range(len(edges))}
+    ready_times: List[float] = []    # provisioning cost per cold scale-up
+    latencies: List[float] = []      # request arrival -> instance READY
+    cold_deploys = restores = 0
+
+    def provision(nd: Dict) -> float:
+        """Bring one scaled-to-zero node up; returns virtual cost."""
+        nonlocal cold_deploys, restores
+        if nd["snap"] is not None:
+            t0 = net.clock.now
+            inst = restore_instance(nd["snap"], fd.node_builder(
+                fd.topology.node_for(nd["spec"].platform_id)))
+            restores += 1
+            cost = net.clock.now - t0
+        else:
+            res = fd.deploy(cir, [nd["spec"]], assemble=True,
+                            compile_steps=True)
+            assert res.ok, res.summary()
+            inst = res.deployments[0].instance
+            cold_deploys += 1
+            cost = res.sim_elapsed_s
+        nd["snap"] = snapshot_instance(inst)     # retire cheaply later
+        nd["state"] = "up"
+        return cost
+
+    for at in arrivals:
+        # scale-to-zero sweep: anything idle past the timeout retires
+        for nd in nodes.values():
+            if nd["state"] == "up" and nd["free_at"] + IDLE_RETIRE_S < at:
+                nd["state"] = "snap"
+        up = [nd for nd in nodes.values() if nd["state"] == "up"]
+        idle = [nd for nd in up if nd["free_at"] <= at]
+        if idle:
+            nd, wait = idle[0], 0.0
+        else:
+            down = [nodes[k] for k in sorted(nodes)
+                    if nodes[k]["state"] != "up"]
+            if down:
+                nd = down[0]
+                wait = provision(nd)
+                ready_times.append(wait)
+            else:                                # saturated: queue
+                nd = min(up, key=lambda n: n["free_at"])
+                wait = nd["free_at"] - at
+        latencies.append(wait)
+        nd["free_at"] = at + wait + SERVICE_TIME_S
+
+    makespan = max(nd["free_at"] for nd in nodes.values())
+    stats = fd.compile_cache.stats
+    assert cold_deploys >= 1 and restores >= 1, \
+        f"trace never exercised scale-to-zero ({cold_deploys} cold, " \
+        f"{restores} restores)"
+    assert stats.hit_rate > 0.0, "fleet compile cache never hit"
+    # every scale-up after the first must ride the fleet cache: no cold
+    # provisioning event repays the first node's full compile
+    assert max(ready_times) == ready_times[0], \
+        "a later cold start paid more than the first (cache not shared)"
+    row = {
+        "n_requests": float(n_req),
+        "cold_deploys": float(cold_deploys),
+        "restores": float(restores),
+        "p50_ready_s": _pct(ready_times, 50),
+        "p99_ready_s": _pct(ready_times, 99),
+        "p99_latency_s": _pct(latencies, 99),
+        "instances_per_s": (cold_deploys + restores) / makespan,
+        "compile_hit_rate": stats.hit_rate,
+        "makespan_s": makespan,
+    }
+    if not quiet:
+        print(f"-- poisson autoscale ({n_req} reqs, {len(edges)} edges): "
+              f"{cold_deploys} cold + {restores} restore(s); ready p50 "
+              f"{row['p50_ready_s']:.2f}s / p99 {row['p99_ready_s']:.2f}s "
+              f"virtual; compile hit rate {stats.hit_rate * 100:.0f}%; "
+              f"{row['instances_per_s']:.3f} instances/s")
+    return row
+
+
+def write_bench_coldstart(path: Optional[str] = None,
+                          smoke: bool = False,
+                          rows: Optional[Dict] = None) -> str:
+    """Record the cold-start trajectory (CI artifact + the committed
+    regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_COLDSTART_PATH",
+                                  "BENCH_coldstart.json")
+    if rows is None:
+        rows = collect(smoke=smoke, quiet=True)
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "arch": ARCH,
+            "cold_peer_min_reduction_pct": COLD_PEER_MIN_REDUCTION_PCT,
+            "restore_min_reduction_pct": RESTORE_MIN_REDUCTION_PCT,
+            "autoscale_n_edges": AUTOSCALE_N_EDGES,
+        },
+        "cold_vs_peer": rows["cold_vs_peer"],
+        "snapshot": rows["snapshot"],
+        "autoscale": rows["autoscale"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def collect(smoke: bool = False, quiet: bool = False,
+            service=None) -> Dict[str, Dict]:
+    """All phases; smoke shortens the Poisson trace but keeps every
+    assertion (the reductions ARE the claims under test)."""
+    service = service or catalog.build_service()
+    return {
+        "cold_vs_peer": cold_vs_peer(service, quiet=quiet),
+        "snapshot": snapshot_restore(service, quiet=quiet),
+        "autoscale": poisson_autoscale(service, quiet=quiet, smoke=smoke),
+    }
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = collect(smoke=smoke, quiet=True)
+    write_bench_coldstart(smoke=smoke, rows=rows)
+    cp, sn, au = rows["cold_vs_peer"], rows["snapshot"], rows["autoscale"]
+    return [
+        csv_row(
+            "coldstart.cold_vs_peer", 0.0,
+            f"cold={cp['cold_ready_s']:.1f}s;peer={cp['peer_ready_s']:.1f}s;"
+            f"reduction={cp['ready_reduction_pct']:.1f}%"),
+        csv_row(
+            "coldstart.snapshot_restore", 0.0,
+            f"cold={sn['cold_ready_s']:.1f}s;"
+            f"restore={sn['restore_ready_s']:.3f}s;"
+            f"reduction={sn['restore_reduction_pct']:.1f}%"),
+        csv_row(
+            "coldstart.autoscale", 0.0,
+            f"p50={au['p50_ready_s']:.2f}s;p99={au['p99_ready_s']:.2f}s;"
+            f"hit_rate={au['compile_hit_rate'] * 100:.0f}%;"
+            f"inst_per_s={au['instances_per_s']:.3f}"),
+    ]
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = collect(smoke=smoke)
+    out = write_bench_coldstart(smoke=smoke, rows=rows)
+    print(f"wrote {out}")

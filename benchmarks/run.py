@@ -14,10 +14,10 @@ import traceback
 
 
 def main(smoke: bool = False) -> None:
-    from . import (bandwidth, build_time, churn, cross_platform,
+    from . import (bandwidth, build_time, churn, coldstart, cross_platform,
                    distribution, image_size, roofline, scale, sharing)
     mods = [image_size, build_time, bandwidth, cross_platform, sharing,
-            distribution, churn, scale, roofline]
+            distribution, churn, scale, coldstart, roofline]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

@@ -21,7 +21,13 @@ from .simnet import (FAULT_KINDS, UPSTREAM, Fault,  # noqa: F401
                      SimClock, SimNetwork, SimTransport, WallClockTransport)
 from .orchestrator import (STAGES, BuildGraph,  # noqa: F401
                            BuildOrchestrator, ComponentReadiness, Lifecycle)
+from .compilecache import (COMPILED_MANAGER, COMPILE_VERSION_SALT,  # noqa: F401
+                           CompileCache, CompileCacheStats,
+                           CompiledArtifact, artifact_component,
+                           compile_cache_key)
 from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401
                         ComponentBundle, ContainerInstance, FetchEngine,
                         LazyBuilder, Lockfile, PlanCacheStats,
                         register_payload)
+from .snapshot import (InstanceSnapshot, restore_instance,  # noqa: F401
+                       snapshot_instance)

@@ -1,0 +1,189 @@
+"""Fleet-wide compile cache: compiled executables as CIR components.
+
+The lazy-build pipeline defers platform-specific construction to deploy
+time, but until now the XLA compile stage was the one stage that
+content-addressing never amortized: every cold node paid it from scratch.
+This module makes the compiled executable a first-class, content-addressed
+component class:
+
+* :func:`compile_cache_key` derives a fleet-stable key from the staged
+  program (the assemble-gated component pins of the lockfile — the
+  HLO/StableHLO identity), the platform *class* (chip, mesh, backend — NOT
+  the per-node ``platform_id``), and the jax/XLA version plus a format
+  salt.  Two nodes of the same platform class deploying the same lock
+  derive the same key, so one node's compile is every peer's cache hit.
+* :func:`artifact_component` wraps a key in a ``UniformComponent`` under
+  the ``compiled`` manager.  Because the key (not the node) is the
+  identity, the component digest — and therefore its chunk ids — are
+  identical fleet-wide, and the executable rides the existing
+  PeerIndex/NodePeering chunk path with the same singleflight, pin-lease
+  and eviction rules as every other component.
+* :class:`CompileCache` is the control-plane index (an LRU mirror of
+  ``BuildPlanCache``): key -> :class:`CompiledArtifact`.  The *bytes* live
+  in the per-node ``ChunkedComponentStore``; the cache only remembers that
+  a compatible executable exists and which component carries it.
+
+Compiled artifacts are born on fleet nodes — the upstream registry never
+stores them — so a cache hit whose bytes are locally absent is sourced
+from peers only; if no linked peer still holds the chunks, the node
+recompiles (and re-publishes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional, Sequence, Tuple
+
+from .component import UniformComponent
+
+# Manager namespace for compiled executables.  Never resolved from a CIR
+# dependency closure — artifact components are created by the compile
+# stage and distributed peer-to-peer.
+COMPILED_MANAGER = "compiled"
+
+# Version salt folded into every cache key: bump when the artifact format
+# or the key derivation changes so stale executables can never false-hit.
+COMPILE_VERSION_SALT = "cir-xla-exec-v1"
+
+# The staged program is a pure function of the assemble-gated pins (model
+# topology, runtime step closures, kernels, parallelism plan, data
+# pipeline) — the same managers BuildGraph gates the assemble stage on.
+PROGRAM_MANAGERS = ("model", "runtime", "kernel", "parallel", "data")
+
+# Deterministic cost/size model for the executable.  Real XLA compiles of
+# multi-billion-parameter programs take tens of seconds; the discrete-event
+# clock observes this per staged entrypoint on a cache miss (wall-clock
+# transports measure the real jit wall instead).
+COMPILE_VIRTUAL_S_PER_ENTRY = 8.0
+ARTIFACT_BYTES_BASE = 24 * 2 ** 20         # serialized executable envelope
+ARTIFACT_BYTES_PER_ENTRY = 8 * 2 ** 20     # per staged step function
+
+
+def compile_cache_key(lock, spec, entry_names: Sequence[str]) -> str:
+    """Derive the fleet-wide cache key for a compiled executable.
+
+    Digest inputs (doc §10): the *program* — sorted digests of the
+    lockfile's assemble-gated pins plus the staged entrypoint names (a
+    proxy for the HLO/StableHLO module digest); the *platform class* —
+    chip, mesh shape/axes, backend and kernel-interpret mode, deliberately
+    excluding ``platform_id`` so same-class nodes share; and the *version
+    salt* — the spec's jax version plus :data:`COMPILE_VERSION_SALT`.
+    """
+    program = sorted(
+        d for (m, _n, _v, _e), d in zip(lock.pins, lock.digests)
+        if m in PROGRAM_MANAGERS)
+    blob = json.dumps({
+        "program": program,
+        "entries": sorted(entry_names),
+        "platform": {
+            "chip": spec.chip.name,
+            "mesh_shape": list(spec.mesh_shape),
+            "mesh_axes": list(spec.mesh_axes),
+            "backend": spec.backend,
+            "interpret_kernels": spec.interpret_kernels,
+        },
+        "version": {"jax": spec.jax_version,
+                    "salt": COMPILE_VERSION_SALT},
+    }, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def artifact_component(key: str,
+                       entry_names: Sequence[str]) -> UniformComponent:
+    """The content-addressed carrier for one compiled executable.
+
+    The key is the whole identity: every node of the platform class
+    constructs a byte-identical component (and therefore identical chunk
+    ids), which is what lets the executable flow over the ordinary
+    peer-to-peer chunk path.
+    """
+    names = tuple(sorted(entry_names))
+    return UniformComponent(
+        manager=COMPILED_MANAGER,
+        name=f"xla-exec-{key[:16]}",
+        version="1.0",
+        env="any",
+        context={"compile_key": key, "entries": list(names)},
+        payload="",
+        size_bytes=ARTIFACT_BYTES_BASE + ARTIFACT_BYTES_PER_ENTRY * len(names),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledArtifact:
+    """One cached executable: the key, its carrier component, and what the
+    original compile cost (virtual seconds) so reports can say what a hit
+    saved."""
+    key: str
+    component: UniformComponent
+    entry_names: Tuple[str, ...]
+    compile_s: float = 0.0
+
+
+@dataclasses.dataclass
+class CompileCacheStats:
+    hits: int = 0
+    misses: int = 0
+    puts: int = 0
+    compile_skips: int = 0        # step compiles avoided via hits
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class CompileCache:
+    """Thread-safe LRU index of compiled executables (control plane only).
+
+    Shared across all node builders of a fleet — like the build-plan
+    cache, it is deployment-service metadata, not node storage.  The
+    executable *bytes* live in per-node chunk stores and obey those
+    stores' capacity/eviction/pin rules; an entry here only asserts that
+    an executable with this key exists somewhere and names the component
+    that carries it.
+    """
+
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.stats = CompileCacheStats()
+        self._lock = threading.Lock()
+        self._entries: "OrderedDict[str, CompiledArtifact]" = OrderedDict()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, key: str) -> Optional[CompiledArtifact]:
+        with self._lock:
+            art = self._entries.get(key)
+            if art is None:
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return art
+
+    def put(self, art: CompiledArtifact) -> None:
+        with self._lock:
+            self._entries[art.key] = art
+            self._entries.move_to_end(art.key)
+            self.stats.puts += 1
+            while (self.max_entries is not None
+                   and len(self._entries) > self.max_entries):
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def drop(self, key: str) -> bool:
+        with self._lock:
+            return self._entries.pop(key, None) is not None
+
+    def artifacts(self) -> Dict[str, CompiledArtifact]:
+        with self._lock:
+            return dict(self._entries)

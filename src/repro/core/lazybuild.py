@@ -35,13 +35,16 @@ from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from .cir import CIR
 from .chunkstore import CLAIM_WAIT_TIMEOUT_S, ChunkedComponentStore, FetchPlan
+from .compilecache import (COMPILE_VIRTUAL_S_PER_ENTRY, CompileCache,
+                           CompiledArtifact, artifact_component,
+                           compile_cache_key)
 from .component import UniformComponent
 from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
                            Lifecycle)
 from .registry import RegistryError, UniformComponentService
 from .resolution import (Resolution, ResolutionError, resolution_from_pins,
                          uniform_dependency_resolution)
-from .simnet import WallClockTransport
+from .simnet import SimTransport, WallClockTransport
 from .spec import SpecSheet
 from .store import LocalComponentStore
 
@@ -317,6 +320,16 @@ class BuildReport:
     stage_s: Dict[str, float] = dataclasses.field(default_factory=dict)
     #                               ^ per-lifecycle-stage wall offsets
     listener_errors: int = 0        # advisory readiness-callback raises
+    # -- fleet compile-cache columns (compiled-artifact components) ---------
+    # Artifact bytes are accounted separately from the resolved-content
+    # columns above: cache-hit and cache-miss builds of the same content
+    # keep identical bytes_fetched / bytes_delta_fetched / chunk counts,
+    # and NodeTraffic.bytes_total still equals bytes_delta_fetched.
+    compile_cache_hit: bool = False  # executable restored from fleet cache
+    compile_skips: int = 0           # step compiles skipped via the cache
+    artifact_bytes_fetched: int = 0  # compiled-artifact wire bytes (peers)
+    artifact_chunks_fetched: int = 0
+    artifact_bytes_published: int = 0  # locally-compiled bytes stored
 
     @property
     def bytes_wire_fetched(self) -> int:
@@ -680,6 +693,10 @@ class ContainerInstance:
     report: BuildReport
     lifecycle: Lifecycle = dataclasses.field(default_factory=Lifecycle,
                                              repr=False, compare=False)
+    # fleet compile-cache key of the staged executable (set by the compile
+    # stage when a CompileCache is wired; snapshot/restore round-trips it)
+    compile_key: Optional[str] = dataclasses.field(default=None,
+                                                   compare=False)
 
     @property
     def arch_id(self) -> str:
@@ -722,11 +739,15 @@ class LazyBuilder:
                  fetch_simulate_bps: Optional[float] = None,
                  build_graph: Optional[BuildGraph] = None,
                  peering: Optional[Any] = None,
-                 fetch_transport: Optional[Any] = None):
+                 fetch_transport: Optional[Any] = None,
+                 compile_cache: Optional[CompileCache] = None):
         self.service = service
         self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
         self.plan_cache = BuildPlanCache() if plan_cache is None else plan_cache
+        # fleet-wide compiled-executable index (opt-in: None disables the
+        # cache and the compile stage behaves exactly as before)
+        self.compile_cache = compile_cache
         self.build_graph = build_graph if build_graph is not None \
             else BuildGraph()
         self.fetch_engine = FetchEngine(self.store, service,
@@ -800,23 +821,132 @@ class LazyBuilder:
 
     # -- stage 4: compile (stage step entrypoints for the mesh) ---------
     def _stage_compile(self, entry: Dict[str, Callable],
-                       report: BuildReport) -> Dict[str, Callable]:
-        """Wrap the step entrypoints in ``jax.jit``.
+                       report: BuildReport,
+                       inst: Optional[ContainerInstance] = None
+                       ) -> Dict[str, Callable]:
+        """Wrap the step entrypoints in ``jax.jit``, consulting the fleet
+        compile cache.
 
         Compilation itself stays lazy (first call traces + compiles for the
         actual argument shapes — AOT lowering needs them), but the staged
         callables are what launchers hand straight to the mesh.
+
+        When a ``CompileCache`` is wired and the build exposes its lockfile
+        (``inst``), the stage derives the fleet-wide cache key and either
+        restores the compiled executable — landing its content-addressed
+        artifact component from peers through the ordinary chunk path, and
+        counting the skipped compiles in ``report.compile_skips`` — or pays
+        the (virtual) compile cost and publishes the artifact for every
+        peer of the platform class.  Both paths satisfy the COMPILED
+        lifecycle stage; the resolved-content byte accounting is identical
+        hit-vs-miss (artifact bytes live in their own report columns).
         """
         t0 = time.perf_counter()
         import jax
         out = dict(entry)
-        for name in _STEP_ENTRIES:
-            fn = out.get(name)
-            if callable(fn):
-                out[name] = jax.jit(fn)
-                report.n_compiled += 1
+        names = tuple(n for n in _STEP_ENTRIES if callable(out.get(n)))
+
+        cache = self.compile_cache
+        if cache is not None and inst is not None and names:
+            key = compile_cache_key(inst.lock, inst.spec, names)
+            inst.compile_key = key
+            art = cache.get(key)
+            if art is not None and self._ingest_artifact(art, report):
+                report.compile_cache_hit = True
+                report.compile_skips += len(names)
+                cache.stats.compile_skips += len(names)
+            else:
+                # miss (or no reachable copy of the bytes): pay the
+                # platform compile, then publish the executable fleet-wide
+                self._model_compile_cost(len(names))
+                art = CompiledArtifact(
+                    key=key, component=artifact_component(key, names),
+                    entry_names=names,
+                    compile_s=COMPILE_VIRTUAL_S_PER_ENTRY * len(names))
+                self._publish_artifact(art, report)
+                cache.put(art)
+
+        for name in names:
+            out[name] = jax.jit(out[name])
+            report.n_compiled += 1
         report.compile_s = time.perf_counter() - t0
         return out
+
+    def _model_compile_cost(self, n_entries: int) -> None:
+        """Advance the virtual clock by the modeled XLA compile cost.
+
+        Only the discrete-event transport observes it (wall-clock builds
+        measure the real jit wall instead), so real deployments and legacy
+        benchmarks are unaffected.
+        """
+        tr = self.fetch_engine.transport
+        if isinstance(tr, SimTransport):
+            tr.backoff(COMPILE_VIRTUAL_S_PER_ENTRY * n_entries)
+
+    def _ingest_artifact(self, art: CompiledArtifact,
+                         report: BuildReport) -> bool:
+        """Land a cached executable's bytes locally; False means recompile.
+
+        Resident content is a free hit.  Missing chunks are sourced from
+        *peers only* — compiled artifacts are born on fleet nodes, the
+        upstream registry never stores them — through the same claim /
+        commit / abort singleflight protocol as every other component.
+        Artifact wire bytes land in ``report.artifact_bytes_fetched``,
+        never in the resolved-content columns.
+        """
+        comp = art.component
+        store = self.store
+        if not isinstance(store, ChunkedComponentStore):
+            return store.has(comp)
+        if store.has(comp) and not store.missing_chunks(comp):
+            return True
+        peering = self.fetch_engine.peering
+        plan = store.plan_fetch(comp)
+        try:
+            if plan.claimed:
+                if peering is None or not peering.fetch_artifact_stripe(
+                        comp, plan.claimed):
+                    store.abort_chunks(plan.claimed, component=comp)
+                    store.mark_incomplete(comp)
+                    return False
+                store.commit_chunks(plan.claimed, component=comp)
+                report.artifact_bytes_fetched += sum(
+                    ch.size for ch, _ev in plan.claimed)
+                report.artifact_chunks_fetched += len(plan.claimed)
+        except BaseException:
+            store.abort_chunks(plan.claimed, component=comp)
+            raise
+        for ev in [ev for _ch, ev in plan.waits] + list(plan.barriers):
+            ev.wait(CLAIM_WAIT_TIMEOUT_S)
+        if store.missing_chunks(comp):
+            store.mark_incomplete(comp)
+            return False
+        if peering is not None:
+            peering.announce_chunks(store.chunks_of(comp))
+        return True
+
+    def _publish_artifact(self, art: CompiledArtifact,
+                          report: BuildReport) -> None:
+        """Store the locally-compiled executable (a local ingest: no wire
+        bytes) and announce its chunks so peers can source it."""
+        comp = art.component
+        store = self.store
+        if not isinstance(store, ChunkedComponentStore):
+            if store.put(comp):
+                report.artifact_bytes_published += comp.size_bytes
+            return
+        plan = store.plan_fetch(comp)
+        try:
+            if plan.claimed:
+                store.commit_chunks(plan.claimed, component=comp)
+                report.artifact_bytes_published += sum(
+                    ch.size for ch, _ev in plan.claimed)
+        except BaseException:
+            store.abort_chunks(plan.claimed, component=comp)
+            raise
+        peering = self.fetch_engine.peering
+        if peering is not None:
+            peering.announce_chunks(store.chunks_of(comp))
 
     # ------------------------------------------------------------------
     def build(self, cir: CIR, spec: SpecSheet,
@@ -901,6 +1031,29 @@ class LazyBuilder:
         BuildOrchestrator(self, self.build_graph).start(
             inst, res, mesh=mesh, assemble=assemble,
             compile_steps=compile_steps, t0=t0, record_build=False,
+            overlap=overlap, block=block)
+        return inst
+
+    # ------------------------------------------------------------------
+    def retry(self, inst: ContainerInstance,
+              mesh: Any = None,
+              assemble: bool = True,
+              compile_steps: bool = False,
+              overlap: bool = True,
+              block: bool = True) -> ContainerInstance:
+        """Re-drive a failed instance's build after a transient fault.
+
+        The instance keeps its resolution, lockfile and report; the
+        lifecycle is re-armed (``Lifecycle.reset_for_retry``) so a retry
+        that succeeds no longer reports the stale ``failed_stage`` from the
+        faulted attempt.  Chunks the first attempt landed are ordinary
+        local hits for the retry.
+        """
+        if inst.lifecycle.error is None and inst.lifecycle.reached("complete"):
+            return inst
+        BuildOrchestrator(self, self.build_graph).start(
+            inst, inst.bundle.resolution, mesh=mesh, assemble=assemble,
+            compile_steps=compile_steps, record_build=not inst.report.locked,
             overlap=overlap, block=block)
         return inst
 

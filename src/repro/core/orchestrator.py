@@ -116,6 +116,24 @@ class Lifecycle:
             for ev in self._events.values():
                 ev.set()          # wake every waiter; wait() re-raises
 
+    def reset_for_retry(self) -> None:
+        """Re-arm the state machine before a rebuild of the same instance.
+
+        A transient fault leaves ``error``/``failed_stage`` set and every
+        stage event signalled (``fail`` wakes all waiters).  A retry that
+        succeeds must not keep reporting the stale failure, and waiters on
+        not-yet-reached stages must block again instead of observing the
+        dead build's wakeup.  Stages actually completed stay completed.
+        """
+        with self._lock:
+            self._error = None
+            self._failed_stage = None
+            for s, ev in self._events.items():
+                if s in self._completed:
+                    ev.set()
+                else:
+                    ev.clear()
+
     def reached(self, stage: str) -> bool:
         with self._lock:
             return self._resolve(stage) in self._completed
@@ -319,6 +337,10 @@ class BuildOrchestrator:
                compile_steps: bool, t0: float, record_build: bool,
                overlap: bool) -> None:
         report, life = inst.report, inst.lifecycle
+        if life.error is not None:
+            # rebuilding after a transient fault: the previous attempt's
+            # failure must not outlive it
+            life.reset_for_retry()
         comps = resolution.components
         readiness = ComponentReadiness(
             comps, self.graph,
@@ -369,7 +391,8 @@ class BuildOrchestrator:
 
             if compile_steps and entry:
                 readiness.wait("compile")
-                inst.entry = self.builder._stage_compile(entry, report)
+                inst.entry = self.builder._stage_compile(entry, report,
+                                                         inst=inst)
             report.stage_s["compiled"] = time.perf_counter() - t0
             life.advance("compiled")
 

@@ -1,0 +1,111 @@
+"""Snapshot/restore of ASSEMBLED+COMPILED lifecycle state (scale-to-zero).
+
+A serverless deployment that scales an instance to zero should not pay the
+full cold build to come back: the node's content-addressed store still
+holds the chunks, the lockfile still pins the exact components, and the
+fleet compile cache still indexes the compiled executable.  A snapshot
+captures exactly the control-plane state needed to reconstruct a READY
+instance without re-resolving (the lock replays its pins), without
+re-fetching (present chunks are hits; only evicted chunks move), and
+without re-compiling (the compile stage restores the content-addressed
+artifact via :mod:`repro.core.compilecache`).
+
+The snapshot is a small JSON document — CIR bytes, lockfile, spec, compile
+key — NOT a memory image: restore drives the ordinary locked-rebuild
+pipeline, so every lifecycle gate, lease and accounting rule holds.
+"""
+from __future__ import annotations
+
+import base64
+import dataclasses
+import hashlib
+import json
+from typing import Any, Optional, Tuple
+
+from .cir import CIR
+from .lazybuild import _STEP_ENTRIES, ContainerInstance, Lockfile
+from .spec import SpecSheet
+
+# Stages that may be snapshotted: the instance must have proven the
+# ASSEMBLED+COMPILED state it claims to be restorable to.
+SNAPSHOT_MIN_STAGE = "compiled"
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceSnapshot:
+    """Restorable record of one ASSEMBLED+COMPILED (or later) instance."""
+    cir_b64: str                       # gzip CIR wire bytes, base64
+    lock_json: str                     # exact component pins to replay
+    spec_json: str                     # the platform the lock is valid for
+    stage: str                         # lifecycle stage at snapshot time
+    entry_names: Tuple[str, ...]       # staged step entrypoints
+    compile_key: Optional[str] = None  # fleet compile-cache key (if cached)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "InstanceSnapshot":
+        d = json.loads(s)
+        d["entry_names"] = tuple(d["entry_names"])
+        return InstanceSnapshot(**d)
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.to_json().encode()).hexdigest()
+
+
+def snapshot_instance(inst: ContainerInstance) -> InstanceSnapshot:
+    """Capture a restorable snapshot of ``inst``.
+
+    Requires the instance to have reached the COMPILED stage (the
+    lifecycle state the snapshot claims to restore); a failed or
+    still-fetching build has nothing consistent to capture.
+    """
+    life = inst.lifecycle
+    if life.error is not None:
+        raise ValueError(
+            f"cannot snapshot a failed build (failed at "
+            f"{life.failed_stage!r}: {life.error})")
+    if not life.reached(SNAPSHOT_MIN_STAGE):
+        raise ValueError(
+            f"instance at stage {life.stage!r} — snapshot requires at "
+            f"least {SNAPSHOT_MIN_STAGE!r}")
+    return InstanceSnapshot(
+        cir_b64=base64.b64encode(inst.cir.to_bytes()).decode("ascii"),
+        lock_json=inst.lock.to_json(),
+        spec_json=inst.spec.to_json(),
+        stage=life.stage,
+        entry_names=tuple(sorted(
+            n for n in _STEP_ENTRIES if callable(inst.entry.get(n)))),
+        compile_key=inst.compile_key,
+    )
+
+
+def restore_instance(snap: InstanceSnapshot, builder: Any,
+                     mesh: Any = None,
+                     overlap: bool = True,
+                     block: bool = True) -> ContainerInstance:
+    """Rebuild a scaled-to-zero instance from its snapshot.
+
+    Drives the locked-rebuild pipeline: resolution is a pin replay (no
+    version selection), the fetch is a pure chunk-delta against whatever
+    the node's store still holds (typically all hits), and the compile
+    stage restores the executable through the fleet compile cache — the
+    snapshot's ``compile_key`` must match the key the rebuild derives, or
+    the snapshot is stale for this builder's catalog and restore refuses
+    rather than silently recompiling the wrong program.
+    """
+    cir = CIR.from_bytes(base64.b64decode(snap.cir_b64))
+    lock = Lockfile.from_json(snap.lock_json)
+    spec = SpecSheet.from_json(snap.spec_json)
+    if snap.compile_key is not None:
+        from .compilecache import compile_cache_key
+        derived = compile_cache_key(lock, spec, snap.entry_names)
+        if derived != snap.compile_key:
+            raise ValueError(
+                "snapshot compile key does not match this lock/spec — "
+                "stale snapshot, re-deploy instead of restoring")
+    inst = builder.build_from_lock(
+        cir, lock, spec, mesh=mesh, assemble=True,
+        compile_steps=bool(snap.entry_names), overlap=overlap, block=block)
+    return inst

@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.cir import CIR
+from ..core.compilecache import CompileCache
 from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
                               LazyBuilder)
 from ..core.registry import UniformComponentService
@@ -96,6 +97,11 @@ class FleetResult:
     sim_elapsed_s: float = 0.0        # virtual time this deploy advanced
     faults_fired_total: int = 0       # fault activations virtual time passed
     link_retries_total: int = 0       # transient-link backoff retries
+    # -- fleet compile-cache columns (compiled-artifact components) -----
+    compile_cache_hits_total: int = 0     # builds that restored an exec
+    compile_skips_total: int = 0          # step compiles skipped fleet-wide
+    artifact_bytes_fetched_total: int = 0  # compiled-artifact peer wire
+    artifact_bytes_published_total: int = 0  # freshly compiled bytes stored
 
     @property
     def ok(self) -> bool:
@@ -151,6 +157,15 @@ class FleetResult:
                 f"  simulated transport: {self.sim_elapsed_s:.2f} s virtual "
                 f"({self.faults_fired_total} faults fired, "
                 f"{self.link_retries_total} link retries)")
+        if self.compile_cache_hits_total or self.compile_skips_total or \
+                self.artifact_bytes_published_total:
+            lines.append(
+                f"  compile cache: {self.compile_cache_hits_total} exec "
+                f"restore(s), {self.compile_skips_total} step compile(s) "
+                f"skipped, artifacts "
+                f"{self.artifact_bytes_fetched_total / 2**20:.1f} MiB from "
+                f"peers / {self.artifact_bytes_published_total / 2**20:.1f} "
+                f"MiB published")
         if self.listener_errors_total:
             lines.append(f"  {self.listener_errors_total} readiness-listener "
                          f"error(s) swallowed")
@@ -229,7 +244,8 @@ class FleetDeployer:
                  use_peers: bool = True,
                  simulate_links: bool = False,
                  eviction_policy: str = "lru",
-                 simnet: Optional[SimNetwork] = None):
+                 simnet: Optional[SimNetwork] = None,
+                 compile_cache: Optional[CompileCache] = None):
         if eviction_policy not in EVICTION_POLICIES:
             raise ValueError(f"unknown eviction policy {eviction_policy!r} "
                              f"(one of {EVICTION_POLICIES})")
@@ -242,7 +258,16 @@ class FleetDeployer:
             if simulate_links:
                 raise ValueError("simulate_links sleeps real wall clock; "
                                  "simnet is virtual time — pick one")
-        self.plan_cache = plan_cache or BuildPlanCache()
+        # `is None`, not truthiness: both caches define __len__, so an
+        # empty caller-supplied cache is falsy and `or` would silently
+        # swap in a fresh one behind the caller's back
+        self.plan_cache = BuildPlanCache() if plan_cache is None \
+            else plan_cache
+        # the compiled-executable index is fleet-wide control-plane state,
+        # exactly like the plan cache: one node's compile is every same-
+        # platform-class peer's hit (the bytes still move peer-to-peer)
+        self.compile_cache = CompileCache() if compile_cache is None \
+            else compile_cache
         self.max_workers = max_workers
         self.overlap = overlap
         self.topology = topology
@@ -264,7 +289,8 @@ class FleetDeployer:
                 link_bandwidth_bps=link_bandwidth_bps,
                 plan_cache=self.plan_cache,
                 fetch_workers=fetch_workers,
-                fetch_simulate_bps=fetch_simulate_bps)
+                fetch_simulate_bps=fetch_simulate_bps,
+                compile_cache=self.compile_cache)
             return
         if store is not None:
             raise ValueError(
@@ -295,7 +321,8 @@ class FleetDeployer:
                              plan_cache=self.plan_cache,
                              fetch_workers=fetch_workers,
                              fetch_simulate_bps=None,
-                             peering=peering)
+                             peering=peering,
+                             compile_cache=self.compile_cache)
             lb.readiness_listeners.append(peering.on_component_ready)
             self._node_stores[node_id] = st
             self._node_peerings[node_id] = peering
@@ -309,6 +336,11 @@ class FleetDeployer:
     # ------------------------------------------------------------------
     def node_store(self, node_id: str) -> ChunkedComponentStore:
         return self._node_stores[node_id]
+
+    def node_builder(self, node_id: str) -> LazyBuilder:
+        """One topology node's builder — the restore path of a scaled-to-
+        zero instance rebuilds through the node that will run it."""
+        return self._node_builders[node_id]
 
     def node_traffic(self, node_id: str) -> NodeTraffic:
         """Cumulative (all deploys) wire split of one node."""
@@ -460,12 +492,27 @@ class FleetDeployer:
             if self.simnet is not None else 0,
             link_retries_total=sum(t.link_retries
                                    for t in node_traffic.values()),
+            compile_cache_hits_total=sum(r.compile_cache_hit
+                                         for r in reports),
+            compile_skips_total=sum(r.compile_skips for r in reports),
+            artifact_bytes_fetched_total=sum(r.artifact_bytes_fetched
+                                             for r in reports),
+            artifact_bytes_published_total=sum(r.artifact_bytes_published
+                                               for r in reports),
         )
 
     # ------------------------------------------------------------------
     def warm(self, cir: CIR, specs: Sequence[SpecSheet],
-             overrides: Optional[Mapping[str, Any]] = None) -> int:
+             overrides: Optional[Mapping[str, Any]] = None,
+             precompile: bool = False) -> int:
         """Pre-populate the plan cache + store for a fleet (no assembly).
+
+        ``precompile=True`` additionally assembles and compiles each spec
+        on the seed: the per-platform-class compiled artifacts land in the
+        fleet compile cache and the seed's store (announced to peers), so
+        the first *real* cold deploy of every platform class skips its XLA
+        compile and pulls the executable over a peer link.  The artifacts
+        are pinned together with the warmed content.
 
         Returns the number of platforms whose plans are now cached — a
         deployment service calls this off the hot path so real deploys
@@ -509,7 +556,9 @@ class FleetDeployer:
             # while the builds — and their plan-time leases — are in flight
             try:
                 inst = builder.build(cir, spec, overrides=overrides,
-                                     assemble=False, overlap=self.overlap,
+                                     assemble=precompile,
+                                     compile_steps=precompile,
+                                     overlap=self.overlap,
                                      block=False)
             except Exception:  # noqa: BLE001 — per-platform isolation
                 continue
@@ -531,6 +580,20 @@ class FleetDeployer:
                 ok += 1
             except Exception:  # noqa: BLE001 — per-platform isolation
                 continue
+        if precompile:
+            # re-pin with the freshly published executables included: the
+            # seed must hold them for peers exactly as long as it holds the
+            # warmed content they accompany (overlap-then-release keeps the
+            # original pin alive until the wider one is in place)
+            arts = self.compile_cache.artifacts()
+            art_comps = {a.component.digest(): a.component
+                         for _spec, inst in insts
+                         if inst.compile_key is not None
+                         for a in [arts.get(inst.compile_key)]
+                         if a is not None}
+            if art_comps:
+                self._pin_warm(store, cir,
+                               list(comps.values()) + list(art_comps.values()))
         return ok
 
     @staticmethod

@@ -290,6 +290,12 @@ class NodeTraffic:
     link_retries: int = 0            # transient-link-fault backoff retries
     peer_sources: Dict[str, int] = dataclasses.field(default_factory=dict)
     #                                ^ peer node -> bytes pulled from it
+    # Compiled-artifact transfers (fleet compile cache) are tracked apart
+    # from resolved-content traffic: they never count into ``bytes_total``,
+    # which keeps the bytes_total == bytes_delta_fetched identity intact
+    # whether or not a build hit the compile cache.
+    artifact_bytes_from_peers: int = 0
+    artifact_chunks_from_peers: int = 0
 
     @property
     def bytes_total(self) -> int:
@@ -326,6 +332,10 @@ class NodeTraffic:
             peer_sources={p: b - before.peer_sources.get(p, 0)
                           for p, b in self.peer_sources.items()
                           if b - before.peer_sources.get(p, 0)},
+            artifact_bytes_from_peers=self.artifact_bytes_from_peers
+            - before.artifact_bytes_from_peers,
+            artifact_chunks_from_peers=self.artifact_chunks_from_peers
+            - before.artifact_chunks_from_peers,
         )
 
 
@@ -568,3 +578,40 @@ class NodePeering:
             t.link_retries += staged.link_retries
             for src, nbytes in staged.peer_sources.items():
                 t.peer_sources[src] = t.peer_sources.get(src, 0) + nbytes
+
+    def fetch_artifact_stripe(self, component: UniformComponent,
+                              stripe: Sequence[Tuple[Chunk, threading.Event]]
+                              ) -> bool:
+        """Transfer a compiled-artifact stripe from linked peers ONLY.
+
+        Compiled executables are born on fleet nodes — the upstream
+        registry never stores them — so there is no upstream fallback:
+        this returns ``False`` unless *every* chunk can be sourced from a
+        peer, and the caller recompiles locally (then re-publishes).  A
+        peer that cannot honour its advertisement is retracted, exactly as
+        on the resolved-content path.  Successful transfers land in the
+        ``artifact_*`` traffic columns, never in ``bytes_total``.
+
+        A ``NodeDownError`` naming *this* node propagates — its build is
+        dead and must fail, not silently recompile on a dead node.
+        """
+        chunks = [ch for ch, _ev in stripe]
+        if not chunks:
+            return True
+        if not self.enabled:
+            return False
+        staged_bytes = 0
+        groups = self.select(chunks)
+        if any(src is None for src, _chs in groups):
+            return False               # no linked peer holds part of it
+        for src, chs in groups:
+            try:
+                self._peer_pull(src, component, chs)
+            except PeerTransferError:
+                self.index.retract(src, [ch.id for ch in chs])
+                return False
+            staged_bytes += sum(ch.size for ch in chs)
+        with self._lock:
+            self.traffic.artifact_bytes_from_peers += staged_bytes
+            self.traffic.artifact_chunks_from_peers += len(chunks)
+        return True

@@ -2,6 +2,12 @@
 slot-based continuous-batching engine with synthetic requests.
 
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b -n 16
+
+Scale-to-zero support: ``--snapshot-out PATH`` writes an
+ASSEMBLED+COMPILED snapshot once the instance is READY; ``--restore PATH``
+rebuilds from such a snapshot — resolution is a pin replay, the fetch is a
+chunk delta against the local store, and the compile stage restores the
+executable through the compile cache — instead of a full cold build.
 """
 from __future__ import annotations
 
@@ -13,7 +19,8 @@ import jax
 import numpy as np
 
 from ..configs import ARCHS
-from ..core import LazyBuilder, PreBuilder, probe_host
+from ..core import (CompileCache, InstanceSnapshot, LazyBuilder, PreBuilder,
+                    probe_host, restore_instance, snapshot_instance)
 from ..core import catalog
 from .mesh import make_smoke_mesh
 
@@ -28,28 +35,51 @@ def main(argv=None) -> int:
     ap.add_argument("--max-seq", type=int, default=256)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--snapshot-out", metavar="PATH", default=None,
+                    help="write an ASSEMBLED+COMPILED instance snapshot "
+                         "once READY (restorable via --restore)")
+    ap.add_argument("--restore", metavar="PATH", default=None,
+                    help="restore a scaled-to-zero instance from a snapshot "
+                         "instead of a full cold build")
     args = ap.parse_args(argv)
 
-    cfg = ARCHS[args.arch]
-    if not args.full:
-        cfg = cfg.reduced()
-
     svc = catalog.default_service()
-    cir = PreBuilder(svc).prebuild(cfg, entrypoint="serve")
-    spec = probe_host(mesh_shape=(1,), mesh_axes=("data",))
-    # non-blocking lazy-build: the orchestrator overlaps assemble/compile
-    # with the weight-asset tail; we wait on lifecycle stages, not build()
-    inst = LazyBuilder(svc).build(cir, spec, mesh=make_smoke_mesh(1),
-                                  overrides={"workload": "decode"},
-                                  block=False)
+    builder = LazyBuilder(svc, compile_cache=CompileCache())
+
+    if args.restore:
+        with open(args.restore) as f:
+            snap = InstanceSnapshot.from_json(f.read())
+        inst = restore_instance(snap, builder, mesh=make_smoke_mesh(1),
+                                block=False)
+        cir, cfg = inst.cir, inst.cir.arch_config()
+    else:
+        cfg = ARCHS[args.arch]
+        if not args.full:
+            cfg = cfg.reduced()
+        cir = PreBuilder(svc).prebuild(cfg, entrypoint="serve")
+        spec = probe_host(mesh_shape=(1,), mesh_axes=("data",))
+        # non-blocking lazy-build: the orchestrator overlaps
+        # assemble/compile with the weight-asset tail; we wait on
+        # lifecycle stages, not build()
+        inst = builder.build(cir, spec, mesh=make_smoke_mesh(1),
+                             overrides={"workload": "decode"},
+                             compile_steps=bool(args.snapshot_out),
+                             block=False)
     inst.wait("ready")
-    print(f"lazy-built {cir.name} for {spec.platform_id}; "
+    verb = "restored" if args.restore else "lazy-built"
+    print(f"{verb} {cir.name} for {inst.spec.platform_id}; "
           f"deployable at {inst.report.critical_path_s * 1e3:.1f} ms "
           f"(stage={inst.stage}, CIR={cir.size_bytes()}B)")
     # first weight use: block until the asset tail has fully landed
     inst.wait("weights")
     print(f"weights landed; fetched={inst.report.bytes_fetched}B "
           f"(overlap {inst.report.overlap_s * 1e3:.1f} ms)")
+    if args.snapshot_out:
+        with open(args.snapshot_out, "w") as f:
+            f.write(snapshot_instance(inst).to_json())
+        print(f"snapshot written to {args.snapshot_out} "
+              f"(stage={inst.stage}, compile_key="
+              f"{(inst.compile_key or '')[:16]})")
 
     params = inst.model.init(jax.random.PRNGKey(0))
     engine = inst.entry["make_engine"](

@@ -1,7 +1,7 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
-from benchmarks.check_regression import (CHURN, DISTRIBUTION, FETCH,
-                                         PIPELINE, SCALE, Check,
+from benchmarks.check_regression import (CHURN, COLDSTART, DISTRIBUTION,
+                                         FETCH, PIPELINE, SCALE, Check,
                                          build_checks)
 
 
@@ -35,7 +35,8 @@ def test_missing_baseline_skips_but_missing_fresh_fails():
 def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
           churn_reduction=27.0, churn_hit=0.34, scale_wall=8.0,
           scale_offload=0.99, identity_ok=1.0, loss_converged=1.0,
-          loss_extra=4.0):
+          loss_extra=4.0, cold_reduction=76.0, cold_identical=1.0,
+          restore_reduction=100.0, p99_ready=20.0, compile_hit=0.95):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -56,15 +57,22 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
         "faults": {"node_loss": {"converged": loss_converged,
                                  "extra_upstream_pct": loss_extra}},
     }
+    cold = {
+        "cold_vs_peer": {"ready_reduction_pct": cold_reduction,
+                         "accounting_identical": cold_identical},
+        "snapshot": {"restore_reduction_pct": restore_reduction},
+        "autoscale": {"p99_ready_s": p99_ready,
+                      "compile_hit_rate": compile_hit},
+    }
     return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn,
-            SCALE: scale}
+            SCALE: scale, COLDSTART: cold}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 13
+    assert len(checks) == 18
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -113,6 +121,28 @@ def test_scale_gate_binds_on_regressions():
     failed = {c.metric for c in build_checks(base, diverged) if not c.ok}
     assert f"{SCALE}:faults.node_loss.converged" in failed
     assert f"{SCALE}:faults.node_loss.extra_upstream_pct" in failed
+
+
+def test_coldstart_gate_binds_on_regressions():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # the 60% floor binds even off a generous baseline (cache collapsed:
+    # the second cold node re-pays its compile)
+    no_cache = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, cold_reduction=45.0,
+                     compile_hit=0.2)
+    failed = {c.metric for c in build_checks(base, no_cache) if not c.ok}
+    assert f"{COLDSTART}:cold_vs_peer.ready_reduction_pct" in failed
+    assert f"{COLDSTART}:autoscale.compile_hit_rate" in failed
+    # byte-smuggled compile skips are a hard failure (identity is 0/1)
+    smuggled = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, cold_identical=0.0)
+    failed = {c.metric for c in build_checks(base, smuggled) if not c.ok}
+    assert f"{COLDSTART}:cold_vs_peer.accounting_identical" in failed
+    # restore degrading toward a full rebuild, or p99 cold-READY blowing
+    # past the band, fails the gate
+    slow = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, restore_reduction=70.0,
+                 p99_ready=30.0)
+    failed = {c.metric for c in build_checks(base, slow) if not c.ok}
+    assert f"{COLDSTART}:snapshot.restore_reduction_pct" in failed
+    assert f"{COLDSTART}:autoscale.p99_ready_s" in failed
 
 
 def test_new_baseline_file_missing_on_old_branch_skips_cleanly():

@@ -1,0 +1,306 @@
+"""Fleet compile cache + snapshot/restore (docs/cir-format.md §10).
+
+Covers the serverless-cold-start claims: the compile stage derives a
+fleet-stable cache key (platform *class*, not node), publishes the
+compiled executable as a content-addressed component, peers restore it
+over the ordinary chunk path with byte accounting identical to the
+cache-miss build of the same content, an unreachable artifact degrades to
+a local recompile, and snapshot/restore rebuilds a scaled-to-zero
+instance without re-resolving, re-fetching or re-compiling.  Also the
+lifecycle retry fix: a successful rebuild after a transient fault clears
+``failed_stage``.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (COMPILED_MANAGER, CompileCache, CompiledArtifact,
+                        InstanceSnapshot, LazyBuilder, PreBuilder,
+                        artifact_component, compile_cache_key, cpu_smoke,
+                        gpu_server, restore_instance, snapshot_instance,
+                        tpu_single_pod)
+from repro.core.orchestrator import Lifecycle
+from repro.deploy import FleetDeployer, FleetTopology
+
+ARCH = "starcoder2-3b"
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def _edge_fleet(service, n_edges=2, **kw):
+    topo = FleetTopology.edge_fanout(n_edges)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    fd = FleetDeployer(service, topology=topo, **kw)
+    return fd, cloud, edges
+
+
+# ---------------------------------------------------------------------------
+# Cache key derivation
+# ---------------------------------------------------------------------------
+
+def test_cache_key_is_platform_class_not_node(service, pb):
+    """Two nodes of the same platform class derive the same key from their
+    own locks — that is what makes one compile a fleet-wide hit — while a
+    different platform class or jax version never collides."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    lb = LazyBuilder(service)
+    e0 = dataclasses.replace(cpu_smoke(), platform_id="edge-host-0")
+    e1 = dataclasses.replace(cpu_smoke(), platform_id="edge-host-1")
+    lock0 = lb.build(cir, e0, assemble=False).lock
+    lock1 = lb.build(cir, e1, assemble=False).lock
+    names = ("prefill", "decode_step")
+    assert compile_cache_key(lock0, e0, names) == \
+        compile_cache_key(lock1, e1, names)
+    # platform class changes the key
+    gpu = gpu_server()
+    lock_gpu = lb.build(cir, gpu, assemble=False).lock
+    assert compile_cache_key(lock_gpu, gpu, names) != \
+        compile_cache_key(lock0, e0, names)
+    # version salt: a jax upgrade must never false-hit
+    bumped = dataclasses.replace(e0, jax_version="99.0")
+    assert compile_cache_key(lock0, bumped, names) != \
+        compile_cache_key(lock0, e0, names)
+    # entry set is part of the program identity
+    assert compile_cache_key(lock0, e0, ("train_step",)) != \
+        compile_cache_key(lock0, e0, names)
+
+
+def test_artifact_component_is_content_addressed():
+    a = artifact_component("ab" * 32, ("prefill", "decode_step"))
+    b = artifact_component("ab" * 32, ("decode_step", "prefill"))
+    assert a.manager == COMPILED_MANAGER
+    assert a.digest() == b.digest()          # order-insensitive identity
+    assert a.size_bytes > 0
+    c = artifact_component("cd" * 32, ("prefill", "decode_step"))
+    assert c.digest() != a.digest()
+
+
+def test_compile_cache_lru_and_stats():
+    cache = CompileCache(max_entries=2)
+    arts = [CompiledArtifact(
+        key=f"k{i}", component=artifact_component(f"k{i}" * 16, ("x",)),
+        entry_names=("x",)) for i in range(3)]
+    cache.put(arts[0])
+    cache.put(arts[1])
+    assert cache.get("k0") is arts[0]        # refresh k0
+    cache.put(arts[2])                       # evicts k1 (LRU)
+    assert cache.get("k1") is None
+    assert cache.get("k0") is arts[0] and cache.get("k2") is arts[2]
+    assert cache.stats.evictions == 1
+    assert cache.stats.misses == 1 and cache.stats.hits == 3
+    assert 0.0 < cache.stats.hit_rate < 1.0
+    assert len(cache) == 2
+    assert cache.drop("k0") and not cache.drop("k0")
+
+
+# ---------------------------------------------------------------------------
+# Compile stage: publish on miss, restore on hit
+# ---------------------------------------------------------------------------
+
+def test_compile_miss_publishes_then_local_hit_skips(service, pb):
+    cache = CompileCache()
+    lb = LazyBuilder(service, compile_cache=cache)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    spec = cpu_smoke()
+    cold = lb.build(cir, spec, assemble=True, compile_steps=True)
+    rep = cold.report
+    assert rep.n_compiled > 0
+    assert not rep.compile_cache_hit and rep.compile_skips == 0
+    assert rep.artifact_bytes_published > 0
+    assert cold.compile_key is not None
+    # the executable is a real component in the content-addressed store
+    art = cache.artifacts()[cold.compile_key]
+    assert lb.store.has(art.component)
+    assert not lb.store.missing_chunks(art.component)
+
+    warm = lb.build(cir, spec, assemble=True, compile_steps=True)
+    rep2 = warm.report
+    assert rep2.compile_cache_hit
+    assert rep2.compile_skips == rep2.n_compiled > 0
+    assert rep2.artifact_bytes_fetched == 0      # resident: free hit
+    assert rep2.artifact_bytes_published == 0
+    assert warm.entry.keys() == cold.entry.keys()
+    assert cache.stats.hits == 1 and cache.stats.compile_skips > 0
+
+
+def test_peer_sources_artifact_and_accounting_identity(service, pb):
+    """One edge compiles; the same-class peer restores the executable over
+    a peer link — and the resolved-content byte accounting of the two
+    builds is identical (compile skips are explicit, never byte-smuggled).
+    """
+    fd, cloud, edges = _edge_fleet(service, n_edges=2, max_workers=1)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd.deploy(cir, [cloud])                      # seed content on the cloud
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    r1 = fd.deploy(cir, [edges[1]], assemble=True, compile_steps=True)
+    assert r0.ok and r1.ok
+    miss, hit = r0.deployments[0].report, r1.deployments[0].report
+
+    assert not miss.compile_cache_hit and miss.compile_skips == 0
+    assert miss.artifact_bytes_published > 0
+    assert hit.compile_cache_hit and hit.compile_skips == hit.n_compiled > 0
+    assert hit.artifact_bytes_fetched > 0        # pulled from edge-0/cloud
+    assert hit.artifact_chunks_fetched > 0
+    assert r1.compile_cache_hits_total == 1
+    assert r1.compile_skips_total == hit.compile_skips
+    assert r1.artifact_bytes_fetched_total == hit.artifact_bytes_fetched
+
+    # byte/compile accounting identity on the same content, hit vs miss
+    for f in ("bytes_fetched", "bytes_delta_fetched", "chunks_hit",
+              "chunks_missed", "chunks_waited", "cache_hits", "cache_misses",
+              "n_components", "n_compiled", "bytes_total_components"):
+        assert getattr(miss, f) == getattr(hit, f), f
+    for res in (r0, r1):
+        d = res.deployments[0]
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+        # artifact bytes stay out of the wire-byte identity
+        assert res.node_traffic[d.node_id].bytes_total == \
+            d.report.bytes_delta_fetched
+    t1 = r1.node_traffic[r1.deployments[0].node_id]
+    assert t1.artifact_bytes_from_peers == hit.artifact_bytes_fetched
+    assert t1.artifact_chunks_from_peers == hit.artifact_chunks_fetched
+
+
+def test_unreachable_artifact_recompiles(service, pb):
+    """A cache hit whose bytes no linked peer can serve degrades to a local
+    recompile + republish — never an upstream fetch, never a failed build."""
+    fd, cloud, edges = _edge_fleet(service, n_edges=2, max_workers=1,
+                                   use_peers=False)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd.deploy(cir, [cloud])
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    r1 = fd.deploy(cir, [edges[1]], assemble=True, compile_steps=True)
+    assert r0.ok and r1.ok
+    hit = r1.deployments[0].report
+    # the key matched (same platform class) but peering is disabled, so the
+    # artifact is unreachable: the node compiled and published its own copy
+    assert not hit.compile_cache_hit and hit.compile_skips == 0
+    assert hit.artifact_bytes_fetched == 0
+    assert hit.artifact_bytes_published > 0
+    assert fd.compile_cache.stats.hits >= 1      # index hit, content miss
+
+
+# ---------------------------------------------------------------------------
+# Snapshot / restore (scale-to-zero)
+# ---------------------------------------------------------------------------
+
+def test_snapshot_restore_roundtrip(service, pb):
+    cache = CompileCache()
+    lb = LazyBuilder(service, compile_cache=cache)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    spec = cpu_smoke()
+    inst = lb.build(cir, spec, assemble=True, compile_steps=True)
+    snap = snapshot_instance(inst)
+    snap = InstanceSnapshot.from_json(snap.to_json())   # wire round-trip
+    assert snap.compile_key == inst.compile_key
+    assert snap.stage in ("compiled", "ready", "complete")
+
+    restored = restore_instance(snap, lb)
+    rep = restored.report
+    assert restored.stage == "complete"
+    assert rep.locked                        # pin replay, no re-resolution
+    assert rep.compile_cache_hit             # no re-compile
+    assert rep.compile_skips == rep.n_compiled > 0
+    assert rep.bytes_delta_fetched == 0      # no re-fetch (store resident)
+    assert rep.artifact_bytes_fetched == 0
+    assert restored.entry.keys() == inst.entry.keys()
+    assert restored.lock.to_json() == inst.lock.to_json()
+
+
+def test_snapshot_requires_compiled_state(service, pb):
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    inst = lb.build(cir, cpu_smoke(), assemble=False, block=False)
+    inst.wait("planned")
+    if not inst.lifecycle.reached("compiled"):
+        with pytest.raises(ValueError, match="snapshot requires"):
+            snapshot_instance(inst)
+    inst.wait("complete")
+
+
+def test_stale_snapshot_key_refused(service, pb):
+    cache = CompileCache()
+    lb = LazyBuilder(service, compile_cache=cache)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    inst = lb.build(cir, cpu_smoke(), assemble=True, compile_steps=True)
+    snap = snapshot_instance(inst)
+    stale = dataclasses.replace(snap, compile_key="0" * 64)
+    with pytest.raises(ValueError, match="stale snapshot"):
+        restore_instance(stale, lb)
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle retry (satellite: failed_stage must not outlive a rebuild)
+# ---------------------------------------------------------------------------
+
+def test_lifecycle_reset_for_retry_unit():
+    life = Lifecycle()
+    life.advance("fetching")
+    boom = RuntimeError("transient")
+    life.fail(boom)
+    assert life.error is boom and life.failed_stage == "fetching"
+    assert life.wait("fetching") == "fetching"   # reached before the fault
+    with pytest.raises(RuntimeError, match="transient"):
+        life.wait("ready")
+    life.reset_for_retry()
+    assert life.error is None and life.failed_stage is None
+    assert life.reached("fetching")              # completed stages survive
+    with pytest.raises(TimeoutError):
+        life.wait("ready", timeout=0.01)         # re-armed, not signalled
+    life.advance("complete")
+    assert life.wait("ready") == "complete"
+
+
+def test_retry_clears_stale_failed_stage(service, pb):
+    """A build that failed on a transient fault retries to success — and
+    the instance stops reporting the dead attempt's failed stage."""
+    lb = LazyBuilder(service)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="train")
+    spec = tpu_single_pod()
+    real = service.fetch_chunks
+    calls = {"n": 0}
+
+    def flaky(*a, **kw):
+        calls["n"] += 1
+        raise ConnectionError("transient uplink blip")
+
+    service.fetch_chunks = flaky
+    try:
+        inst = lb.build(cir, spec, assemble=False, block=False)
+        with pytest.raises(ConnectionError):
+            inst.wait("complete")
+        assert inst.lifecycle.failed_stage == "fetching"
+        assert calls["n"] >= 1
+    finally:
+        service.fetch_chunks = real
+
+    lb.retry(inst, assemble=False)
+    assert inst.stage == "complete"
+    assert inst.lifecycle.error is None
+    assert inst.lifecycle.failed_stage is None   # the fix under test
+    assert inst.report.bytes_delta_fetched <= inst.report.bytes_fetched
+
+
+# ---------------------------------------------------------------------------
+# warm(precompile=True): the seed pre-compiles for the fleet
+# ---------------------------------------------------------------------------
+
+def test_warm_precompile_seeds_fleet_cache(service, pb):
+    fd, cloud, edges = _edge_fleet(service, n_edges=2, max_workers=1)
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    assert fd.warm(cir, [edges[0]], precompile=True) == 1
+    assert len(fd.compile_cache) >= 1
+    # the first REAL cold deploy of that platform class skips its compile
+    r = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    assert r.ok
+    rep = r.deployments[0].report
+    assert rep.compile_cache_hit and rep.compile_skips == rep.n_compiled > 0

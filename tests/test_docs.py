@@ -192,3 +192,64 @@ def test_simnet_section_names_real_api():
         assert field in FleetResult.__dataclass_fields__
     assert "link_retries" in NodeTraffic.__dataclass_fields__
     assert isinstance(Lifecycle.failed_stage, property)
+
+
+def test_compilecache_section_names_real_api():
+    """§10 documents the fleet compile cache + snapshot/restore — the
+    names and semantics it promises must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (COMPILED_MANAGER, COMPILE_VERSION_SALT,
+                            CompileCache, CompiledArtifact,
+                            InstanceSnapshot, LazyBuilder,
+                            artifact_component, compile_cache_key,
+                            restore_instance, snapshot_instance)
+    from repro.core.lazybuild import BuildReport
+    from repro.core.orchestrator import Lifecycle
+    from repro.deploy import FleetDeployer, NodePeering, NodeTraffic
+    from repro.deploy.fleet import FleetResult
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 10. Compiled artifacts: fleet compile cache & " \
+        "snapshot/restore" in text
+    for name in ("compile_cache_key", "CompileCache", "CompiledArtifact",
+                 "artifact_component", "COMPILE_VERSION_SALT",
+                 "InstanceSnapshot", "snapshot_instance", "restore_instance",
+                 "fetch_artifact_stripe", "compile_cache_hit",
+                 "compile_skips", "artifact_bytes_fetched",
+                 "artifact_bytes_published", "artifact_bytes_from_peers",
+                 "reset_for_retry", "precompile", "compile_key",
+                 "BENCH_coldstart.json", "--snapshot-out", "--restore"):
+        assert name in text, f"§10 lost its {name} reference"
+    # the documented surface
+    assert COMPILED_MANAGER == "compiled"
+    assert COMPILE_VERSION_SALT            # non-empty format/version salt
+    cache = CompileCache(max_entries=2)
+    for attr in ("get", "put", "drop", "artifacts", "stats"):
+        assert hasattr(cache, attr)
+    sig = inspect.signature(compile_cache_key)
+    assert list(sig.parameters) == ["lock", "spec", "entry_names"]
+    assert artifact_component("ab" * 32, ("x",)).manager == COMPILED_MANAGER
+    for field in ("key", "component", "entry_names", "compile_s"):
+        assert field in CompiledArtifact.__dataclass_fields__
+    for field in ("cir_b64", "lock_json", "spec_json", "stage",
+                  "entry_names", "compile_key"):
+        assert field in InstanceSnapshot.__dataclass_fields__
+    for fn in (snapshot_instance, restore_instance):
+        assert callable(fn)
+    for field in ("compile_cache_hit", "compile_skips",
+                  "artifact_bytes_fetched", "artifact_bytes_published"):
+        assert field in BuildReport.__dataclass_fields__
+    for field in ("artifact_bytes_from_peers", "artifact_chunks_from_peers"):
+        assert field in NodeTraffic.__dataclass_fields__
+    for field in ("compile_cache_hits_total", "compile_skips_total",
+                  "artifact_bytes_fetched_total",
+                  "artifact_bytes_published_total"):
+        assert field in FleetResult.__dataclass_fields__
+    assert hasattr(NodePeering, "fetch_artifact_stripe")
+    assert hasattr(Lifecycle, "reset_for_retry")
+    assert hasattr(LazyBuilder, "retry")
+    assert "compile_cache" in \
+        inspect.signature(FleetDeployer.__init__).parameters
+    assert "precompile" in inspect.signature(FleetDeployer.warm).parameters

@@ -256,3 +256,48 @@ def test_plan_cache_lru_builder_integration(service, pb):
     assert warm.report.plan_cache_hit
     redo = lb.build(cir, tpu_single_pod(), assemble=False)
     assert not redo.report.plan_cache_hit            # evicted → re-resolved
+
+
+def test_plan_cache_eviction_racing_warm_re_resolves(service, pb):
+    """LRU eviction racing a concurrent ``FleetDeployer.warm()``: a plan
+    evicted mid-warm must be re-resolved on the next use, never replayed
+    as a dangling lock — warm completes, the follow-up deploy succeeds,
+    and its lock matches a clean re-resolution."""
+    import threading
+
+    cache = BuildPlanCache(max_entries=1)
+    fd = FleetDeployer(service, plan_cache=cache, max_workers=2)
+    cir_a = pb.prebuild(ARCHS["gemma2-9b"], entrypoint="train")
+    cir_b = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="train")
+    specs = [tpu_single_pod(), gpu_server()]
+
+    stop = threading.Event()
+    churn_errors = []
+
+    def churn():
+        # a competing workload keeps pushing its own plans through the
+        # 1-entry cache, evicting warm()'s entries while warm is running
+        while not stop.is_set():
+            try:
+                fd.builder.build(cir_b, cpu_smoke(), assemble=False)
+            except Exception as e:  # noqa: BLE001 — fail the test below
+                churn_errors.append(e)
+                return
+
+    th = threading.Thread(target=churn)
+    th.start()
+    try:
+        assert fd.warm(cir_a, specs) == len(specs)
+    finally:
+        stop.set()
+        th.join()
+    assert not churn_errors
+    assert cache.stats.evictions > 0                 # the race happened
+
+    res = fd.deploy(cir_a, specs)
+    assert res.ok
+    # whatever the cache did, the deploy's pins equal a fresh resolution's
+    clean = LazyBuilder(service).build(cir_a, tpu_single_pod(),
+                                       assemble=False)
+    assert res.instance(tpu_single_pod().platform_id).lock.to_json() == \
+        clean.lock.to_json()
