@@ -32,7 +32,9 @@ DISTRIBUTION = "BENCH_distribution.json"
 CHURN = "BENCH_churn.json"
 SCALE = "BENCH_scale.json"
 COLDSTART = "BENCH_coldstart.json"
-BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE, COLDSTART)
+PLACEMENT = "BENCH_placement.json"
+BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE, COLDSTART,
+             PLACEMENT)
 
 
 @dataclasses.dataclass
@@ -102,7 +104,8 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, churn, coldstart, distribution, scale
+    from . import build_time, churn, coldstart, distribution, placement, \
+        scale
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -127,9 +130,13 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
     cold_rows = coldstart.collect(smoke=True, quiet=True)
     cold_path = coldstart.write_bench_coldstart(
         path=os.path.join(out_dir, COLDSTART), smoke=True, rows=cold_rows)
+    place_rows = placement.collect(smoke=True, quiet=True)
+    place_path = placement.write_bench_placement(
+        path=os.path.join(out_dir, PLACEMENT), smoke=True, rows=place_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
             DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path),
-            SCALE: _load(scale_path), COLDSTART: _load(cold_path)}
+            SCALE: _load(scale_path), COLDSTART: _load(cold_path),
+            PLACEMENT: _load(place_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -212,6 +219,18 @@ def build_checks(base: Dict[str, Optional[Dict]],
     # keeps it there — a collapsed cache shows up in both
     add(COLDSTART, ["autoscale", "p99_ready_s"], False, 0.25)
     add(COLDSTART, ["autoscale", "compile_hit_rate"], True, 0.10)
+
+    # -- demand-driven placement: virtual-time, deterministic ------------
+    # speculation must keep beating reactive fetch on the rotating trace
+    # (the benchmark's own floor is 40%; the gate holds the margin)
+    add(PLACEMENT, ["trace", "p95_ready_reduction_pct"], True, 0.15,
+        abs_limit=40.0)
+    # ... without flooding the WAN registry link to do it
+    add(PLACEMENT, ["trace", "speculation_wire_overhead_pct"], False, 0.0,
+        abs_limit=25.0)
+    # the migration serve gap must stay a fraction of a cold re-deploy
+    add(PLACEMENT, ["migration", "migration_downtime_ratio"], False, 0.25,
+        abs_limit=0.20)
     return checks
 
 

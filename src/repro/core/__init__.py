@@ -11,8 +11,8 @@ from .spec import (CHIPS, CPU_HOST, GPU_A100, TPU_V5E, SpecSheet,  # noqa: F401
                    cpu_smoke, gpu_server, probe_host, tpu_multi_pod,
                    tpu_single_pod)
 from .store import (Chunk, EVICTION_POLICIES,  # noqa: F401
-                    LifecycleStats, LocalComponentStore, StoreStats,
-                    component_pieces)
+                    LifecycleStats, LocalComponentStore,
+                    SPEC_LEASE_PREFIX, StoreStats, component_pieces)
 from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
                          FetchPlan)
 from .cir import CIR, PreBuilder  # noqa: F401

@@ -160,6 +160,22 @@ class ChunkedComponentStore(LocalComponentStore):
         self._comp_chunk_ids: Dict[str, List[str]] = {}
         self._chunk_pins: Dict[str, int] = {}
         self._evicted_ids: Set[str] = set()
+        # speculative eviction tier (spec: soft leases, docs §11):
+        #   _spec_tier    — chunk id -> spec-lease refcount; members are the
+        #                   FIRST eviction victims.  A real demand hit
+        #                   *promotes* the chunk out (entry removed outright,
+        #                   demand overrides any still-active spec lease).
+        #   _spec_unhit   — chunk id -> size for bytes committed
+        #                   speculatively and not yet demanded; drained into
+        #                   spec_hit_bytes (demand hit) or spec_wasted_bytes
+        #                   (evicted first), so hit + wasted <= spec_bytes.
+        #   _spec_wait_demand — chunk ids a real build is *waiting* on while
+        #                   a speculative transfer is mid-flight; the commit
+        #                   counts them as hits immediately (the demand beat
+        #                   the speculation by a hair, but the bytes served).
+        self._spec_tier: Dict[str, int] = {}
+        self._spec_unhit: Dict[str, int] = {}
+        self._spec_wait_demand: Set[str] = set()
         # digests GC'd after eviction whose re-registration should count
         # refetch at chunk granularity (only the chunks actually re-claimed
         # cross the wire — plan hits on surviving shared chunks must not
@@ -242,7 +258,8 @@ class ChunkedComponentStore(LocalComponentStore):
             return [ch for ch in chunks if ch.id not in self._chunk_present]
 
     # -- fetch protocol -------------------------------------------------------
-    def plan_fetch(self, c: UniformComponent) -> FetchPlan:
+    def plan_fetch(self, c: UniformComponent,
+                   speculative: bool = False) -> FetchPlan:
         """Atomically register ``c`` and claim its missing chunks.
 
         For a component already stored (component-level hit) the plan
@@ -251,6 +268,10 @@ class ChunkedComponentStore(LocalComponentStore):
         races too.  For a new component, every chunk is classified hit /
         claim / wait under one lock acquisition, so two concurrent builds
         can never both claim (and charge) the same chunk.
+
+        ``speculative`` plans (placement pre-positioning) are not demand:
+        they neither refresh LRU recency nor promote chunks out of the
+        speculative eviction tier — only a *real* build's plan does.
         """
         dg = c.digest()
         with self._lock:
@@ -283,10 +304,17 @@ class ChunkedComponentStore(LocalComponentStore):
                 for ch in chunks:
                     if ch.id in self._chunk_present:
                         hits.append(ch)
-                        self._chunk_present.move_to_end(ch.id)  # LRU touch
+                        if not speculative:
+                            self._chunk_present.move_to_end(ch.id)  # LRU
+                            self._promote_spec_locked(ch.id)
                         self.chunk_stats.chunks_hit += 1
                     elif ch.id in self._chunk_inflight:
                         waits.append((ch, self._chunk_inflight[ch.id]))
+                        if not speculative:
+                            # a speculative transfer may be what lands this
+                            # chunk — record the real demand so the commit
+                            # counts it as a hit, not unhit speculation
+                            self._spec_wait_demand.add(ch.id)
                         self.chunk_stats.chunks_waited += 1
                     else:
                         ev = threading.Event()
@@ -307,11 +335,18 @@ class ChunkedComponentStore(LocalComponentStore):
                 # a component-level hit is a *use*: on a bounded store its
                 # chunks' LRU positions must refresh (the warm path skips
                 # chunking, so use the registered id list — no hashing),
-                # or eviction would keep targeting the hottest content
-                if self.capacity_bytes is not None:
+                # or eviction would keep targeting the hottest content.
+                # Real demand also promotes the chunks out of the
+                # speculative tier — a fully pre-positioned component lands
+                # on this path, so its speculation-hit accounting does too.
+                if not speculative and (self.capacity_bytes is not None
+                                        or self._spec_tier
+                                        or self._spec_unhit):
                     for cid in self._comp_chunk_ids.get(dg, ()):
                         if cid in self._chunk_present:
-                            self._chunk_present.move_to_end(cid)
+                            if self.capacity_bytes is not None:
+                                self._chunk_present.move_to_end(cid)
+                            self._promote_spec_locked(cid)
                 live = [ev for ev in self._comp_pending.get(dg, ())
                         if not ev.is_set()]
                 if live:
@@ -327,11 +362,18 @@ class ChunkedComponentStore(LocalComponentStore):
 
     def commit_chunks(self,
                       claimed: Sequence[Tuple[Chunk, threading.Event]],
-                      component: Optional[UniformComponent] = None
+                      component: Optional[UniformComponent] = None,
+                      speculative: bool = False
                       ) -> None:
         """Mark fetched chunks present and release their waiters.  With
         ``component`` given, its pending-event record is pruned once no
-        outstanding transfers remain (bounds the barrier bookkeeping)."""
+        outstanding transfers remain (bounds the barrier bookkeeping).
+
+        ``speculative`` commits (placement pre-positioning under a ``spec:``
+        soft lease) are accounted in ``lifecycle_stats.spec_bytes`` and the
+        chunks join the speculative eviction tier until a real build's plan
+        demands them — unless a real build is already *waiting* on the
+        transfer, which counts as an immediate speculation hit."""
         batch = {id(ev) for _ch, ev in claimed}
         with self._lock:
             for ch, _ev in claimed:
@@ -343,6 +385,16 @@ class ChunkedComponentStore(LocalComponentStore):
                 if ch.id in self._evicted_ids:
                     self._evicted_ids.discard(ch.id)
                     self.lifecycle_stats.refetch_bytes += ch.size
+                if speculative:
+                    self.lifecycle_stats.spec_bytes += ch.size
+                    if ch.id in self._spec_wait_demand:
+                        self._spec_wait_demand.discard(ch.id)
+                        self.lifecycle_stats.spec_hit_bytes += ch.size
+                    else:
+                        self._spec_tier.setdefault(ch.id, 1)
+                        self._spec_unhit[ch.id] = ch.size
+                else:
+                    self._spec_wait_demand.discard(ch.id)
             if component is not None:
                 dg = component.digest()
                 pend = self._comp_pending.get(dg)
@@ -432,6 +484,9 @@ class ChunkedComponentStore(LocalComponentStore):
         with self._lock:
             for ch, _ev in claimed:
                 self._chunk_inflight.pop(ch.id, None)
+                # a stale demand marker must not turn a future speculative
+                # re-fetch of this chunk into a phantom hit
+                self._spec_wait_demand.discard(ch.id)
             if component is not None:
                 self._incomplete.add(component.digest())
         for _ch, ev in claimed:
@@ -489,6 +544,39 @@ class ChunkedComponentStore(LocalComponentStore):
         with self._lock:
             return bool(self._chunk_pins.get(chunk_id))
 
+    def _spec_chunks_locked(self, chunk_ids: Sequence[str],
+                            delta: int) -> None:
+        """Spec-lease refcounting of the speculative eviction tier; holds
+        ``_lock``.  Decrements tolerate missing entries — a demand hit may
+        have promoted the chunk out while the lease was still active."""
+        if delta > 0:
+            for cid in chunk_ids:
+                self._spec_tier[cid] = self._spec_tier.get(cid, 0) + delta
+        else:
+            for cid in chunk_ids:
+                n = self._spec_tier.get(cid, 0) + delta
+                if n > 0:
+                    self._spec_tier[cid] = n
+                else:
+                    self._spec_tier.pop(cid, None)
+
+    def _promote_spec_locked(self, cid: str) -> None:
+        """A real build demanded ``cid``: remove it from the speculative
+        eviction tier outright (demand overrides any active spec lease) and
+        drain its unhit bytes into ``spec_hit_bytes``; holds ``_lock``.
+        The unhit drain is unconditional — a released spec lease drops tier
+        membership but the bytes still count as a hit when demand lands."""
+        self._spec_tier.pop(cid, None)
+        sz = self._spec_unhit.pop(cid, None)
+        if sz:
+            self.lifecycle_stats.spec_hit_bytes += sz
+
+    def chunk_speculative(self, chunk_id: str) -> bool:
+        """Whether ``chunk_id`` currently sits in the speculative eviction
+        tier (first victim under capacity pressure)."""
+        with self._lock:
+            return chunk_id in self._spec_tier
+
     @property
     def resident_chunk_bytes(self) -> int:
         """Bytes currently resident (evictions decrement)."""
@@ -535,12 +623,16 @@ class ChunkedComponentStore(LocalComponentStore):
                                ) -> Tuple[List[str], int, bool]:
         """Pick eviction victims worth ``need`` bytes in policy order.
         Returns (victims, bytes still unfreeable, whether a pinned or
-        in-flight chunk blocked the walk).  ``cheapest-to-restore`` walks
-        peer-held chunks (LRU order) first — content a linked peer still
-        holds is restored over a peer link, not the upstream registry —
-        then falls back to plain LRU for the remainder."""
+        in-flight chunk blocked the walk).  Speculative-tier chunks
+        (``spec:`` soft leases) are evicted first, LRU within the tier —
+        pre-positioned bytes must never displace demand content.  Within
+        the remainder, ``cheapest-to-restore`` walks peer-held chunks (LRU
+        order) first — content a linked peer still holds is restored over
+        a peer link, not the upstream registry — then falls back to plain
+        LRU."""
         victims: List[str] = []
         pin_blocked = False
+        spec_tier: List[Tuple[str, int]] = []
         candidates: List[Tuple[str, int]] = []
         for cid, size in self._chunk_present.items():
             if self._chunk_pins.get(cid) or cid in self._chunk_inflight:
@@ -548,12 +640,16 @@ class ChunkedComponentStore(LocalComponentStore):
                 continue
             if exempt_chunks is not None and cid in exempt_chunks:
                 continue
-            candidates.append((cid, size))
-        groups = [candidates]
+            if cid in self._spec_tier:
+                spec_tier.append((cid, size))
+            else:
+                candidates.append((cid, size))
+        groups = [spec_tier, candidates]
         if self.eviction_policy == "cheapest-to-restore":
             held = self._peer_held([cid for cid, _sz in candidates])
             if held is not None:
-                groups = [[cs for cs in candidates if cs[0] in held],
+                groups = [spec_tier,
+                          [cs for cs in candidates if cs[0] in held],
                           [cs for cs in candidates if cs[0] not in held]]
         for group in groups:
             for cid, size in group:
@@ -598,6 +694,11 @@ class ChunkedComponentStore(LocalComponentStore):
             self.chunk_stats.chunk_bytes_evicted += size
             self.lifecycle_stats.evictions += 1
             self.lifecycle_stats.evicted_bytes += size
+            # speculated bytes evicted before any demand: the wager lost
+            self._spec_tier.pop(cid, None)
+            sz = self._spec_unhit.pop(cid, None)
+            if sz:
+                self.lifecycle_stats.spec_wasted_bytes += sz
             touched.update(self._chunk_refs.get(cid, ()))
         for dg in touched:
             c = self._by_digest.get(dg)

@@ -374,6 +374,12 @@ class SimNetwork:
         for f in self.plan.faults:
             self._schedule_fault(f)
 
+    @property
+    def now(self) -> float:
+        """Current virtual time — the fleet's time base for anything that
+        measures across transfers (planner ticks, migration downtime)."""
+        return self.clock.now
+
     # -- fault events ---------------------------------------------------
     def on_node_loss(self, hook: Callable[[str], None]) -> None:
         """Register a hook fired (with the node id) when virtual time

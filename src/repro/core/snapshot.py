@@ -53,6 +53,12 @@ class InstanceSnapshot:
     def digest(self) -> str:
         return hashlib.sha256(self.to_json().encode()).hexdigest()
 
+    @property
+    def platform_id(self) -> str:
+        """The platform this snapshot's lock is valid for — migration and
+        restore tooling route on it without re-parsing the whole spec."""
+        return json.loads(self.spec_json)["platform_id"]
+
 
 def snapshot_instance(inst: ContainerInstance) -> InstanceSnapshot:
     """Capture a restorable snapshot of ``inst``.

@@ -34,6 +34,15 @@ from .component import UniformComponent
 #                         Without a peer probe it degrades to plain LRU.
 EVICTION_POLICIES = ("lru", "cheapest-to-restore")
 
+# Lease ids with this prefix are **speculative soft leases**: instead of
+# pinning content they mark it as the FIRST eviction tier — pre-positioned
+# bytes (demand-driven placement, migration pre-fetch) must always be
+# evictable before pinned build content and before ordinary demand-fetched
+# content.  Priority order under capacity pressure: spec < warm < build-pin
+# (see docs/cir-format.md §11).  A real demand hit *promotes* the content
+# out of the speculative tier.
+SPEC_LEASE_PREFIX = "spec:"
+
 # Fraction of a component's pieces whose identity is stable across versions
 # and env variants of the same (manager, name) — the paper's Table 1 partial
 # file-overlap model.  Pieces [0, int(n * SHARED_PIECE_FRACTION)) are shared.
@@ -118,6 +127,10 @@ class LifecycleStats:
     components_gcd: int = 0         # components GC'd (every chunk evicted)
     leases_acquired: int = 0
     leases_released: int = 0
+    # speculative-placement accounting (``spec:`` soft leases, §11):
+    spec_bytes: int = 0             # bytes committed speculatively
+    spec_hit_bytes: int = 0         # speculated bytes later hit by demand
+    spec_wasted_bytes: int = 0      # speculated bytes evicted before demand
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -162,6 +175,9 @@ class LocalComponentStore:
         # always empty at component granularity (see ChunkedComponentStore)
         self._leases: Dict[str, Tuple[List[str], List[str]]] = {}
         self._digest_pins: Dict[str, int] = {}    # digest -> lease refcount
+        # digest -> spec-lease refcount: members of the speculative eviction
+        # tier (first victims under pressure; never pinned by spec leases)
+        self._spec_digests: Dict[str, int] = {}
         self._evicted_digests: Set[str] = set()   # for refetch accounting
         self._lock = threading.RLock()
         if path:
@@ -199,6 +215,9 @@ class LocalComponentStore:
         if dg in self._by_digest:
             self.stats.hits += 1
             self._by_digest.move_to_end(dg)          # LRU refresh
+            # a real demand hit promotes content out of the speculative
+            # eviction tier, even while its spec: lease is still active
+            self._spec_digests.pop(dg, None)
             return False
         self._by_digest[dg] = c
         self.stats.puts += 1
@@ -235,15 +254,26 @@ class LocalComponentStore:
                             comps: Sequence[UniformComponent]) -> None:
         """Pin ``comps`` for ``build_id``: from plan time until
         ``release_build``, none of this content is evictable.  One lease per
-        build id — re-acquiring an active id is a caller bug."""
+        build id — re-acquiring an active id is a caller bug.
+
+        Ids starting with ``SPEC_LEASE_PREFIX`` are **soft** leases: they do
+        not pin anything — they mark the content as the speculative eviction
+        tier (first victims under capacity pressure), so pre-positioned bytes
+        can never crowd out pinned or demand-fetched content."""
         digests = [c.digest() for c in comps]
         chunk_ids = self._lease_chunk_ids(comps)
+        spec = build_id.startswith(SPEC_LEASE_PREFIX)
         with self._lock:
             if build_id in self._leases:
                 raise ValueError(f"build lease {build_id!r} already active")
-            for dg in digests:
-                self._digest_pins[dg] = self._digest_pins.get(dg, 0) + 1
-            self._pin_chunks_locked(chunk_ids)
+            if spec:
+                for dg in digests:
+                    self._spec_digests[dg] = self._spec_digests.get(dg, 0) + 1
+                self._spec_chunks_locked(chunk_ids, +1)
+            else:
+                for dg in digests:
+                    self._digest_pins[dg] = self._digest_pins.get(dg, 0) + 1
+                self._pin_chunks_locked(chunk_ids)
             self._leases[build_id] = (digests, chunk_ids)
             self.lifecycle_stats.leases_acquired += 1
 
@@ -257,13 +287,24 @@ class LocalComponentStore:
             if rec is None:
                 return False
             digests, chunk_ids = rec
-            for dg in digests:
-                n = self._digest_pins.get(dg, 0) - 1
-                if n > 0:
-                    self._digest_pins[dg] = n
-                else:
-                    self._digest_pins.pop(dg, None)
-            self._unpin_chunks_locked(chunk_ids)
+            if build_id.startswith(SPEC_LEASE_PREFIX):
+                # a demand hit may already have promoted some content out of
+                # the spec tier (refcount gone) — tolerate the decrement
+                for dg in digests:
+                    n = self._spec_digests.get(dg, 0) - 1
+                    if n > 0:
+                        self._spec_digests[dg] = n
+                    else:
+                        self._spec_digests.pop(dg, None)
+                self._spec_chunks_locked(chunk_ids, -1)
+            else:
+                for dg in digests:
+                    n = self._digest_pins.get(dg, 0) - 1
+                    if n > 0:
+                        self._digest_pins[dg] = n
+                    else:
+                        self._digest_pins.pop(dg, None)
+                self._unpin_chunks_locked(chunk_ids)
             self.lifecycle_stats.leases_released += 1
             self._enforce_capacity_locked()
             return True
@@ -287,6 +328,12 @@ class LocalComponentStore:
     def _unpin_chunks_locked(self, chunk_ids: Sequence[str]) -> None:
         pass
 
+    def _spec_chunks_locked(self, chunk_ids: Sequence[str],
+                            delta: int) -> None:
+        """Adjust chunk-level speculative-tier membership; no-op at
+        component granularity (``ChunkedComponentStore`` overrides)."""
+        pass
+
     # -- capacity enforcement (component granularity) -------------------------
     def _enforce_capacity_locked(self, exempt: Optional[str] = None) -> None:
         """Evict LRU unpinned components past ``capacity_bytes``; holds
@@ -298,9 +345,17 @@ class LocalComponentStore:
         if self.capacity_bytes is None:
             return
         while self.stats.bytes_stored > self.capacity_bytes:
+            # speculative-tier content (spec: soft leases) goes first —
+            # pre-positioned bytes must never displace demand content
             victim = next((dg for dg in self._by_digest
-                           if dg != exempt and not self._digest_pins.get(dg)),
+                           if dg != exempt and not self._digest_pins.get(dg)
+                           and self._spec_digests.get(dg)),
                           None)
+            if victim is None:
+                victim = next((dg for dg in self._by_digest
+                               if dg != exempt
+                               and not self._digest_pins.get(dg)),
+                              None)
             if victim is None:
                 self.lifecycle_stats.pin_denied_evictions += 1
                 return
@@ -309,6 +364,9 @@ class LocalComponentStore:
     def _evict_component_locked(self, dg: str) -> None:
         c = self._by_digest.pop(dg)
         self.stats.bytes_stored -= c.size_bytes
+        # content fetched again after eviction arrives on demand — it must
+        # not inherit the old speculative-tier marking
+        self._spec_digests.pop(dg, None)
         self._evicted_digests.add(dg)
         self.lifecycle_stats.evictions += 1
         self.lifecycle_stats.evicted_bytes += c.size_bytes

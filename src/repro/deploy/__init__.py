@@ -9,7 +9,10 @@ peer-to-peer chunk distribution (the cloud-edge continuum scenario): a
 node's fetch engine prefers the cheapest peer over the upstream registry.
 """
 from .fleet import (FleetDeployer, FleetResult,  # noqa: F401
-                    PlatformDeployment)
+                    MigrationReport, PlatformDeployment)
+from .placement import (DemandModel, PlacementPlanner,  # noqa: F401
+                        ReplicationOrder, SpeculationStats,
+                        speculative_replicate)
 from .topology import (FleetNode, FleetTopology, NodePeering,  # noqa: F401
                        NodeTraffic, PeerIndex, PeerTransferError,
                        TopologyError)

@@ -27,9 +27,17 @@ from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
                               LazyBuilder)
 from ..core.registry import UniformComponentService
 from ..core.simnet import SimNetwork
+from ..core.snapshot import restore_instance, snapshot_instance
 from ..core.spec import SpecSheet
-from ..core.store import EVICTION_POLICIES, LocalComponentStore
+from ..core.store import (EVICTION_POLICIES, SPEC_LEASE_PREFIX,
+                          LocalComponentStore)
+from .placement import speculative_replicate
 from .topology import FleetTopology, NodePeering, NodeTraffic, PeerIndex
+
+# Migration hand-off lease ids (pin the source content for the transfer
+# window) and post-migration retirement spec leases share one sequence.
+import itertools
+_MIGRATE_SEQ = itertools.count(1)
 
 
 @dataclasses.dataclass
@@ -102,6 +110,20 @@ class FleetResult:
     compile_skips_total: int = 0          # step compiles skipped fleet-wide
     artifact_bytes_fetched_total: int = 0  # compiled-artifact peer wire
     artifact_bytes_published_total: int = 0  # freshly compiled bytes stored
+    # -- speculative-placement columns (PlacementPlanner, docs §11) ------
+    # Window: since the end of the previous deploy() — pre-positioning
+    # runs *between* deploys, and its hits land during this one.  All
+    # zero (and their summary lines absent) when no planner is attached,
+    # so the existing columns stay byte-identical with it disabled.
+    bytes_speculative: int = 0            # speculative wire, all sources
+    bytes_speculative_upstream: int = 0   # ... over registry links
+    bytes_speculative_peer: int = 0       # ... over peer links
+    speculation_hit_bytes: int = 0        # speculated bytes demand used
+    speculation_wasted_bytes: int = 0     # speculated bytes evicted unused
+    # -- live-migration columns (FleetDeployer.migrate) ------------------
+    migrations_total: int = 0             # hand-offs since previous deploy
+    migration_downtime_s: float = 0.0     # summed serve-gap (virtual when
+    #                                       a simnet clock drives the fleet)
 
     @property
     def ok(self) -> bool:
@@ -166,6 +188,21 @@ class FleetResult:
                 f"{self.artifact_bytes_fetched_total / 2**20:.1f} MiB from "
                 f"peers / {self.artifact_bytes_published_total / 2**20:.1f} "
                 f"MiB published")
+        if self.bytes_speculative or self.speculation_hit_bytes or \
+                self.speculation_wasted_bytes:
+            lines.append(
+                f"  speculation: {self.bytes_speculative / 2**20:.1f} MiB "
+                f"pre-positioned "
+                f"({self.bytes_speculative_peer / 2**20:.1f} MiB peers, "
+                f"{self.bytes_speculative_upstream / 2**20:.1f} MiB "
+                f"upstream), {self.speculation_hit_bytes / 2**20:.1f} MiB "
+                f"hit by demand, "
+                f"{self.speculation_wasted_bytes / 2**20:.1f} MiB evicted "
+                f"unused")
+        if self.migrations_total:
+            lines.append(
+                f"  migrations: {self.migrations_total} hand-off(s), "
+                f"{self.migration_downtime_s * 1e3:.1f} ms total downtime")
         if self.listener_errors_total:
             lines.append(f"  {self.listener_errors_total} readiness-listener "
                          f"error(s) swallowed")
@@ -181,6 +218,8 @@ class FleetResult:
                     f"    {node_id:18s} upstream "
                     f"{t.bytes_from_upstream / 2**20:8.1f} MiB, peers "
                     f"{t.bytes_from_peers / 2**20:8.1f} MiB"
+                    + (f", speculative {t.spec_bytes_total / 2**20:.1f} MiB"
+                       if t.spec_bytes_total else "")
                     + (f" (from {', '.join(sorted(t.peer_sources))})"
                        if t.peer_sources else ""))
         for d in self.deployments:
@@ -196,6 +235,30 @@ class FleetResult:
                 lines.append(f"  {d.platform_id:20s} FAILED: "
                              f"{d.error}{partial}")
         return "\n".join(lines)
+
+
+@dataclasses.dataclass
+class MigrationReport:
+    """Outcome of one live hand-off (``FleetDeployer.migrate``).
+
+    ``downtime_s`` is the serve gap: from the moment the source instance
+    stops serving until the restored target instance reaches READY —
+    virtual seconds when a simnet clock drives the fleet.  The pre-fetch
+    happens *before* the gap opens (that is the whole point), so
+    ``prefetch_s``/``prefetch_bytes`` are reported separately;
+    ``restore_delta_bytes`` is what still had to move inside the gap.
+    """
+    platform_id: str
+    source_node: str
+    target_node: str
+    downtime_s: float
+    prefetch_s: float
+    prefetch_bytes: int
+    prefetch_bytes_already_present: int
+    restore_delta_bytes: int
+    compile_cache_hit: bool
+    decommissioned: bool
+    instance: ContainerInstance
 
 
 class FleetDeployer:
@@ -278,6 +341,15 @@ class FleetDeployer:
         self._node_builders: Dict[str, LazyBuilder] = {}
         self._warm_leases: Dict[str, str] = {}   # warm base id -> lease id
         self._warm_gen = 0
+        # speculative placement + migration bookkeeping: the planner (if
+        # any) attaches via attach_planner; marks anchor the "since end of
+        # previous deploy" windows of FleetResult's speculation/migration
+        # columns (planner rounds and migrations run *between* deploys)
+        self.planner: Optional[Any] = None
+        self._spec_mark: Tuple[int, int, int, int, int] = (0, 0, 0, 0, 0)
+        self._migrations_total = 0
+        self._migration_downtime_s = 0.0
+        self._migration_mark: Tuple[int, float] = (0, 0.0)
         if topology is None:
             # a caller-supplied store keeps its own policy; the default
             # store gets the requested one
@@ -346,6 +418,18 @@ class FleetDeployer:
         """Cumulative (all deploys) wire split of one node."""
         return self._node_peerings[node_id].traffic
 
+    def node_peering(self, node_id: str) -> NodePeering:
+        """One topology node's chunk-source router (the speculative
+        replication executor fetches through it)."""
+        return self._node_peerings[node_id]
+
+    def attach_planner(self, planner: Any) -> None:
+        """Register a ``PlacementPlanner``: every successful topology-mode
+        deployment from here on feeds its demand model."""
+        if self.topology is None:
+            raise ValueError("a placement planner needs topology mode")
+        self.planner = planner
+
     def _stores(self) -> List[LocalComponentStore]:
         return [self.store] if self.store is not None \
             else list(self._node_stores.values())
@@ -361,6 +445,28 @@ class FleetDeployer:
             pd += ls.pin_denied_evictions
             rf += ls.refetch_bytes
         return ev, pd, rf
+
+    def _spec_totals(self) -> Tuple[int, int, int, int, int]:
+        """(spec_bytes, hit, wasted, upstream wire, peer wire) summed
+        across stores + peerings — cumulative; deploy() reports the delta
+        since the end of the previous deploy."""
+        sb = hb = wb = 0
+        for s in self._stores():
+            ls = s.lifecycle_stats
+            sb += ls.spec_bytes
+            hb += ls.spec_hit_bytes
+            wb += ls.spec_wasted_bytes
+        up = sum(p.traffic.spec_bytes_from_upstream
+                 for p in self._node_peerings.values())
+        pe = sum(p.traffic.spec_bytes_from_peers
+                 for p in self._node_peerings.values())
+        return sb, hb, wb, up, pe
+
+    def _clock_now(self) -> float:
+        """The fleet's time base: the virtual clock under a simnet, wall
+        clock otherwise — migration downtime is measured on it."""
+        return self.simnet.now if self.simnet is not None \
+            else time.perf_counter()
 
     def _builder_for(self, spec: SpecSheet) -> Tuple[LazyBuilder,
                                                      Optional[str]]:
@@ -455,6 +561,26 @@ class FleetDeployer:
         node_traffic = {n: p.traffic.snapshot().since(traffic_before[n])
                         for n, p in self._node_peerings.items()}
         lc_after = self._lifecycle_totals()
+        # demand intake for the placement planner: every successful deploy
+        # is a demand observation for (node, CIR) — the planner's EWMA
+        if self.planner is not None:
+            key = cir.digest()
+            for d in deployments:
+                if d.ok and d.node_id is not None:
+                    self.planner.observe(
+                        d.node_id, key,
+                        list(d.instance.bundle.components()))
+        # speculation/migration columns: delta since the end of the
+        # PREVIOUS deploy (planner rounds + migrations run between
+        # deploys; their hits land during this one) — existing columns
+        # keep their call-time windows untouched
+        spec_now = self._spec_totals()
+        spec_delta = tuple(a - b for a, b in zip(spec_now, self._spec_mark))
+        self._spec_mark = spec_now
+        mig_delta = (self._migrations_total - self._migration_mark[0],
+                     self._migration_downtime_s - self._migration_mark[1])
+        self._migration_mark = (self._migrations_total,
+                                self._migration_downtime_s)
         return FleetResult(
             cir_name=cir.name,
             deployments=deployments,
@@ -499,6 +625,107 @@ class FleetDeployer:
                                              for r in reports),
             artifact_bytes_published_total=sum(r.artifact_bytes_published
                                                for r in reports),
+            bytes_speculative=spec_delta[0],
+            speculation_hit_bytes=spec_delta[1],
+            speculation_wasted_bytes=spec_delta[2],
+            bytes_speculative_upstream=spec_delta[3],
+            bytes_speculative_peer=spec_delta[4],
+            migrations_total=mig_delta[0],
+            migration_downtime_s=mig_delta[1],
+        )
+
+    # ------------------------------------------------------------------
+    def migrate(self, inst: ContainerInstance, target_node: str,
+                mesh: Any = None,
+                decommission: bool = True) -> MigrationReport:
+        """Live hand-off of a running serve instance to ``target_node``.
+
+        Protocol (docs/cir-format.md §11):
+
+          1. **Snapshot** the source instance (``core/snapshot.py``) — the
+             restorable control-plane record; requires COMPILED or later.
+          2. **Pin the source** content under a ``migrate:`` hand-off
+             lease: the cheapest chunk source for the transfer must not be
+             evicted mid-hand-off.
+          3. **Pre-fetch to the target** under a ``spec:`` soft lease
+             (peer-first, speculative traffic columns) while the source
+             keeps serving — the expensive byte movement happens *outside*
+             the serve gap.
+          4. **Hand off**: the source stops serving; the snapshot restores
+             on the target's builder (pin replay + chunk-delta fetch +
+             compile-cache hit).  The gap from stop to target-READY is the
+             measured ``downtime_s`` (virtual time under a simnet).
+          5. **Flip placement** to the target, release the target's spec
+             lease (restore demand already promoted the content) and the
+             source's hand-off lease.
+          6. **Decommission** (optional): retract the source's
+             announcements for the migrated chunks — strictly node-scoped,
+             so the target's (and any third node's) announcements survive
+             — and demote the source's now-idle copy to the speculative
+             eviction tier, making it the first thing churn reclaims.
+        """
+        if self.topology is None:
+            raise ValueError("migrate() needs topology mode (per-node "
+                             "stores and placement)")
+        snap = snapshot_instance(inst)
+        platform_id = snap.platform_id
+        source_node = self.topology.node_for(platform_id)
+        if target_node not in self.topology.node_ids():
+            raise ValueError(f"unknown target node {target_node!r}")
+        if target_node == source_node:
+            raise ValueError(f"instance already runs on {target_node!r}")
+        comps = list(inst.bundle.components())
+        src_store = self._node_stores[source_node]
+        tgt_store = self._node_stores[target_node]
+        seq = next(_MIGRATE_SEQ)
+        handoff_lease = f"migrate:{platform_id}#{seq}"
+        src_store.acquire_build_lease(handoff_lease, comps)
+        spec_lease = f"{SPEC_LEASE_PREFIX}{inst.cir.digest()[:16]}#mig{seq}"
+        try:
+            t_pre = self._clock_now()
+            pre = speculative_replicate(
+                tgt_store, comps, spec_lease,
+                peering=self._node_peerings[target_node])
+            prefetch_s = self._clock_now() - t_pre
+            # -- the serve gap opens: source stops, target restores ------
+            t_gap = self._clock_now()
+            new_inst = restore_instance(snap,
+                                        self._node_builders[target_node],
+                                        mesh=mesh, overlap=self.overlap,
+                                        block=False)
+            new_inst.wait("ready")
+            downtime_s = self._clock_now() - t_gap
+            self.topology.place(platform_id, target_node)
+            new_inst.wait("complete")   # weight tail streams while serving
+        finally:
+            tgt_store.release_build(spec_lease)
+            src_store.release_build(handoff_lease)
+        if decommission:
+            # node-scoped retraction: only the SOURCE's advertisements go;
+            # the target's announcements for the same chunk ids — landed
+            # during prefetch/restore — stay authoritative
+            assert self.peer_index is not None
+            chunk_ids = [ch.id for c in comps
+                         for ch in src_store.chunks_of(c)]
+            self.peer_index.retract(source_node, chunk_ids)
+            # the source's idle copy becomes first-evictable (spec tier);
+            # a later demand hit would promote it right back
+            src_store.acquire_build_lease(
+                f"{SPEC_LEASE_PREFIX}retired:{platform_id}#{seq}", comps)
+        self._migrations_total += 1
+        self._migration_downtime_s += downtime_s
+        return MigrationReport(
+            platform_id=platform_id,
+            source_node=source_node,
+            target_node=target_node,
+            downtime_s=downtime_s,
+            prefetch_s=prefetch_s,
+            prefetch_bytes=pre.bytes_fetched,
+            prefetch_bytes_already_present=pre.bytes_already_present,
+            restore_delta_bytes=new_inst.report.bytes_delta_fetched,
+            compile_cache_hit=bool(new_inst.report.compile_cache_hit),
+            decommissioned=decommission,
+            instance=new_inst,
         )
 
     # ------------------------------------------------------------------

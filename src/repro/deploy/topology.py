@@ -202,7 +202,12 @@ class PeerIndex:
     def retract(self, node_id: str, chunk_ids: Sequence[str]) -> None:
         """Forget ``node_id`` as a holder of ``chunk_ids`` (a transfer from
         it failed): later source selections fall back to other peers or
-        upstream instead of retrying a dead advertisement."""
+        upstream instead of retrying a dead advertisement.
+
+        Strictly node-scoped: a chunk's entry is only dropped when its
+        holder set empties, so retracting a migration *source* (or an
+        evicting node) can never orphan the target's — or any third
+        node's — announcements for the same chunk ids, even mid-flight."""
         with self._lock:
             for cid in chunk_ids:
                 holders = self._holders.get(cid)
@@ -212,7 +217,11 @@ class PeerIndex:
                         del self._holders[cid]
 
     def drop_node(self, node_id: str) -> None:
-        """Forget every advertisement of a node (it left the fleet)."""
+        """Forget every advertisement of a node (it left the fleet).
+        Node-scoped like ``retract``: other holders of the same chunks keep
+        their entries — dropping a migration source mid-handoff leaves the
+        target's announcements (including ones landing concurrently, which
+        serialize on the index lock) fully intact."""
         with self._lock:
             for cid in [cid for cid, h in self._holders.items()
                         if node_id in h]:
@@ -296,10 +305,22 @@ class NodeTraffic:
     # whether or not a build hit the compile cache.
     artifact_bytes_from_peers: int = 0
     artifact_chunks_from_peers: int = 0
+    # Speculative pre-positioning (placement planner / migration prefetch,
+    # docs §11) is likewise tracked apart from demand traffic: nothing a
+    # build *demanded* moved, so these never count into ``bytes_total`` —
+    # the bytes_total == bytes_delta_fetched identity holds with the
+    # planner enabled or disabled.
+    spec_bytes_from_upstream: int = 0
+    spec_bytes_from_peers: int = 0
+    spec_chunks: int = 0
 
     @property
     def bytes_total(self) -> int:
         return self.bytes_from_upstream + self.bytes_from_peers
+
+    @property
+    def spec_bytes_total(self) -> int:
+        return self.spec_bytes_from_upstream + self.spec_bytes_from_peers
 
     @property
     def peer_offload_ratio(self) -> float:
@@ -311,6 +332,7 @@ class NodeTraffic:
         d = dataclasses.asdict(self)
         d["bytes_total"] = self.bytes_total
         d["peer_offload_ratio"] = self.peer_offload_ratio
+        d["spec_bytes_total"] = self.spec_bytes_total
         return d
 
     def snapshot(self) -> "NodeTraffic":
@@ -336,6 +358,11 @@ class NodeTraffic:
             - before.artifact_bytes_from_peers,
             artifact_chunks_from_peers=self.artifact_chunks_from_peers
             - before.artifact_chunks_from_peers,
+            spec_bytes_from_upstream=self.spec_bytes_from_upstream
+            - before.spec_bytes_from_upstream,
+            spec_bytes_from_peers=self.spec_bytes_from_peers
+            - before.spec_bytes_from_peers,
+            spec_chunks=self.spec_chunks - before.spec_chunks,
         )
 
 
@@ -549,25 +576,7 @@ class NodePeering:
         ``NodeTraffic.bytes_total`` equal to the builds' delta-byte sum
         even across failures and retries.
         """
-        staged = NodeTraffic(self.node_id)
-        for src, chunks in self.select([ch for ch, _ev in stripe]):
-            if src is None:
-                self._upstream_pull(component, chunks, staged)
-                continue
-            nbytes = sum(ch.size for ch in chunks)
-            try:
-                self._peer_pull(src, component, chunks)
-            except PeerTransferError:
-                # a dead peer must not poison later selections: retract its
-                # advertisement and pay the upstream price for these chunks
-                self.index.retract(src, [ch.id for ch in chunks])
-                staged.peer_fallbacks += 1
-                self._upstream_pull(component, chunks, staged)
-                continue
-            staged.bytes_from_peers += nbytes
-            staged.chunks_from_peers += len(chunks)
-            staged.peer_sources[src] = \
-                staged.peer_sources.get(src, 0) + nbytes
+        staged = self._pull_groups(component, [ch for ch, _ev in stripe])
         with self._lock:
             t = self.traffic
             t.bytes_from_upstream += staged.bytes_from_upstream
@@ -578,6 +587,54 @@ class NodePeering:
             t.link_retries += staged.link_retries
             for src, nbytes in staged.peer_sources.items():
                 t.peer_sources[src] = t.peer_sources.get(src, 0) + nbytes
+
+    def _pull_groups(self, component: UniformComponent,
+                     chunks: Sequence[Chunk]) -> NodeTraffic:
+        """Source-split transfer body shared by the demand and speculative
+        stripe paths: peer-first with store-verified fallback to upstream.
+        Returns the *staged* traffic — the caller decides which columns of
+        ``self.traffic`` it folds into (demand vs ``spec_*``)."""
+        staged = NodeTraffic(self.node_id)
+        for src, group in self.select(chunks):
+            if src is None:
+                self._upstream_pull(component, group, staged)
+                continue
+            nbytes = sum(ch.size for ch in group)
+            try:
+                self._peer_pull(src, component, group)
+            except PeerTransferError:
+                # a dead peer must not poison later selections: retract its
+                # advertisement and pay the upstream price for these chunks
+                self.index.retract(src, [ch.id for ch in group])
+                staged.peer_fallbacks += 1
+                self._upstream_pull(component, group, staged)
+                continue
+            staged.bytes_from_peers += nbytes
+            staged.chunks_from_peers += len(group)
+            staged.peer_sources[src] = \
+                staged.peer_sources.get(src, 0) + nbytes
+        return staged
+
+    def fetch_spec_stripe(self, component: UniformComponent,
+                          stripe: Sequence[Tuple[Chunk, threading.Event]]
+                          ) -> None:
+        """Transfer a *speculative* stripe (placement pre-positioning or
+        migration prefetch, docs §11) over the same peer-first source
+        selection as ``fetch_stripe``, but folded into the ``spec_*``
+        traffic columns: no build demanded these bytes, so they must not
+        contaminate ``bytes_total`` — that identity is what lets the fleet
+        accounting stay byte-identical with the planner disabled.  Fallback
+        and retry behaviour (retraction, upstream re-route, virtual
+        backoff) are shared with the demand path."""
+        staged = self._pull_groups(component, [ch for ch, _ev in stripe])
+        with self._lock:
+            t = self.traffic
+            t.spec_bytes_from_upstream += staged.bytes_from_upstream
+            t.spec_bytes_from_peers += staged.bytes_from_peers
+            t.spec_chunks += staged.chunks_from_upstream \
+                + staged.chunks_from_peers
+            t.peer_fallbacks += staged.peer_fallbacks
+            t.link_retries += staged.link_retries
 
     def fetch_artifact_stripe(self, component: UniformComponent,
                               stripe: Sequence[Tuple[Chunk, threading.Event]]

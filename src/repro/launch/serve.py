@@ -20,7 +20,8 @@ import numpy as np
 
 from ..configs import ARCHS
 from ..core import (CompileCache, InstanceSnapshot, LazyBuilder, PreBuilder,
-                    probe_host, restore_instance, snapshot_instance)
+                    SPEC_LEASE_PREFIX, probe_host, restore_instance,
+                    snapshot_instance)
 from ..core import catalog
 from .mesh import make_smoke_mesh
 
@@ -41,7 +42,16 @@ def main(argv=None) -> int:
     ap.add_argument("--restore", metavar="PATH", default=None,
                     help="restore a scaled-to-zero instance from a snapshot "
                          "instead of a full cold build")
+    ap.add_argument("--retire-spec", action="store_true",
+                    help="after writing the snapshot, demote the instance's "
+                         "content to the speculative eviction tier (a spec: "
+                         "soft lease): it becomes the first thing capacity "
+                         "pressure reclaims, and a restore promotes whatever "
+                         "survived back to demand content")
     args = ap.parse_args(argv)
+    if args.retire_spec and not args.snapshot_out:
+        ap.error("--retire-spec requires --snapshot-out (retiring without "
+                 "a snapshot would strand the instance)")
 
     svc = catalog.default_service()
     builder = LazyBuilder(svc, compile_cache=CompileCache())
@@ -80,6 +90,15 @@ def main(argv=None) -> int:
         print(f"snapshot written to {args.snapshot_out} "
               f"(stage={inst.stage}, compile_key="
               f"{(inst.compile_key or '')[:16]})")
+        if args.retire_spec:
+            # scale-to-zero retirement: the content stays resident but
+            # drops to the speculative eviction tier — first victim under
+            # pressure, promoted back on the next demand (restore) hit
+            builder.store.acquire_build_lease(
+                f"{SPEC_LEASE_PREFIX}retired:{cir.digest()[:16]}",
+                list(inst.bundle.components()))
+            print("instance content demoted to the speculative eviction "
+                  "tier (evictable first; restore promotes it back)")
 
     params = inst.model.init(jax.random.PRNGKey(0))
     engine = inst.entry["make_engine"](

@@ -1,8 +1,8 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
 from benchmarks.check_regression import (CHURN, COLDSTART, DISTRIBUTION,
-                                         FETCH, PIPELINE, SCALE, Check,
-                                         build_checks)
+                                         FETCH, PIPELINE, PLACEMENT, SCALE,
+                                         Check, build_checks)
 
 
 def test_higher_is_better_band():
@@ -36,7 +36,8 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
           churn_reduction=27.0, churn_hit=0.34, scale_wall=8.0,
           scale_offload=0.99, identity_ok=1.0, loss_converged=1.0,
           loss_extra=4.0, cold_reduction=76.0, cold_identical=1.0,
-          restore_reduction=100.0, p99_ready=20.0, compile_hit=0.95):
+          restore_reduction=100.0, p99_ready=20.0, compile_hit=0.95,
+          p95_reduction=70.0, wire_overhead=0.0, downtime_ratio=0.01):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -64,15 +65,20 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
         "autoscale": {"p99_ready_s": p99_ready,
                       "compile_hit_rate": compile_hit},
     }
+    place = {
+        "trace": {"p95_ready_reduction_pct": p95_reduction,
+                  "speculation_wire_overhead_pct": wire_overhead},
+        "migration": {"migration_downtime_ratio": downtime_ratio},
+    }
     return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn,
-            SCALE: scale, COLDSTART: cold}
+            SCALE: scale, COLDSTART: cold, PLACEMENT: place}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 18
+    assert len(checks) == 21
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -143,6 +149,25 @@ def test_coldstart_gate_binds_on_regressions():
     failed = {c.metric for c in build_checks(base, slow) if not c.ok}
     assert f"{COLDSTART}:snapshot.restore_reduction_pct" in failed
     assert f"{COLDSTART}:autoscale.p99_ready_s" in failed
+
+
+def test_placement_gate_binds_on_regressions():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # speculation losing its edge over reactive fetch fails the gate
+    # (the 40% abs floor binds even within the relative band)
+    collapsed = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, p95_reduction=35.0)
+    failed = {c.metric for c in build_checks(base, collapsed) if not c.ok}
+    assert f"{PLACEMENT}:trace.p95_ready_reduction_pct" in failed
+    # a planner that starts flooding the WAN registry link fails outright
+    # (the committed baseline is 0% overhead: any upstream leak binds)
+    flooded = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, wire_overhead=5.0)
+    failed = {c.metric for c in build_checks(base, flooded) if not c.ok}
+    assert f"{PLACEMENT}:trace.speculation_wire_overhead_pct" in failed
+    # the migration serve gap growing toward a cold re-deploy fails the
+    # hard 0.20 ceiling regardless of the baseline band
+    gapped = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, downtime_ratio=0.25)
+    failed = {c.metric for c in build_checks(base, gapped) if not c.ok}
+    assert f"{PLACEMENT}:migration.migration_downtime_ratio" in failed
 
 
 def test_new_baseline_file_missing_on_old_branch_skips_cleanly():

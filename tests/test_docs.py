@@ -253,3 +253,73 @@ def test_compilecache_section_names_real_api():
     assert "compile_cache" in \
         inspect.signature(FleetDeployer.__init__).parameters
     assert "precompile" in inspect.signature(FleetDeployer.warm).parameters
+
+
+def test_placement_section_names_real_api():
+    """§11 documents demand-driven placement + live migration — the names
+    and semantics it promises must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (ChunkedComponentStore, LifecycleStats,
+                            SPEC_LEASE_PREFIX)
+    from repro.deploy import (DemandModel, FleetDeployer, MigrationReport,
+                              NodePeering, NodeTraffic, PlacementPlanner,
+                              speculative_replicate)
+    from repro.deploy.fleet import FleetResult
+    from repro.deploy.placement import (DEFAULT_WIRE_BUDGET_BYTES,
+                                        MIN_DEMAND_SCORE, ReplicationOrder)
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 11. Demand-driven placement: speculative replication & " \
+        "live migration" in text
+    for name in ("SPEC_LEASE_PREFIX", "spec  <  warm  <  build-pin",
+                 "spec_hit_bytes", "spec_wasted_bytes", "DemandModel",
+                 "PlacementPlanner", "ReplicationOrder", "wire_budget_bytes",
+                 "speculative_replicate", "fetch_spec_stripe",
+                 "bytes_speculative", "migrate", "MigrationReport",
+                 "downtime_s", "spec:retired:", "--retire-spec",
+                 "BENCH_placement.json", "p95_ready_reduction_pct",
+                 "speculation_wire_overhead_pct", "migration_downtime_ratio"):
+        assert name in text, f"§11 lost its {name} reference"
+    # the documented surface
+    assert SPEC_LEASE_PREFIX == "spec:"
+    assert DEFAULT_WIRE_BUDGET_BYTES == 256 * 2**20
+    assert 0 < MIN_DEMAND_SCORE < 1
+    for field in ("spec_bytes", "spec_hit_bytes", "spec_wasted_bytes"):
+        assert field in LifecycleStats.__dataclass_fields__
+    for field in ("spec_bytes_from_upstream", "spec_bytes_from_peers",
+                  "spec_chunks"):
+        assert field in NodeTraffic.__dataclass_fields__
+    for field in ("bytes_speculative", "bytes_speculative_upstream",
+                  "bytes_speculative_peer", "speculation_hit_bytes",
+                  "speculation_wasted_bytes", "migrations_total",
+                  "migration_downtime_s"):
+        assert field in FleetResult.__dataclass_fields__
+    for field in ("node_id", "key", "priority", "est_bytes",
+                  "est_transfer_s", "components"):
+        assert field in ReplicationOrder.__dataclass_fields__
+    for field in ("platform_id", "source_node", "target_node", "downtime_s",
+                  "prefetch_s", "prefetch_bytes", "compile_cache_hit",
+                  "decommissioned"):
+        assert field in MigrationReport.__dataclass_fields__
+    for attr in ("observe", "predict"):
+        assert hasattr(DemandModel, attr)
+    for attr in ("plan", "execute", "run_round", "observe", "register",
+                 "release", "release_all"):
+        assert hasattr(PlacementPlanner, attr)
+    for attr in ("migrate", "attach_planner", "node_peering"):
+        assert hasattr(FleetDeployer, attr)
+    assert hasattr(NodePeering, "fetch_spec_stripe")
+    assert "speculative" in inspect.signature(
+        ChunkedComponentStore.plan_fetch).parameters
+    assert "speculative" in inspect.signature(
+        ChunkedComponentStore.commit_chunks).parameters
+    sig = inspect.signature(speculative_replicate)
+    for p in ("store", "comps", "lease_id", "peering", "budget_bytes"):
+        assert p in sig.parameters
+    assert "halflife_s" in inspect.signature(DemandModel.__init__).parameters
+    assert "oracle" in inspect.signature(DemandModel.__init__).parameters
+    # the serving launcher exposes spec-tier retirement
+    import repro.launch.serve as serve_mod
+    assert "--retire-spec" in inspect.getsource(serve_mod)

@@ -409,6 +409,67 @@ def test_warm_pins_seed_content_against_churn(service):
     assert fd.release_warm(common) is False
 
 
+def test_spec_release_mid_restore_never_drops_proven_chunks(service):
+    """Satellite: snapshot-restore racing a ``spec:`` lease release.  A
+    retired instance's content survives only under the spec soft lease;
+    a restore starts (its build lease pins what its plan proved present)
+    and the spec lease is released MID-restore under capacity pressure.
+    The release must not let the pass drop chunks the restore proved —
+    the control case (same release + pressure, no restore in flight)
+    shows the same content IS the first victim otherwise."""
+    from repro.core import (CompileCache, SPEC_LEASE_PREFIX,
+                            restore_instance, snapshot_instance)
+    pb = PreBuilder(service)
+    store = ChunkedComponentStore()
+    lb = LazyBuilder(service, store, compile_cache=CompileCache())
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    inst = lb.build(cir, cpu_smoke(), assemble=True, compile_steps=True)
+    snap = snapshot_instance(inst)
+    comps = list(inst.bundle.components())
+    proven = {ch.id for c in comps for ch in store.chunks_of(c)}
+    evicted = []
+    store.eviction_listeners.append(evicted.extend)
+
+    # -- control: retired content under pressure, NO restore in flight --
+    store.acquire_build_lease(f"{SPEC_LEASE_PREFIX}retired:ctl", comps)
+    store.capacity_bytes = store.chunk_stats.chunk_bytes_stored
+    store.put(_c("filler-1", size=64 * 1024))    # over budget: pass runs
+    assert proven & set(evicted)                 # spec tier went first
+    store.release_build(f"{SPEC_LEASE_PREFIX}retired:ctl")
+
+    # repair, then retire again for the raced restore
+    store.capacity_bytes = None
+    assert restore_instance(snap, lb).stage == "complete"
+    store.acquire_build_lease(f"{SPEC_LEASE_PREFIX}retired:raced", comps)
+    store.capacity_bytes = store.chunk_stats.chunk_bytes_stored
+    evicted.clear()
+    fired = []
+
+    def release_mid_restore(c):
+        if not fired:
+            fired.append(True)
+            # the race: the spec lease goes away while the restore is
+            # mid-flight, and a filler lands to force an eviction pass
+            store.release_build(f"{SPEC_LEASE_PREFIX}retired:raced")
+            store.put(_c("filler-2", size=64 * 1024))
+
+    lb.readiness_listeners.append(release_mid_restore)
+    try:
+        restored = restore_instance(snap, lb, block=False)
+        restored.wait("ready")
+        # the pass ran under pressure and evicted unpinned bytes (filler,
+        # artifact chunks) — but every chunk the restore proved present is
+        # pinned by its build lease, so none of THOSE dropped
+        assert fired
+        assert evicted
+        assert not (proven & set(evicted))
+        assert all(store.has_chunk(cid) for cid in proven)
+        restored.wait("complete")
+        assert restored.report.bytes_delta_fetched == 0
+    finally:
+        lb.readiness_listeners.remove(release_mid_restore)
+
+
 def test_concurrent_churn_never_evicts_pinned_or_inflight(service):
     """Eviction races under real concurrency: two edges churn CIRs while
     every eviction pass is checked against the pin/in-flight exemption."""

@@ -1,0 +1,313 @@
+"""Demand-driven chunk placement + live migration (docs/cir-format.md §11).
+
+Covers the subsystem's claims: a ``spec:`` soft lease marks content as the
+FIRST eviction tier without ever pinning it (priority order under pressure:
+spec < warm < build-pin), a real demand hit promotes speculated bytes into
+``spec_hit_bytes`` while eviction drains them into ``spec_wasted_bytes``
+(hit + wasted <= spec_bytes always), speculative wire lands in dedicated
+``NodeTraffic.spec_*`` columns so the ``bytes_total == bytes_delta_fetched``
+identity is byte-identical with the planner enabled or disabled, the
+``PlacementPlanner`` pre-positions predicted-hot content under per-node
+wire budgets, and ``FleetDeployer.migrate`` hands a running instance off
+with a serve gap far below a cold re-deploy.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (ChunkedComponentStore, PreBuilder, SimNetwork,
+                        SPEC_LEASE_PREFIX, cpu_smoke, tpu_single_pod)
+from repro.core.component import UniformComponent
+from repro.core.registry import (UniformComponentRegistry,
+                                 UniformComponentService)
+from repro.deploy import (DemandModel, FleetDeployer, FleetTopology,
+                          PlacementPlanner, speculative_replicate)
+
+
+def _c(name, version="1.0", env="e", size=8 * 1024, manager="m"):
+    return UniformComponent(manager=manager, name=name, version=version,
+                            env=env, payload="p", size_bytes=size)
+
+
+def _commit_speculative(store, comp, lease_id):
+    """Land ``comp``'s chunks under a spec lease the way the replication
+    executor does: speculative plan, charged fetch, speculative commit."""
+    if not store.lease_active(lease_id):
+        store.acquire_build_lease(lease_id, [comp])
+    plan = store.plan_fetch(comp, speculative=True)
+    store.commit_chunks(plan.claimed, component=comp, speculative=True)
+    return plan
+
+
+def _sim_fleet(service, n_edges, edge_capacity_bytes=None):
+    """Cloud seed + N edges on the virtual clock (sequential workers, no
+    overlap: virtual timings are exact replays)."""
+    topo = FleetTopology.edge_fanout(n_edges, cloud_edge_bps=5e8,
+                                     edge_edge_bps=1e9,
+                                     edge_capacity_bytes=edge_capacity_bytes)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1, overlap=False)
+    return net, fd, cloud, edges
+
+
+# ---------------------------------------------------------------------------
+# Spec soft-lease tier (store level)
+# ---------------------------------------------------------------------------
+
+def test_spec_lease_is_first_eviction_tier_and_never_pins():
+    """Speculated content is evicted before OLDER ordinary content (the
+    tier beats LRU age) and an active spec lease never blocks the pass."""
+    s = ChunkedComponentStore(chunk_size=1024, capacity_bytes=16 * 1024)
+    ordinary = _c("ordinary")
+    s.put(ordinary)                              # oldest — LRU would take it
+    spec = _c("spec")
+    _commit_speculative(s, spec, f"{SPEC_LEASE_PREFIX}t1")
+    assert s.lifecycle_stats.spec_bytes == spec.size_bytes
+    assert all(s.chunk_speculative(ch.id) for ch in s.chunks_of(spec))
+    s.put(_c("new"))                             # 24 KiB > 16 KiB: evict 8
+    assert all(s.has_chunk(ch.id) for ch in s.chunks_of(ordinary))
+    assert not any(s.has_chunk(ch.id) for ch in s.chunks_of(spec))
+    # the wager lost: every speculated byte drained into spec_wasted
+    ls = s.lifecycle_stats
+    assert ls.spec_wasted_bytes == spec.size_bytes
+    assert ls.spec_hit_bytes == 0
+    assert ls.spec_hit_bytes + ls.spec_wasted_bytes <= ls.spec_bytes
+    assert ls.pin_denied_evictions == 0          # the lease never pinned
+    s.release_build(f"{SPEC_LEASE_PREFIX}t1")    # tolerant after eviction
+
+
+def test_demand_hit_promotes_spec_bytes_out_of_the_tier():
+    s = ChunkedComponentStore(chunk_size=1024, capacity_bytes=1 << 30)
+    spec = _c("spec")
+    _commit_speculative(s, spec, f"{SPEC_LEASE_PREFIX}t2")
+    plan = s.plan_fetch(spec)                    # a REAL build demands it
+    assert not plan.claimed                      # all hits — nothing moves
+    ls = s.lifecycle_stats
+    assert ls.spec_hit_bytes == spec.size_bytes
+    assert ls.spec_wasted_bytes == 0
+    # promoted: the chunks left the tier (demand overrides the lease) and
+    # a later pressure pass treats them as ordinary demand content
+    assert not any(s.chunk_speculative(ch.id) for ch in s.chunks_of(spec))
+
+
+def test_speculative_plan_does_not_promote_or_refresh():
+    """A speculative re-plan of already-speculated content must not count
+    hits or pull the chunks out of the tier — only real demand does."""
+    s = ChunkedComponentStore(chunk_size=1024, capacity_bytes=1 << 30)
+    spec = _c("spec")
+    _commit_speculative(s, spec, f"{SPEC_LEASE_PREFIX}t3")
+    plan = s.plan_fetch(spec, speculative=True)
+    assert not plan.claimed and not plan.component_new
+    assert s.lifecycle_stats.spec_hit_bytes == 0
+    assert all(s.chunk_speculative(ch.id) for ch in s.chunks_of(spec))
+
+
+def test_speculative_replicate_validates_lease_and_budget():
+    svc = UniformComponentService(UniformComponentRegistry())
+    s = ChunkedComponentStore(chunk_size=1024)
+    a, b = _c("a"), _c("b")
+    with pytest.raises(ValueError, match="spec"):
+        speculative_replicate(s, [a], "warm:not-a-spec-lease", service=svc)
+    # the budget cuts mid-component (digest order decides which one): the
+    # over-budget claims are released, not queued
+    budget = a.size_bytes + b.size_bytes // 2
+    st = speculative_replicate(s, [a, b], f"{SPEC_LEASE_PREFIX}budget",
+                               service=svc, budget_bytes=budget)
+    assert st.bytes_fetched == budget
+    assert st.budget_denied_bytes == budget - a.size_bytes
+    assert s.lifecycle_stats.spec_bytes == budget
+    # nothing claimed was leaked: a re-plan can claim exactly the remainder
+    assert sum(len(s.plan_fetch(c, speculative=True).claimed)
+               for c in (a, b)) == 4
+
+
+def test_demand_model_ewma_decay_and_oracle_window():
+    dm = DemandModel(halflife_s=100.0, horizon_s=50.0,
+                     oracle=[(200.0, "n1", "k"), (999.0, "n1", "k")])
+    dm.observe("n0", "k", now=0.0)
+    assert dm.predict(0.0)[("n0", "k")] == pytest.approx(1.0)
+    assert dm.predict(100.0)[("n0", "k")] == pytest.approx(0.5)
+    # the oracle event at t=200 scores only within [150, 200) + EWMA decay
+    assert ("n1", "k") not in dm.predict(100.0)
+    assert dm.predict(160.0)[("n1", "k")] == pytest.approx(1.0)
+    assert ("n1", "k") not in dm.predict(201.0)
+
+
+# ---------------------------------------------------------------------------
+# Planner over a simulated fleet
+# ---------------------------------------------------------------------------
+
+def test_planner_prepositions_predicted_hot_edge(service):
+    """An oracle-predicted edge gets the content ahead of demand: its
+    deploy is near-free vs the reactive edge, all speculative wire lands
+    in the spec columns, and the demand identity is untouched."""
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    net, fd, cloud, edges = _sim_fleet(service, 2)
+    assert fd.deploy(cir, [cloud]).ok
+    r0 = fd.deploy(cir, [edges[0]])              # reactive cold edge
+    assert r0.ok
+    assert r0.bytes_speculative == 0             # no planner attached yet
+
+    oracle = [(net.now + 1.0, "edge-1", cir.digest())]
+    planner = PlacementPlanner(
+        fd, demand=DemandModel(horizon_s=600.0, oracle=oracle),
+        wire_budget_bytes=1 << 40)
+    planner.register(cir.digest(),
+                     list(r0.deployments[0].instance.bundle.components()))
+    orders = planner.plan()
+    assert [o.node_id for o in orders] == ["edge-1"]
+    assert orders[0].est_bytes > 0 and orders[0].est_transfer_s > 0
+    st = planner.run_round()
+    assert st.orders_executed == 1 and st.bytes_fetched > 0
+    assert planner.plan() == []                  # now fully resident
+
+    r1 = fd.deploy(cir, [edges[1]])
+    assert r1.ok
+    assert r1.sim_elapsed_s < 0.5 * r0.sim_elapsed_s
+    # every speculated byte was demanded: hit == speculated, wasted == 0
+    assert r1.bytes_speculative == st.bytes_fetched
+    assert r1.speculation_hit_bytes == st.bytes_fetched
+    assert r1.speculation_wasted_bytes == 0
+    assert r1.bytes_speculative == \
+        r1.bytes_speculative_peer + r1.bytes_speculative_upstream
+    assert "speculation:" in r1.summary()
+    # identity: speculative wire never leaks into the demand columns
+    for d in r1.deployments:
+        t = r1.node_traffic[d.node_id]
+        assert t.bytes_total == d.report.bytes_delta_fetched
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+    # the planner's lease releases cleanly once the content went demand
+    assert planner.release_all() >= 1
+
+
+def test_planner_wire_budget_bounds_each_round(service):
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    net, fd, cloud, edges = _sim_fleet(service, 2)
+    assert fd.deploy(cir, [cloud]).ok
+    r0 = fd.deploy(cir, [edges[0]])
+    budget = 32 * 2**20
+    planner = PlacementPlanner(
+        fd, demand=DemandModel(horizon_s=600.0,
+                               oracle=[(net.now + 1.0, "edge-1",
+                                        cir.digest())]),
+        wire_budget_bytes=budget)
+    planner.register(cir.digest(),
+                     list(r0.deployments[0].instance.bundle.components()))
+    st = planner.run_round()
+    assert 0 < st.bytes_fetched <= budget
+    assert st.budget_denied_bytes > 0
+    # successive rounds make progress under the same cap until resident
+    st2 = planner.run_round()
+    assert 0 < st2.bytes_fetched <= budget
+
+
+def test_deploys_feed_the_planner_demand_model(service):
+    """Every successful topology deploy is an EWMA observation — after a
+    capacity eviction the planner re-positions the node it saw deploy."""
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    net, fd, cloud, edges = _sim_fleet(service, 1)
+    planner = PlacementPlanner(fd)
+    assert fd.deploy(cir, [cloud]).ok
+    assert fd.deploy(cir, [edges[0]]).ok
+    assert (("edge-0", cir.digest())
+            in planner.demand.predict(planner.now()))
+    assert planner.plan() == []                  # resident: nothing to do
+    # drop some of edge-0's content; the planner now has work there
+    store = fd.node_store("edge-0")
+    victim = next(iter(store._chunk_present))
+    with store._lock:
+        store._drop_chunks_locked([victim])
+    orders = planner.plan()
+    assert [o.node_id for o in orders] == ["edge-0"]
+
+
+def test_existing_columns_byte_identical_with_planner_disabled(service):
+    """Satellite: attaching an idle planner must not move a single byte of
+    the existing FleetResult columns, and the no-planner summary carries
+    no speculation/migration lines."""
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    cols = ("bytes_fetched_total", "bytes_delta_total", "bytes_upstream_total",
+            "bytes_peer_total", "chunks_hit_total", "chunks_missed_total",
+            "evicted_bytes_total", "refetch_bytes_total", "sharing_rate",
+            "plan_cache_hits")
+    seen = {}
+    for attach in (False, True):
+        net, fd, cloud, edges = _sim_fleet(service, 2)
+        if attach:
+            PlacementPlanner(fd)                 # attached, never run
+        rs = [fd.deploy(cir, [cloud]), fd.deploy(cir, edges)]
+        assert all(r.ok for r in rs)
+        seen[attach] = [tuple(getattr(r, c) for c in cols) for r in rs]
+        for r in rs:
+            assert r.bytes_speculative == 0
+            assert r.migrations_total == 0
+            assert "speculation:" not in r.summary()
+            assert "migrations:" not in r.summary()
+            for t in r.node_traffic.values():
+                assert t.spec_bytes_total == 0
+    assert seen[True] == seen[False]
+
+
+# ---------------------------------------------------------------------------
+# Live migration
+# ---------------------------------------------------------------------------
+
+def test_migrate_hands_off_with_prefetch_outside_the_gap(service):
+    pb = PreBuilder(service)
+    cir = pb.prebuild(ARCHS["starcoder2-3b"], entrypoint="serve")
+    net, fd, cloud, edges = _sim_fleet(service, 2)
+    assert fd.deploy(cir, [cloud]).ok
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    assert r0.ok, r0.summary()
+    inst = r0.deployments[0].instance
+    with pytest.raises(ValueError, match="already runs"):
+        fd.migrate(inst, "edge-0")
+    with pytest.raises(ValueError, match="unknown target"):
+        fd.migrate(inst, "edge-99")
+
+    rep = fd.migrate(inst, "edge-1")             # edge-1 is cold
+    assert rep.source_node == "edge-0" and rep.target_node == "edge-1"
+    assert rep.prefetch_bytes > 0                # bytes moved BEFORE the gap
+    assert rep.downtime_s < rep.prefetch_s       # the gap is the cheap part
+    assert rep.compile_cache_hit                 # no re-compile in the gap
+    assert rep.instance.stage == "complete"
+    # placement flipped: the platform now routes to the target node
+    assert fd.topology.node_for(inst.spec.platform_id) == "edge-1"
+    # decommission: the source's ads are gone, the target's survive, and
+    # the source's idle copy sits in the spec tier (first-evictable)
+    src_store, tgt_store = fd.node_store("edge-0"), fd.node_store("edge-1")
+    comps = list(inst.bundle.components())
+    for c in comps:
+        for ch in src_store.chunks_of(c):
+            holders = fd.peer_index.holders(ch.id)
+            assert "edge-0" not in holders
+            if tgt_store.has_chunk(ch.id):
+                assert "edge-1" in holders
+    assert any(src_store.chunk_speculative(ch.id)
+               for c in comps for ch in src_store.chunks_of(c))
+    # no lease leaked on either side beyond the retirement spec lease
+    assert src_store.pinned_digests() == set()
+    assert tgt_store.pinned_digests() == set()
+    # the next deploy reports the hand-off in the migration columns
+    r2 = fd.deploy(cir, [cloud])
+    assert r2.migrations_total == 1
+    assert r2.migration_downtime_s == pytest.approx(rep.downtime_s)
+    assert "migrations: 1 hand-off(s)" in r2.summary()
+
+
+def test_migrate_requires_topology_mode(service):
+    fd = FleetDeployer(service)
+    with pytest.raises(ValueError, match="topology"):
+        fd.migrate(object(), "edge-0")

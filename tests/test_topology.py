@@ -286,6 +286,68 @@ def test_warm_targets_seed_node_only(service, pb):
         assert t.bytes_from_peers > t.bytes_from_upstream
 
 
+def test_source_retraction_mid_migration_keeps_target_announcements(
+        service, pb):
+    """Satellite regression: retracting the migration SOURCE while the
+    target's prefetch announcements are still landing — an eviction
+    retraction plus a full ``drop_node`` — must not orphan the target's
+    entries.  Retraction is strictly node-scoped: a chunk's index entry
+    only dies when its holder set empties."""
+    import dataclasses as dc
+    from repro.core import SimNetwork
+    topo = FleetTopology.edge_fanout(2, cloud_edge_bps=5e8,
+                                     edge_edge_bps=1e9)
+    cloud = tpu_single_pod()
+    edges = [dc.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(2)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    fd = FleetDeployer(service, topology=topo, simnet=SimNetwork(topo),
+                       max_workers=1, fetch_workers=1, overlap=False)
+    assert fd.deploy(cir := PreBuilder(service).prebuild(
+        ARCHS["starcoder2-3b"], entrypoint="serve"), [cloud]).ok
+    r0 = fd.deploy(cir, [edges[0]], assemble=True, compile_steps=True)
+    assert r0.ok, r0.summary()
+    inst = r0.deployments[0].instance
+
+    # interleave: after the target's FIRST speculative stripe lands, the
+    # source "dies" mid-hand-off — its ads are retracted as an eviction
+    # would, then the whole node is dropped from the index
+    tgt = fd._node_peerings["edge-1"]
+    src = fd._node_peerings["edge-0"]
+    real = tgt.fetch_spec_stripe
+    fired = []
+
+    def dying_source(component, stripe):
+        out = real(component, stripe)
+        if not fired:
+            fired.append(True)
+            src_ids = [ch.id for c in inst.bundle.components()
+                       for ch in src.store.chunks_of(c)]
+            src.on_chunks_evicted(src_ids)
+            fd.peer_index.drop_node("edge-0")
+        return out
+
+    tgt.fetch_spec_stripe = dying_source
+    rep = fd.migrate(inst, "edge-1")
+    assert fired                                     # interleave happened
+    assert rep.instance.stage == "complete"
+    assert topo.node_for(edges[0].platform_id) == "edge-1"
+    # the source is fully forgotten ...
+    assert fd.peer_index.chunks_held("edge-0") == 0
+    # ... but every chunk the target landed kept its announcement: the
+    # node-scoped retraction never emptied a holder set the target joined
+    tgt_store = fd.node_store("edge-1")
+    announced = 0
+    for c in inst.bundle.components():
+        for ch in tgt_store.chunks_of(c):
+            if tgt_store.has_chunk(ch.id):
+                assert "edge-1" in fd.peer_index.holders(ch.id), ch.id
+                announced += 1
+    assert announced > 0
+
+
 def test_shared_store_path_reports_no_peer_columns(service, pb):
     """The default (no-topology) deployer is untouched by the subsystem:
     no node traffic, zero peer columns."""
