@@ -33,8 +33,9 @@ CHURN = "BENCH_churn.json"
 SCALE = "BENCH_scale.json"
 COLDSTART = "BENCH_coldstart.json"
 PLACEMENT = "BENCH_placement.json"
+INTEGRITY = "BENCH_integrity.json"
 BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE, COLDSTART,
-             PLACEMENT)
+             PLACEMENT, INTEGRITY)
 
 
 @dataclasses.dataclass
@@ -104,8 +105,8 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, churn, coldstart, distribution, placement, \
-        scale
+    from . import build_time, churn, coldstart, distribution, integrity, \
+        placement, scale
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -133,10 +134,16 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
     place_rows = placement.collect(smoke=True, quiet=True)
     place_path = placement.write_bench_placement(
         path=os.path.join(out_dir, PLACEMENT), smoke=True, rows=place_rows)
+    # SBOM rides along with the bench artifacts (R-096 provenance)
+    integ_rows = integrity.collect(
+        smoke=True, quiet=True,
+        sbom_path=os.path.join(out_dir, "SBOM_smoke.json"))
+    integ_path = integrity.write_bench_integrity(
+        path=os.path.join(out_dir, INTEGRITY), smoke=True, rows=integ_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
             DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path),
             SCALE: _load(scale_path), COLDSTART: _load(cold_path),
-            PLACEMENT: _load(place_path)}
+            PLACEMENT: _load(place_path), INTEGRITY: _load(integ_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -231,6 +238,23 @@ def build_checks(base: Dict[str, Optional[Dict]],
     # the migration serve gap must stay a fraction of a cold re-deploy
     add(PLACEMENT, ["migration", "migration_downtime_ratio"], False, 0.25,
         abs_limit=0.20)
+
+    # -- trust & integrity: byzantine peering + attestation --------------
+    # verify-on-receipt must stay noise on the fetch path: the metric is
+    # floored at 0.1 in the benchmark, so with the wide rel_tol the
+    # effective bound is the hard 3% ceiling, never a noise-scaled one
+    add(INTEGRITY, ["overhead", "verify_overhead_pct"], False, 50.0,
+        abs_limit=3.0)
+    # the invariants: nothing corrupt ever commits, accounting identities
+    # survive byzantine peers, the liar gets quarantined, forged
+    # attestations die at plan time — all hard, tolerance-free gates
+    add(INTEGRITY, ["chaos", "corrupt_chunks_committed"], False, 0.0,
+        abs_limit=0.0)
+    add(INTEGRITY, ["chaos", "corrupt_chunks_rejected"], True, 0.90)
+    add(INTEGRITY, ["chaos", "identity_ok"], True, 0.0, abs_limit=1.0)
+    add(INTEGRITY, ["chaos", "quarantined"], True, 0.0, abs_limit=1.0)
+    add(INTEGRITY, ["attestation", "tamper_rejected"], True, 0.0,
+        abs_limit=1.0)
     return checks
 
 

@@ -16,6 +16,11 @@ from .store import (Chunk, EVICTION_POLICIES,  # noqa: F401
 from .chunkstore import (ChunkStats, ChunkedComponentStore,  # noqa: F401
                          FetchPlan)
 from .cir import CIR, PreBuilder  # noqa: F401
+from .integrity import (ATTESTATION_VERSION, Attestation,  # noqa: F401
+                        AttestationError, ED25519_AVAILABLE, Ed25519Signer,
+                        HMACSigner, Signer, attest, canonical_manifest,
+                        make_sbom, manifest_digest, verify_attestation,
+                        write_sbom)
 from .simnet import (FAULT_KINDS, UPSTREAM, Fault,  # noqa: F401
                      FaultError, FaultPlan, LinkDownError, NodeDownError,
                      SimClock, SimNetwork, SimTransport, WallClockTransport)

@@ -56,6 +56,9 @@ class ChunkStats:
     chunk_bytes_requested: int = 0  # new-component bytes before chunk dedup
     chunk_bytes_evicted: int = 0    # bytes dropped by capacity eviction —
     #                                 they DID cross the wire when committed
+    corrupt_rejected: int = 0       # peer-received chunks failing the
+    #                                 verify-on-receipt digest check (§12) —
+    #                                 discarded before commit, never resident
 
     @property
     def delta_sharing_rate(self) -> float:

@@ -67,19 +67,23 @@ class CIR:
     def size_bytes(self) -> int:
         return len(self.to_bytes())
 
+    def signing_payload(self) -> bytes:
+        """Canonical identity bytes: manifest text + app payload, sorted
+        keys, ``created`` deliberately excluded so two pre-builds of the
+        same application produce the same bytes (digest stability rule,
+        see docs/cir-format.md §12).  This is both what ``digest()``
+        hashes and what manifest attestation ultimately covers."""
+        return json.dumps({"manifest": self.to_text(), "app": self.app},
+                          sort_keys=True).encode()
+
     def digest(self) -> str:
         """Content digest — the identity cache keys are built from.
 
-        Hashes the manifest text + app payload only; the ``created``
-        timestamp is deliberately excluded so two pre-builds of the same
-        application produce the same digest (digest stability rule, see
-        docs/cir-format.md).  The on-wire bytes remain deterministic too
-        (mtime=0 gzip), but they carry ``created`` and so are not the
-        identity.
+        Hashes ``signing_payload()`` only; the on-wire bytes remain
+        deterministic too (mtime=0 gzip), but they carry ``created`` and
+        so are not the identity.
         """
-        blob = json.dumps({"manifest": self.to_text(), "app": self.app},
-                          sort_keys=True).encode()
-        return hashlib.sha256(blob).hexdigest()
+        return hashlib.sha256(self.signing_payload()).hexdigest()
 
     def arch_config(self) -> ArchConfig:
         return ArchConfig.from_json(self.app["config"])

@@ -1,0 +1,309 @@
+"""Trust & integrity: signed manifest attestation + SBOM emission (§12).
+
+Chunks are already content-addressed (their ids are length-prefixed sha256
+piece digests, docs §5), but nothing attested the *manifest* that names
+them: a tampered lockfile would happily drive a build of the wrong
+content.  This module closes that gap:
+
+  * **Canonical serialization** — ``canonical_manifest`` renders the
+    ``(Lockfile, CIR digest)`` pair as deterministic bytes (sorted keys,
+    no whitespace), so the same lock always signs to the same payload on
+    every platform and Python version.
+  * **Attestation envelope** — ``Attestation`` carries the payload digest,
+    the signing algorithm + key id, and the signature.  ``attest`` signs
+    at pre-build time (the control plane that resolved and locked the
+    CIR); ``verify_attestation`` re-derives the canonical payload from the
+    *local* lock and CIR and checks both digest and signature, so any
+    tampering — pins, digests, seed, platform, CIR app — fails closed with
+    ``AttestationError`` before a single fetch is scheduled
+    (``LazyBuilder`` wires the check ahead of the orchestrator).
+  * **Pluggable signers** — ``HMACSigner`` is the stdlib reference
+    implementation (shared-secret fleets); ``Ed25519Signer`` provides
+    asymmetric signatures when the optional ``cryptography`` package is
+    present (``ED25519_AVAILABLE`` gates it — never a hard dependency).
+  * **SBOM emission** — ``make_sbom`` renders the resolved dependency
+    closure as CycloneDX-shaped JSON (one component record per resolved
+    uniform component: manager/name/version/digest/chunk count), the
+    R-096 acceptance bar for production container distribution.
+
+Verify-on-receipt for peer transfers — the *transport* half of the trust
+story — lives with the peering layer (``repro.deploy.topology``); this
+module is pure control-plane: no store, no network, no threads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import hmac
+import json
+from typing import Any, Dict, List, Optional, Protocol, TYPE_CHECKING
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from .cir import CIR
+    from .lazybuild import Lockfile
+    from .resolution import Resolution
+
+# Envelope format version: bumped if the canonical payload layout changes
+# (a verifier must never accept a payload it would canonicalize differently
+# than the signer did).
+ATTESTATION_VERSION = 1
+
+# Optional asymmetric backend.  The container does not bake `cryptography`
+# in, so ed25519 is strictly additive: available where the host provides
+# it, cleanly reported absent everywhere else.
+try:                                                  # pragma: no cover
+    from cryptography.hazmat.primitives.asymmetric.ed25519 import (
+        Ed25519PrivateKey)
+    ED25519_AVAILABLE = True
+except Exception:                                     # pragma: no cover
+    Ed25519PrivateKey = None
+    ED25519_AVAILABLE = False
+
+
+class AttestationError(RuntimeError):
+    """Attestation missing, malformed, or failing verification — the hard
+    failure of the plan-time gate: the build must not schedule a fetch."""
+
+
+# ---------------------------------------------------------------------------
+# Canonical serialization
+# ---------------------------------------------------------------------------
+
+def canonical_manifest(cir: "CIR", lock: "Lockfile") -> bytes:
+    """Deterministic signing payload for ``(lock, CIR digest)``.
+
+    Sorted keys, compact separators, explicit version tag: byte-identical
+    across processes and platforms for the same logical content.  The CIR
+    digest is carried twice on purpose — inside the lock (as recorded at
+    resolution time) and alongside it (re-derived here from the actual CIR
+    object) — so a lock grafted onto a different CIR canonicalizes
+    differently and fails the digest check.
+    """
+    return json.dumps({
+        "version": ATTESTATION_VERSION,
+        "cir_digest": cir.digest(),
+        "lockfile": json.loads(lock.to_json()),
+    }, sort_keys=True, separators=(",", ":")).encode()
+
+
+def manifest_digest(cir: "CIR", lock: "Lockfile") -> str:
+    """sha256 of the canonical manifest payload (hex)."""
+    return hashlib.sha256(canonical_manifest(cir, lock)).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Signers
+# ---------------------------------------------------------------------------
+
+class Signer(Protocol):
+    """Pluggable signature backend: anything with an algorithm name, a key
+    id, ``sign(payload) -> hex`` and ``verify(payload, hex) -> bool``."""
+    algorithm: str
+    key_id: str
+
+    def sign(self, payload: bytes) -> str: ...      # pragma: no cover
+
+    def verify(self, payload: bytes, signature: str
+               ) -> bool: ...                        # pragma: no cover
+
+
+class HMACSigner:
+    """Reference signer: HMAC-SHA256 over a fleet shared secret (stdlib
+    only).  Symmetric — every verifier can also sign — which is the right
+    trust model for a single-operator fleet; use ``Ed25519Signer`` when
+    verifiers must not be able to mint attestations."""
+
+    algorithm = "hmac-sha256"
+
+    def __init__(self, secret: bytes, key_id: str = "fleet-hmac"):
+        if not secret:
+            raise ValueError("HMACSigner needs a non-empty secret")
+        self._secret = bytes(secret)
+        self.key_id = key_id
+
+    def sign(self, payload: bytes) -> str:
+        return hmac.new(self._secret, payload, hashlib.sha256).hexdigest()
+
+    def verify(self, payload: bytes, signature: str) -> bool:
+        try:
+            return hmac.compare_digest(self.sign(payload), signature)
+        except (TypeError, ValueError):
+            return False
+
+
+class Ed25519Signer:
+    """Asymmetric signer over the optional ``cryptography`` backend.
+
+    Constructing one when the backend is absent raises ``RuntimeError`` —
+    callers gate on ``ED25519_AVAILABLE`` (the repo never hard-depends on
+    the package; ``HMACSigner`` is always available).
+    """
+
+    algorithm = "ed25519"
+
+    def __init__(self, private_key: Any = None, key_id: str = "fleet-ed25519"):
+        if not ED25519_AVAILABLE:
+            raise RuntimeError(
+                "ed25519 signing needs the optional 'cryptography' package "
+                "(not installed) — use HMACSigner, the stdlib reference "
+                "implementation")
+        self._key = private_key if private_key is not None \
+            else Ed25519PrivateKey.generate()
+        self._pub = self._key.public_key()
+        self.key_id = key_id
+
+    def sign(self, payload: bytes) -> str:
+        return self._key.sign(payload).hex()
+
+    def verify(self, payload: bytes, signature: str) -> bool:
+        try:
+            self._pub.verify(bytes.fromhex(signature), payload)
+            return True
+        except Exception:  # noqa: BLE001 — any backend error == invalid
+            return False
+
+
+# ---------------------------------------------------------------------------
+# Attestation envelope
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Attestation:
+    """The signature envelope shipped alongside a lockfile (docs §12).
+
+    ``payload_digest`` is the sha256 of the canonical manifest bytes —
+    recorded so a verifier can tell *tampered content* (digest mismatch)
+    apart from *forged signature* (digest ok, signature bad) in its error.
+    """
+    payload_digest: str
+    algorithm: str
+    key_id: str
+    signature: str
+    version: int = ATTESTATION_VERSION
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "Attestation":
+        try:
+            return Attestation(**json.loads(s))
+        except (ValueError, TypeError, KeyError) as e:
+            raise AttestationError(f"malformed attestation envelope: {e}") \
+                from e
+
+
+def attest(cir: "CIR", lock: "Lockfile", signer: Signer) -> Attestation:
+    """Sign the canonical ``(lock, CIR digest)`` payload — the pre-build
+    side: whoever resolved and locked the CIR mints the envelope."""
+    payload = canonical_manifest(cir, lock)
+    return Attestation(
+        payload_digest=hashlib.sha256(payload).hexdigest(),
+        algorithm=signer.algorithm,
+        key_id=signer.key_id,
+        signature=signer.sign(payload),
+    )
+
+
+def verify_attestation(cir: "CIR", lock: "Lockfile",
+                       attestation: Attestation, signer: Signer) -> None:
+    """Plan-time verification: re-derive the canonical payload from the
+    *local* CIR + lock and check it against the envelope.  Raises
+    ``AttestationError`` on any mismatch; returning means the lock the
+    build is about to fetch against is exactly the one that was signed."""
+    if attestation.version != ATTESTATION_VERSION:
+        raise AttestationError(
+            f"attestation version {attestation.version} != "
+            f"{ATTESTATION_VERSION} — refusing to canonicalize differently "
+            f"than the signer did")
+    if attestation.algorithm != signer.algorithm:
+        raise AttestationError(
+            f"attestation algorithm {attestation.algorithm!r} does not "
+            f"match the verifier's {signer.algorithm!r}")
+    payload = canonical_manifest(cir, lock)
+    digest = hashlib.sha256(payload).hexdigest()
+    if digest != attestation.payload_digest:
+        raise AttestationError(
+            f"manifest digest mismatch: the lockfile/CIR differ from what "
+            f"was signed (got {digest[:16]}…, attested "
+            f"{attestation.payload_digest[:16]}…)")
+    if not signer.verify(payload, attestation.signature):
+        raise AttestationError(
+            f"signature verification failed for key {attestation.key_id!r} "
+            f"({attestation.algorithm})")
+
+
+# ---------------------------------------------------------------------------
+# SBOM (CycloneDX-shaped, R-096)
+# ---------------------------------------------------------------------------
+
+SBOM_FORMAT = "CycloneDX"
+SBOM_SPEC_VERSION = "1.5"
+
+
+def make_sbom(cir: "CIR", lock: "Lockfile", resolution: "Resolution",
+              chunk_counts: Optional[Dict[str, int]] = None
+              ) -> Dict[str, Any]:
+    """Render the resolved dependency closure as a CycloneDX-shaped SBOM.
+
+    One component record per resolved uniform component — manager as the
+    group, content digest as both ``bom-ref`` and SHA-256 hash, chunk
+    count and wire size as ``cir:`` properties — plus the application
+    itself (the CIR) as the metadata component.  ``chunk_counts`` maps
+    component digest -> chunk count (the builder supplies it from its
+    chunk store); absent entries fall back to 0 chunks (component-
+    granularity stores have no chunk layer).
+
+    Deterministic: records are canonically sorted and carry no wall-clock
+    timestamp, so the same lock always emits byte-identical JSON — an SBOM
+    diff is a content diff.
+    """
+    counts = chunk_counts or {}
+    components: List[Dict[str, Any]] = []
+    for rec in resolution.component_records():
+        components.append({
+            "type": "library",
+            "group": rec["manager"],
+            "name": rec["name"],
+            "version": rec["version"],
+            "bom-ref": rec["digest"],
+            "purl": f"pkg:cir/{rec['manager']}/{rec['name']}"
+                    f"@{rec['version']}",
+            "hashes": [{"alg": "SHA-256", "content": rec["digest"]}],
+            "properties": [
+                {"name": "cir:env", "value": rec["env"]},
+                {"name": "cir:sizeBytes", "value": str(rec["size_bytes"])},
+                {"name": "cir:chunkCount",
+                 "value": str(counts.get(rec["digest"], 0))},
+            ],
+        })
+    return {
+        "bomFormat": SBOM_FORMAT,
+        "specVersion": SBOM_SPEC_VERSION,
+        "version": 1,
+        "serialNumber": f"urn:cir:lock:{lock.digest()}",
+        "metadata": {
+            "component": {
+                "type": "application",
+                "name": cir.name,
+                "version": cir.version,
+                "bom-ref": cir.digest(),
+                "purl": f"pkg:cir/{cir.name}@{cir.version}",
+                "hashes": [{"alg": "SHA-256", "content": cir.digest()}],
+            },
+            "properties": [
+                {"name": "cir:platform", "value": lock.platform_id},
+                {"name": "cir:lockDigest", "value": lock.digest()},
+                {"name": "cir:seed", "value": str(lock.seed)},
+            ],
+        },
+        "components": components,
+    }
+
+
+def write_sbom(path: str, sbom: Dict[str, Any]) -> str:
+    """Write an SBOM document as indented JSON; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(sbom, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

@@ -39,6 +39,8 @@ from .compilecache import (COMPILE_VIRTUAL_S_PER_ENTRY, CompileCache,
                            CompiledArtifact, artifact_component,
                            compile_cache_key)
 from .component import UniformComponent
+from .integrity import (Attestation, AttestationError, Signer, make_sbom,
+                        attest as _sign_manifest, verify_attestation)
 from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
                            Lifecycle)
 from .registry import RegistryError, UniformComponentService
@@ -330,6 +332,8 @@ class BuildReport:
     artifact_bytes_fetched: int = 0  # compiled-artifact wire bytes (peers)
     artifact_chunks_fetched: int = 0
     artifact_bytes_published: int = 0  # locally-compiled bytes stored
+    # -- trust & integrity columns (core/integrity.py, docs §12) -------------
+    attestation_verified: bool = False  # signed manifest checked at plan time
 
     @property
     def bytes_wire_fetched(self) -> int:
@@ -740,8 +744,18 @@ class LazyBuilder:
                  build_graph: Optional[BuildGraph] = None,
                  peering: Optional[Any] = None,
                  fetch_transport: Optional[Any] = None,
-                 compile_cache: Optional[CompileCache] = None):
+                 compile_cache: Optional[CompileCache] = None,
+                 signer: Optional[Signer] = None,
+                 require_attestation: bool = False):
         self.service = service
+        # manifest-attestation policy (docs §12): a signer makes this
+        # builder able to verify (and mint) attestations; require_attestation
+        # hard-fails any build that arrives without one — verified at plan
+        # time, before a single fetch is scheduled.
+        self.signer = signer
+        self.require_attestation = require_attestation
+        if require_attestation and signer is None:
+            raise ValueError("require_attestation=True needs a signer")
         self.store = store if store is not None else ChunkedComponentStore()
         self.link_bandwidth_bps = link_bandwidth_bps
         self.plan_cache = BuildPlanCache() if plan_cache is None else plan_cache
@@ -948,6 +962,46 @@ class LazyBuilder:
         if peering is not None:
             peering.announce_chunks(store.chunks_of(comp))
 
+    # -- trust & integrity (core/integrity.py, docs §12) ----------------
+    def _check_attestation(self, cir: CIR, lock: Lockfile,
+                           attestation: Optional[Attestation],
+                           report: BuildReport) -> None:
+        """The plan-time attestation gate: runs after the lock is known and
+        BEFORE the orchestrator schedules any fetch.  Hard-fails
+        (``AttestationError``) on a missing-but-required or invalid
+        envelope; sets ``report.attestation_verified`` on success."""
+        if attestation is None:
+            if self.require_attestation:
+                raise AttestationError(
+                    f"builder requires a signed manifest but none was "
+                    f"supplied for {cir.name}@{lock.platform_id} — "
+                    f"refusing to schedule fetch")
+            return
+        if self.signer is None:
+            raise AttestationError(
+                "an attestation was supplied but this builder has no "
+                "signer to verify it with")
+        verify_attestation(cir, lock, attestation, self.signer)
+        report.attestation_verified = True
+
+    def attest(self, inst: ContainerInstance) -> Attestation:
+        """Sign an instance's manifest (its CIR + per-platform lock) with
+        this builder's signer — the pre-build side of the §12 handshake."""
+        if self.signer is None:
+            raise AttestationError("builder has no signer configured")
+        return _sign_manifest(inst.cir, inst.lock, self.signer)
+
+    def sbom(self, inst: ContainerInstance) -> Dict[str, Any]:
+        """CycloneDX-shaped SBOM of the instance's resolved dependency
+        closure (R-096), with chunk counts from this builder's store when
+        it is chunk-addressed."""
+        counts: Dict[str, int] = {}
+        if isinstance(self.store, ChunkedComponentStore):
+            for c in inst.bundle.components():
+                counts[c.digest()] = len(self.store.chunks_of(c))
+        return make_sbom(inst.cir, inst.lock, inst.bundle.resolution,
+                         chunk_counts=counts)
+
     # ------------------------------------------------------------------
     def build(self, cir: CIR, spec: SpecSheet,
               mesh: Any = None,
@@ -956,7 +1010,9 @@ class LazyBuilder:
               compile_steps: bool = False,
               use_plan_cache: bool = True,
               overlap: bool = True,
-              block: bool = True) -> ContainerInstance:
+              block: bool = True,
+              attestation: Optional[Attestation] = None
+              ) -> ContainerInstance:
         """Run the full pipeline: resolve, then orchestrated
         fetch / assemble / compile off per-component readiness.
 
@@ -982,6 +1038,9 @@ class LazyBuilder:
         lock = Lockfile(
             cir_digest=cir.digest(), platform_id=spec.platform_id,
             seed=cir.seed, pins=plan.pins, digests=plan.digests)
+        # plan-time gate: the attested manifest must match what resolution
+        # just produced — a hard fail here means nothing was fetched
+        self._check_attestation(cir, lock, attestation, report)
         bundle = ComponentBundle(resolution)
         inst = ContainerInstance(cir=cir, spec=spec, bundle=bundle,
                                  model=None, entry={}, lock=lock,
@@ -998,7 +1057,9 @@ class LazyBuilder:
                         assemble: bool = True,
                         compile_steps: bool = False,
                         overlap: bool = True,
-                        block: bool = True) -> ContainerInstance:
+                        block: bool = True,
+                        attestation: Optional[Attestation] = None
+                        ) -> ContainerInstance:
         """CIR-locked rebuild: CQ-only (no VS/ES), deterministic and
         bit-identical (paper §3.3, §5.4 CIR-locked)."""
         if lock.cir_digest != cir.digest():
@@ -1012,6 +1073,9 @@ class LazyBuilder:
                 f"not {spec.platform_id!r} — re-run a full lazy-build")
         report = BuildReport(cir_name=cir.name, platform_id=spec.platform_id,
                              bytes_cir=cir.size_bytes(), locked=True)
+        # locked rebuilds verify the attested lock verbatim — still before
+        # any fetch is scheduled
+        self._check_attestation(cir, lock, attestation, report)
         t0 = time.perf_counter()
         try:
             res = resolution_from_pins(

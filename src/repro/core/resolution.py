@@ -68,6 +68,18 @@ class Resolution:
     def pin_digests(self) -> Tuple[str, ...]:
         return tuple(c.digest() for c in self.components)
 
+    def component_records(self) -> List[Dict[str, Any]]:
+        """One plain-dict record per resolved component, canonically sorted
+        by (manager, name, version, env) — the SBOM's source of truth for
+        the dependency closure (docs §12)."""
+        recs = [{
+            "manager": c.manager, "name": c.name, "version": c.version,
+            "env": c.env, "digest": c.digest(), "size_bytes": c.size_bytes,
+        } for c in self.components]
+        recs.sort(key=lambda r: (r["manager"], r["name"], r["version"],
+                                 r["env"]))
+        return recs
+
     def explain(self) -> str:
         lines: List[str] = []
 

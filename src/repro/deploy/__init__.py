@@ -13,6 +13,7 @@ from .fleet import (FleetDeployer, FleetResult,  # noqa: F401
 from .placement import (DemandModel, PlacementPlanner,  # noqa: F401
                         ReplicationOrder, SpeculationStats,
                         speculative_replicate)
-from .topology import (FleetNode, FleetTopology, NodePeering,  # noqa: F401
-                       NodeTraffic, PeerIndex, PeerTransferError,
-                       TopologyError)
+from .topology import (QUARANTINE_DECAY_S,  # noqa: F401
+                       QUARANTINE_THRESHOLD, ChunkIntegrityError, FleetNode,
+                       FleetTopology, NodePeering, NodeTraffic, PeerIndex,
+                       PeerTransferError, Quarantine, TopologyError)

@@ -18,7 +18,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.cir import CIR
@@ -32,7 +32,8 @@ from ..core.spec import SpecSheet
 from ..core.store import (EVICTION_POLICIES, SPEC_LEASE_PREFIX,
                           LocalComponentStore)
 from .placement import speculative_replicate
-from .topology import FleetTopology, NodePeering, NodeTraffic, PeerIndex
+from .topology import (FleetTopology, NodePeering, NodeTraffic, PeerIndex,
+                       Quarantine)
 
 # Migration hand-off lease ids (pin the source content for the transfer
 # window) and post-migration retirement spec leases share one sequence.
@@ -124,6 +125,14 @@ class FleetResult:
     migrations_total: int = 0             # hand-offs since previous deploy
     migration_downtime_s: float = 0.0     # summed serve-gap (virtual when
     #                                       a simnet clock drives the fleet)
+    # -- trust & integrity columns (verify-on-receipt, docs §12) ---------
+    corrupt_chunks_total: int = 0         # peer chunks failing the receipt
+    #                                       digest check (discarded, never
+    #                                       committed)
+    corrupt_bytes_total: int = 0          # their bytes — NOT part of
+    #                                       bytes_peer_total
+    quarantined_nodes: List[str] = dataclasses.field(default_factory=list)
+    #                                       ^ nodes blacklisted at deploy end
 
     @property
     def ok(self) -> bool:
@@ -203,6 +212,13 @@ class FleetResult:
             lines.append(
                 f"  migrations: {self.migrations_total} hand-off(s), "
                 f"{self.migration_downtime_s * 1e3:.1f} ms total downtime")
+        if self.corrupt_chunks_total or self.quarantined_nodes:
+            lines.append(
+                f"  integrity: {self.corrupt_chunks_total} corrupt chunk(s) "
+                f"rejected on receipt "
+                f"({self.corrupt_bytes_total / 2**20:.1f} MiB discarded), "
+                f"quarantined: "
+                f"{', '.join(self.quarantined_nodes) or 'none'}")
         if self.listener_errors_total:
             lines.append(f"  {self.listener_errors_total} readiness-listener "
                          f"error(s) swallowed")
@@ -308,7 +324,9 @@ class FleetDeployer:
                  simulate_links: bool = False,
                  eviction_policy: str = "lru",
                  simnet: Optional[SimNetwork] = None,
-                 compile_cache: Optional[CompileCache] = None):
+                 compile_cache: Optional[CompileCache] = None,
+                 verify_receipts: bool = True,
+                 quarantine: Optional[Quarantine] = None):
         if eviction_policy not in EVICTION_POLICIES:
             raise ValueError(f"unknown eviction policy {eviction_policy!r} "
                              f"(one of {EVICTION_POLICIES})")
@@ -336,6 +354,12 @@ class FleetDeployer:
         self.topology = topology
         self.simnet = simnet
         self.peer_index: Optional[PeerIndex] = None
+        # trust layer (docs §12): verify-on-receipt is on by default; one
+        # fleet-wide Quarantine collects strikes against lying peers on
+        # the fleet's clock (virtual under a simnet, so decay and
+        # convergence are measured in virtual time)
+        self.quarantine: Optional[Quarantine] = None
+        self._byzantine: Set[str] = set()
         self._node_stores: Dict[str, ChunkedComponentStore] = {}
         self._node_peerings: Dict[str, NodePeering] = {}
         self._node_builders: Dict[str, LazyBuilder] = {}
@@ -370,7 +394,9 @@ class FleetDeployer:
                 "shared store")
         self.store = None
         self.builder = None
-        self.peer_index = PeerIndex()
+        self.quarantine = quarantine if quarantine is not None \
+            else Quarantine(clock=self._clock_now)
+        self.peer_index = PeerIndex(quarantine=self.quarantine)
         for node_id in topology.node_ids():
             # the node's capacity bounds its store; eviction retracts this
             # node's PeerIndex announcements before dropping bytes, and the
@@ -385,7 +411,10 @@ class FleetDeployer:
                                   enabled=use_peers,
                                   simulate=simulate_links,
                                   transport=simnet.transport_for(node_id)
-                                  if simnet is not None else None)
+                                  if simnet is not None else None,
+                                  verify_receipts=verify_receipts,
+                                  quarantine=self.quarantine,
+                                  tamper_hook=self._tamper_hook)
             st.eviction_listeners.append(peering.on_chunks_evicted)
             st.peer_probe_batch = peering.peer_held_subset
             lb = LazyBuilder(service, st,
@@ -422,6 +451,29 @@ class FleetDeployer:
         """One topology node's chunk-source router (the speculative
         replication executor fetches through it)."""
         return self._node_peerings[node_id]
+
+    # -- byzantine chaos injection (docs §12) ---------------------------
+    def _tamper_hook(self, src: str, chunks: Sequence[Any]) -> List[str]:
+        """The fleet's receipt-tamper model: a node marked byzantine
+        corrupts EVERY chunk it serves (the strongest adversary — weaker
+        ones only quarantine slower).  Installed on every peering; an
+        empty byzantine set makes it a no-op."""
+        if src in self._byzantine:
+            return [ch.id for ch in chunks]
+        return []
+
+    def mark_byzantine(self, node_ids: Sequence[str]) -> None:
+        """Turn ``node_ids`` into lying peers: chunks they serve from now
+        on arrive corrupted and fail verify-on-receipt.  Chaos-test
+        injection only — honest recovery (retract, re-source, quarantine)
+        runs through the production code path."""
+        unknown = [n for n in node_ids if n not in self._node_peerings]
+        if unknown:
+            raise ValueError(f"unknown topology node(s): {unknown}")
+        self._byzantine.update(node_ids)
+
+    def clear_byzantine(self) -> None:
+        self._byzantine.clear()
 
     def attach_planner(self, planner: Any) -> None:
         """Register a ``PlacementPlanner``: every successful topology-mode
@@ -632,6 +684,12 @@ class FleetDeployer:
             bytes_speculative_peer=spec_delta[4],
             migrations_total=mig_delta[0],
             migration_downtime_s=mig_delta[1],
+            corrupt_chunks_total=sum(t.corrupt_chunks
+                                     for t in node_traffic.values()),
+            corrupt_bytes_total=sum(t.corrupt_bytes
+                                    for t in node_traffic.values()),
+            quarantined_nodes=sorted(self.quarantine.active())
+            if self.quarantine is not None else [],
         )
 
     # ------------------------------------------------------------------

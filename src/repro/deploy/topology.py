@@ -27,13 +27,26 @@ upstream-vs-peer (summing exactly to the build reports'
 service — peer transfers never touch the registry link, which is the
 metric the edge fan-out benchmark (``benchmarks/distribution.py``) drives
 to near-``1/N``.
+
+Trust (docs §12): peer-sourced stripes are **verified on receipt** —
+every received chunk is digest-checked against its content-derived id
+before the engine may commit it.  A corrupt stripe raises
+``ChunkIntegrityError`` (a ``PeerTransferError``): the holder is
+retracted, the chunks re-sourced upstream, and the lying node takes a
+``Quarantine`` strike; past the threshold it is blacklisted fleet-wide in
+the ``PeerIndex`` (with time decay, so a repaired node is readmitted).
+Corrupt bytes land in dedicated ``NodeTraffic.corrupt_*`` columns and are
+never folded into ``bytes_from_peers``, so the ``bytes_total ==
+Σ bytes_delta_fetched`` identity survives byzantine peers.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
-from typing import (Any, Dict, List, Mapping, Optional, Sequence, Set,
-                    Tuple)
+import time
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Set, Tuple)
 
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.component import UniformComponent
@@ -53,6 +66,15 @@ DEFAULT_UPSTREAM_BPS = 500e6 / 8
 LINK_RETRY_BACKOFF_S = 0.05
 MAX_LINK_RETRIES = 10
 
+# Byzantine-peer policy (docs §12): a node whose served stripes fail
+# verify-on-receipt THRESHOLD times inside the DECAY window is quarantined
+# fleet-wide — no peer selects it as a source.  Strikes age out, so a node
+# that stops serving corrupt content is readmitted after DECAY_S without a
+# new strike (operators repair nodes; a permanent blacklist would bleed
+# fleet capacity forever on one bit-flip burst).
+QUARANTINE_THRESHOLD = 3
+QUARANTINE_DECAY_S = 300.0
+
 
 class TopologyError(ValueError):
     pass
@@ -61,6 +83,92 @@ class TopologyError(ValueError):
 class PeerTransferError(RuntimeError):
     """A peer-to-peer chunk transfer failed (peer crashed, link dropped, or
     the peer no longer holds the advertised content)."""
+
+
+class ChunkIntegrityError(PeerTransferError):
+    """A peer-sourced stripe failed verify-on-receipt: one or more received
+    chunks did not hash to their content-derived ids.  Subclasses
+    ``PeerTransferError`` so the standard recovery (retract the holder,
+    re-source upstream) applies — plus a ``Quarantine`` strike against the
+    lying node and dedicated ``corrupt_*`` accounting."""
+
+    def __init__(self, src: str, corrupt_ids: Sequence[str],
+                 corrupt_bytes: int):
+        super().__init__(
+            f"peer {src!r} served {len(corrupt_ids)} corrupt chunk(s) "
+            f"({corrupt_bytes} bytes) — discarded before commit")
+        self.src = src
+        self.corrupt_ids = list(corrupt_ids)
+        self.corrupt_bytes = corrupt_bytes
+
+
+class Quarantine:
+    """Fleet-wide blacklist of nodes that serve corrupt chunks (docs §12).
+
+    Strike-based with time decay: ``record_corruption`` timestamps a strike
+    against the node; a node is quarantined while it has ``threshold`` or
+    more strikes younger than ``decay_s``.  No strike is ever needed to
+    *serve* — only corrupt receipts add strikes — so honest nodes are
+    unaffected, and a quarantined node naturally decays back to eligible
+    once it stops lying.  ``clock`` is injectable (the fleet passes its
+    virtual clock under simnet, so decay and convergence run in virtual
+    time); defaults to ``time.monotonic``.
+    """
+
+    def __init__(self, threshold: int = QUARANTINE_THRESHOLD,
+                 decay_s: float = QUARANTINE_DECAY_S,
+                 clock: Optional[Callable[[], float]] = None):
+        if threshold < 1:
+            raise ValueError("quarantine threshold must be >= 1")
+        self.threshold = threshold
+        self.decay_s = decay_s
+        self._clock = clock if clock is not None else time.monotonic
+        self._strikes: Dict[str, List[float]] = {}
+        # node -> virtual/wall time it FIRST crossed the threshold — kept
+        # across decay so chaos benchmarks can report convergence time
+        self.quarantined_at: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def _live_strikes(self, node_id: str, now: float) -> List[float]:
+        """Prune strikes past the decay window (caller holds the lock)."""
+        live = [t for t in self._strikes.get(node_id, ())
+                if now - t < self.decay_s]
+        if live:
+            self._strikes[node_id] = live
+        else:
+            self._strikes.pop(node_id, None)
+        return live
+
+    def record_corruption(self, node_id: str) -> bool:
+        """Register one corrupt-stripe strike; returns whether the node is
+        now quarantined."""
+        now = self._clock()
+        with self._lock:
+            live = self._live_strikes(node_id, now)
+            live.append(now)
+            self._strikes[node_id] = live
+            if len(live) >= self.threshold:
+                self.quarantined_at.setdefault(node_id, now)
+                return True
+            return False
+
+    def strikes(self, node_id: str) -> int:
+        now = self._clock()
+        with self._lock:
+            return len(self._live_strikes(node_id, now))
+
+    def is_quarantined(self, node_id: str) -> bool:
+        now = self._clock()
+        with self._lock:
+            return len(self._live_strikes(node_id, now)) >= self.threshold
+
+    def active(self) -> Set[str]:
+        """The currently quarantined node ids (one snapshot, for batch
+        source selection)."""
+        now = self._clock()
+        with self._lock:
+            return {n for n in list(self._strikes)
+                    if len(self._live_strikes(n, now)) >= self.threshold}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,10 +296,18 @@ class PeerIndex:
     per-component readiness event announces the whole component once its
     content is proven present.  Both paths verify against the announcing
     node's store, so the index can only ever over-forget, never over-claim.
+
+    An optional ``Quarantine`` filters *source selection* (``best_many``):
+    a blacklisted node is never chosen as a pull source, fleet-wide, the
+    moment it crosses the threshold.  ``holders``/``holders_many`` stay
+    unfiltered on purpose — the eviction oracle (``peer_holds``) asks
+    "does the content exist elsewhere", and a quarantined node's copy
+    still exists; only pulls from it are refused.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, quarantine: Optional[Quarantine] = None) -> None:
         self._holders: Dict[str, Set[str]] = {}     # chunk id -> node ids
+        self.quarantine = quarantine
         self._lock = threading.Lock()
 
     def announce(self, node_id: str, chunk_ids: Sequence[str]) -> None:
@@ -252,6 +368,10 @@ class PeerIndex:
         only a handful of links, so selection must not walk the holder
         set per chunk."""
         out: Dict[str, Optional[str]] = {}
+        # one quarantine snapshot per stripe, taken before the index lock
+        # (the two locks never nest the other way)
+        banned: Set[str] = self.quarantine.active() \
+            if self.quarantine is not None else set()
         with self._lock:
             for cid in chunk_ids:
                 holders = self._holders.get(cid)
@@ -264,7 +384,7 @@ class PeerIndex:
                         cands = ((p, link_bps[p]) for p in holders
                                  if p in link_bps)
                     for peer, bps in cands:
-                        if peer == exclude:
+                        if peer == exclude or peer in banned:
                             continue
                         if best is None or (-bps, peer) < best:
                             best = (-bps, peer)
@@ -313,6 +433,13 @@ class NodeTraffic:
     spec_bytes_from_upstream: int = 0
     spec_bytes_from_peers: int = 0
     spec_chunks: int = 0
+    # Verify-on-receipt rejections (docs §12): chunks a peer served that
+    # failed the digest check.  Discarded before commit and re-sourced
+    # upstream, so these bytes are NEVER part of ``bytes_from_peers`` (the
+    # honest re-pull is) — the bytes_total == bytes_delta_fetched identity
+    # holds with byzantine peers in the fleet.
+    corrupt_chunks: int = 0
+    corrupt_bytes: int = 0
 
     @property
     def bytes_total(self) -> int:
@@ -363,6 +490,8 @@ class NodeTraffic:
             spec_bytes_from_peers=self.spec_bytes_from_peers
             - before.spec_bytes_from_peers,
             spec_chunks=self.spec_chunks - before.spec_chunks,
+            corrupt_chunks=self.corrupt_chunks - before.corrupt_chunks,
+            corrupt_bytes=self.corrupt_bytes - before.corrupt_bytes,
         )
 
 
@@ -401,7 +530,11 @@ class NodePeering:
                  simulate: bool = False,
                  transport: Optional[Any] = None,
                  max_link_retries: int = MAX_LINK_RETRIES,
-                 link_retry_backoff_s: float = LINK_RETRY_BACKOFF_S):
+                 link_retry_backoff_s: float = LINK_RETRY_BACKOFF_S,
+                 verify_receipts: bool = True,
+                 quarantine: Optional[Quarantine] = None,
+                 tamper_hook: Optional[
+                     Callable[[str, Sequence[Chunk]], Sequence[str]]] = None):
         self.node_id = node_id
         self.topology = topology
         self.index = index
@@ -410,6 +543,15 @@ class NodePeering:
         self.peer_stores = peer_stores
         self.enabled = enabled
         self.simulate = simulate
+        # verify-on-receipt policy (docs §12): digest-check every
+        # peer-sourced chunk before the engine may commit it.  The
+        # quarantine collects strikes against lying sources; tamper_hook
+        # is the chaos-injection point — (src, chunks) -> ids that
+        # "arrived corrupted" — used by tests and the byzantine benchmark
+        # instead of monkeypatching transfer internals.
+        self.verify_receipts = verify_receipts
+        self.quarantine = quarantine
+        self.tamper_hook = tamper_hook
         if transport is None and simulate:
             transport = WallClockTransport()
         self.transport = transport
@@ -477,6 +619,9 @@ class NodePeering:
         for peer in self.index.holders(chunk_id):
             if peer == self.node_id:
                 continue
+            if self.quarantine is not None \
+                    and self.quarantine.is_quarantined(peer):
+                continue
             bps = self.topology.bandwidth(self.node_id, peer)
             if bps is None:
                 continue
@@ -538,6 +683,35 @@ class NodePeering:
                 # a peer-link outage is not worth waiting out: upstream
                 # fallback converges the build now
                 raise PeerTransferError(str(e)) from e
+        if self.verify_receipts:
+            self._verify_stripe(src, chunks)
+
+    def _verify_stripe(self, src: str, chunks: Sequence[Chunk]) -> None:
+        """Verify-on-receipt (docs §12): re-hash every received chunk and
+        check it against its content-derived id.
+
+        Chunk ids ARE content digests (length-prefixed sha256 piece
+        digests, §5), so verification is one sha256 over the received
+        bytes per chunk — modeled here as a streaming digest pass over
+        the stripe, one hash update per received chunk (content is
+        virtual, its cost is not).  ``tamper_hook`` decides which chunks
+        "arrived corrupted"; a hit bumps the store's ``corrupt_rejected``
+        counter and raises ``ChunkIntegrityError`` BEFORE the engine can
+        commit anything from this stripe."""
+        corrupt: List[str] = []
+        # the receipt-side digest pass — the <3%-overhead cost the
+        # integrity benchmark gates
+        digest = hashlib.sha256()
+        for ch in chunks:
+            digest.update(ch.id.encode())
+        digest.hexdigest()
+        if self.tamper_hook is not None:
+            corrupt = list(self.tamper_hook(src, chunks))
+        if corrupt:
+            sizes = {ch.id: ch.size for ch in chunks}
+            nbytes = sum(sizes.get(cid, 0) for cid in corrupt)
+            self.store.chunk_stats.corrupt_rejected += len(corrupt)
+            raise ChunkIntegrityError(src, corrupt, nbytes)
 
     def _upstream_pull(self, component: UniformComponent,
                        chunks: Sequence[Chunk], staged: NodeTraffic) -> None:
@@ -585,6 +759,8 @@ class NodePeering:
             t.chunks_from_peers += staged.chunks_from_peers
             t.peer_fallbacks += staged.peer_fallbacks
             t.link_retries += staged.link_retries
+            t.corrupt_chunks += staged.corrupt_chunks
+            t.corrupt_bytes += staged.corrupt_bytes
             for src, nbytes in staged.peer_sources.items():
                 t.peer_sources[src] = t.peer_sources.get(src, 0) + nbytes
 
@@ -602,10 +778,18 @@ class NodePeering:
             nbytes = sum(ch.size for ch in group)
             try:
                 self._peer_pull(src, component, group)
-            except PeerTransferError:
+            except PeerTransferError as e:
                 # a dead peer must not poison later selections: retract its
                 # advertisement and pay the upstream price for these chunks
                 self.index.retract(src, [ch.id for ch in group])
+                if isinstance(e, ChunkIntegrityError):
+                    # a LYING peer additionally takes a quarantine strike;
+                    # its corrupt bytes are discarded (never peer bytes) —
+                    # the honest upstream re-pull below is what counts
+                    staged.corrupt_chunks += len(e.corrupt_ids)
+                    staged.corrupt_bytes += e.corrupt_bytes
+                    if self.quarantine is not None:
+                        self.quarantine.record_corruption(src)
                 staged.peer_fallbacks += 1
                 self._upstream_pull(component, group, staged)
                 continue
@@ -635,6 +819,8 @@ class NodePeering:
                 + staged.chunks_from_peers
             t.peer_fallbacks += staged.peer_fallbacks
             t.link_retries += staged.link_retries
+            t.corrupt_chunks += staged.corrupt_chunks
+            t.corrupt_bytes += staged.corrupt_bytes
 
     def fetch_artifact_stripe(self, component: UniformComponent,
                               stripe: Sequence[Tuple[Chunk, threading.Event]]
@@ -664,8 +850,16 @@ class NodePeering:
         for src, chs in groups:
             try:
                 self._peer_pull(src, component, chs)
-            except PeerTransferError:
+            except PeerTransferError as e:
                 self.index.retract(src, [ch.id for ch in chs])
+                if isinstance(e, ChunkIntegrityError):
+                    # a corrupt artifact stripe strikes the liar exactly
+                    # like resolved content — the caller recompiles locally
+                    with self._lock:
+                        self.traffic.corrupt_chunks += len(e.corrupt_ids)
+                        self.traffic.corrupt_bytes += e.corrupt_bytes
+                    if self.quarantine is not None:
+                        self.quarantine.record_corruption(src)
                 return False
             staged_bytes += sum(ch.size for ch in chs)
         with self._lock:

@@ -8,6 +8,10 @@ ASSEMBLED+COMPILED snapshot once the instance is READY; ``--restore PATH``
 rebuilds from such a snapshot — resolution is a pin replay, the fetch is a
 chunk delta against the local store, and the compile stage restores the
 executable through the compile cache — instead of a full cold build.
+
+Provenance: ``--sbom-out PATH`` emits the CycloneDX-shaped SBOM of the
+resolved dependency closure (docs/cir-format.md §12, R-096) once the
+instance is READY.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ import numpy as np
 from ..configs import ARCHS
 from ..core import (CompileCache, InstanceSnapshot, LazyBuilder, PreBuilder,
                     SPEC_LEASE_PREFIX, probe_host, restore_instance,
-                    snapshot_instance)
+                    snapshot_instance, write_sbom)
 from ..core import catalog
 from .mesh import make_smoke_mesh
 
@@ -42,6 +46,9 @@ def main(argv=None) -> int:
     ap.add_argument("--restore", metavar="PATH", default=None,
                     help="restore a scaled-to-zero instance from a snapshot "
                          "instead of a full cold build")
+    ap.add_argument("--sbom-out", metavar="PATH", default=None,
+                    help="write the CycloneDX-shaped SBOM of the resolved "
+                         "dependency closure once READY (docs §12, R-096)")
     ap.add_argument("--retire-spec", action="store_true",
                     help="after writing the snapshot, demote the instance's "
                          "content to the speculative eviction tier (a spec: "
@@ -80,6 +87,11 @@ def main(argv=None) -> int:
     print(f"{verb} {cir.name} for {inst.spec.platform_id}; "
           f"deployable at {inst.report.critical_path_s * 1e3:.1f} ms "
           f"(stage={inst.stage}, CIR={cir.size_bytes()}B)")
+    if args.sbom_out:
+        sbom = builder.sbom(inst)
+        write_sbom(args.sbom_out, sbom)
+        print(f"SBOM written to {args.sbom_out} "
+              f"({len(sbom['components'])} components)")
     # first weight use: block until the asset tail has fully landed
     inst.wait("weights")
     print(f"weights landed; fetched={inst.report.bytes_fetched}B "

@@ -1,8 +1,9 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
 from benchmarks.check_regression import (CHURN, COLDSTART, DISTRIBUTION,
-                                         FETCH, PIPELINE, PLACEMENT, SCALE,
-                                         Check, build_checks)
+                                         FETCH, INTEGRITY, PIPELINE,
+                                         PLACEMENT, SCALE, Check,
+                                         build_checks)
 
 
 def test_higher_is_better_band():
@@ -37,7 +38,9 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
           scale_offload=0.99, identity_ok=1.0, loss_converged=1.0,
           loss_extra=4.0, cold_reduction=76.0, cold_identical=1.0,
           restore_reduction=100.0, p99_ready=20.0, compile_hit=0.95,
-          p95_reduction=70.0, wire_overhead=0.0, downtime_ratio=0.01):
+          p95_reduction=70.0, wire_overhead=0.0, downtime_ratio=0.01,
+          verify_overhead=0.1, corrupt_committed=0, corrupt_rejected=22,
+          chaos_identity=1.0, quarantined=1.0, tamper_rejected=1.0):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -70,15 +73,24 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
                   "speculation_wire_overhead_pct": wire_overhead},
         "migration": {"migration_downtime_ratio": downtime_ratio},
     }
+    integ = {
+        "overhead": {"verify_overhead_pct": verify_overhead},
+        "chaos": {"corrupt_chunks_committed": corrupt_committed,
+                  "corrupt_chunks_rejected": corrupt_rejected,
+                  "identity_ok": chaos_identity,
+                  "quarantined": quarantined},
+        "attestation": {"tamper_rejected": tamper_rejected},
+    }
     return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn,
-            SCALE: scale, COLDSTART: cold, PLACEMENT: place}
+            SCALE: scale, COLDSTART: cold, PLACEMENT: place,
+            INTEGRITY: integ}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 21
+    assert len(checks) == 27
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -168,6 +180,29 @@ def test_placement_gate_binds_on_regressions():
     gapped = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, downtime_ratio=0.25)
     failed = {c.metric for c in build_checks(base, gapped) if not c.ok}
     assert f"{PLACEMENT}:migration.migration_downtime_ratio" in failed
+
+
+def test_integrity_gate_binds_on_regressions():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # the receipt check creeping past the 3% hot-path ceiling fails the
+    # gate even off the floored 0.1% baseline (rel 50 → bound is the abs)
+    heavy = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, verify_overhead=3.5)
+    failed = {c.metric for c in build_checks(base, heavy) if not c.ok}
+    assert f"{INTEGRITY}:overhead.verify_overhead_pct" in failed
+    # a single tampered chunk reaching a store is a hard failure, and so
+    # is the accounting identity breaking under liars
+    leaked = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, corrupt_committed=1,
+                   chaos_identity=0.0)
+    failed = {c.metric for c in build_checks(base, leaked) if not c.ok}
+    assert f"{INTEGRITY}:chaos.corrupt_chunks_committed" in failed
+    assert f"{INTEGRITY}:chaos.identity_ok" in failed
+    # a liar that stays in rotation, or a forged attestation that builds
+    # anyway, fails outright (both are 0/1)
+    trusted = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, quarantined=0.0,
+                    tamper_rejected=0.0)
+    failed = {c.metric for c in build_checks(base, trusted) if not c.ok}
+    assert f"{INTEGRITY}:chaos.quarantined" in failed
+    assert f"{INTEGRITY}:attestation.tamper_rejected" in failed
 
 
 def test_new_baseline_file_missing_on_old_branch_skips_cleanly():

@@ -323,3 +323,150 @@ def test_placement_section_names_real_api():
     # the serving launcher exposes spec-tier retirement
     import repro.launch.serve as serve_mod
     assert "--retire-spec" in inspect.getsource(serve_mod)
+
+
+def test_integrity_section_names_real_api():
+    """§12 documents trust & integrity — the names and semantics it
+    promises must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (ATTESTATION_VERSION, Attestation,
+                            AttestationError, Ed25519Signer, HMACSigner,
+                            LazyBuilder, attest, canonical_manifest,
+                            make_sbom, manifest_digest, verify_attestation,
+                            write_sbom)
+    from repro.core.chunkstore import ChunkStats
+    from repro.core.lazybuild import BuildReport
+    from repro.deploy import (QUARANTINE_DECAY_S, QUARANTINE_THRESHOLD,
+                              ChunkIntegrityError, FleetDeployer,
+                              NodeTraffic, PeerIndex, PeerTransferError,
+                              Quarantine)
+    from repro.deploy.fleet import FleetResult
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 12. Trust & integrity: signed manifests, SBOM, " \
+        "byzantine-resilient peering" in text
+    for name in ("canonical_manifest", "Attestation", "ATTESTATION_VERSION",
+                 "Signer", "HMACSigner", "Ed25519Signer", "ED25519_AVAILABLE",
+                 "attest", "verify_attestation", "AttestationError",
+                 "require_attestation", "attestation_verified",
+                 "make_sbom", "write_sbom", "CycloneDX", "cir:chunkCount",
+                 "--sbom-out", "verify_receipts", "ChunkIntegrityError",
+                 "corrupt_rejected", "corrupt_chunks", "corrupt_bytes",
+                 "Quarantine", "QUARANTINE_THRESHOLD", "QUARANTINE_DECAY_S",
+                 "quarantined_at", "mark_byzantine", "tamper_hook",
+                 "BENCH_integrity.json", "verify_overhead_pct",
+                 "corrupt_chunks_committed", "quarantine_convergence_s",
+                 "tamper_rejected"):
+        assert name in text, f"§12 lost its {name} reference"
+    # the documented surface: attestation
+    assert ATTESTATION_VERSION == 1
+    for field in ("payload_digest", "algorithm", "key_id", "signature",
+                  "version"):
+        assert field in Attestation.__dataclass_fields__
+    for fn in (canonical_manifest, manifest_digest, attest,
+               verify_attestation, make_sbom, write_sbom):
+        assert callable(fn)
+    for signer_cls in (HMACSigner, Ed25519Signer):
+        for attr in ("algorithm", "key_id", "sign", "verify"):
+            assert hasattr(signer_cls, attr) or attr in inspect.signature(
+                signer_cls.__init__).parameters
+    assert issubclass(AttestationError, RuntimeError)
+    params = inspect.signature(LazyBuilder.__init__).parameters
+    assert "signer" in params and "require_attestation" in params
+    assert "attestation" in inspect.signature(LazyBuilder.build).parameters
+    assert "attestation" in \
+        inspect.signature(LazyBuilder.build_from_lock).parameters
+    assert "attestation_verified" in BuildReport.__dataclass_fields__
+    for attr in ("attest", "sbom"):
+        assert hasattr(LazyBuilder, attr)
+    # the documented surface: verify-on-receipt & quarantine
+    assert issubclass(ChunkIntegrityError, PeerTransferError)
+    assert QUARANTINE_THRESHOLD >= 1 and QUARANTINE_DECAY_S > 0
+    for attr in ("record_corruption", "is_quarantined", "strikes", "active"):
+        assert hasattr(Quarantine, attr)
+    assert "quarantine" in \
+        inspect.signature(PeerIndex.__init__).parameters
+    for field in ("corrupt_chunks", "corrupt_bytes"):
+        assert field in NodeTraffic.__dataclass_fields__
+    assert "corrupt_rejected" in ChunkStats.__dataclass_fields__
+    for field in ("corrupt_chunks_total", "corrupt_bytes_total",
+                  "quarantined_nodes"):
+        assert field in FleetResult.__dataclass_fields__
+    fd_params = inspect.signature(FleetDeployer.__init__).parameters
+    assert "verify_receipts" in fd_params and "quarantine" in fd_params
+    for attr in ("mark_byzantine", "clear_byzantine"):
+        assert hasattr(FleetDeployer, attr)
+    # the serving launcher exposes SBOM emission; the README documents it
+    import repro.launch.serve as serve_mod
+    assert "--sbom-out" in inspect.getsource(serve_mod)
+    with open(README) as f:
+        readme = f.read()
+    assert "--sbom-out" in readme
+    assert "verify_receipts" in readme
+
+
+def test_architecture_doc_names_real_layers():
+    """docs/architecture.md is the layer map — every module it names must
+    exist on disk and every key class must import from the layer it is
+    filed under."""
+    import importlib
+
+    arch_doc = os.path.join(os.path.dirname(__file__), "..", "docs",
+                            "architecture.md")
+    assert os.path.exists(arch_doc), "docs/architecture.md is missing"
+    with open(arch_doc) as f:
+        text = f.read()
+
+    # every named module exists on disk
+    src = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    for rel in re.findall(r"`(?:core|deploy|launch)/(\w+)\.py`", text):
+        found = any(
+            os.path.exists(os.path.join(src, pkg, rel + ".py"))
+            for pkg in ("core", "deploy", "launch"))
+        assert found, f"architecture.md names a missing module {rel}.py"
+
+    # every "Key classes:" name imports from the package the layer maps to
+    layer_classes = {
+        "repro.core": [
+            "UniformComponent", "Specifier", "Requirement",
+            "UniformComponentRegistry", "UniformComponentService",
+            "Resolution", "CIR", "PreBuilder", "LocalComponentStore",
+            "ChunkedComponentStore", "LazyBuilder", "Lockfile",
+            "ContainerInstance", "CompileCache", "InstanceSnapshot",
+            "Attestation", "HMACSigner", "Ed25519Signer",
+            "AttestationError", "SimClock", "SimNetwork", "FaultPlan"],
+        "repro.deploy": [
+            "FleetTopology", "FleetNode", "PeerIndex", "NodePeering",
+            "NodeTraffic", "Quarantine", "ChunkIntegrityError",
+            "PlacementPlanner", "DemandModel", "FleetDeployer",
+            "FleetResult", "PlatformDeployment", "MigrationReport"],
+        "repro.core.lazybuild": ["FetchEngine", "BuildReport",
+                                 "BuildPlanCache"],
+        "repro.core.orchestrator": ["BuildOrchestrator", "BuildGraph",
+                                    "Lifecycle"],
+        "repro.core.store": ["Chunk", "LifecycleStats"],
+        "repro.core.chunkstore": ["FetchPlan", "ChunkStats"],
+        "repro.core.simnet": ["SimTransport", "WallClockTransport",
+                              "LinkDownError", "NodeDownError"],
+        "repro.core.integrity": ["Signer"],
+        "repro.deploy.placement": ["speculative_replicate"],
+    }
+    for mod_name, names in layer_classes.items():
+        mod = importlib.import_module(mod_name)
+        for name in names:
+            assert name in text, f"architecture.md lost its {name} entry"
+            assert hasattr(mod, name), \
+                f"architecture.md files {name} under {mod_name}, " \
+                f"which does not export it"
+
+    # the map's cross-references resolve
+    assert "cir-format.md" in text
+    assert "benchmarks/README.md" in text
+    assert os.path.exists(os.path.join(
+        os.path.dirname(__file__), "..", "benchmarks", "README.md"))
+    # README links the layer map
+    with open(README) as f:
+        readme = f.read()
+    assert "docs/architecture.md" in readme

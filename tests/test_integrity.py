@@ -1,0 +1,343 @@
+"""Trust & integrity at fleet scale (docs/cir-format.md §12).
+
+Covers the integrity subsystem's claims end to end: canonical manifest
+attestation (sign at pre-build, verify at plan time, hard-fail before any
+fetch), SBOM emission from the resolved closure, verify-on-receipt for
+peer transfers (corrupt-stripe retraction + upstream re-source), the
+strike/decay ``Quarantine``, and the headline chaos invariant — byzantine
+peers cannot corrupt a build and cannot break the delta-byte accounting
+identity.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (Attestation, AttestationError, ED25519_AVAILABLE,
+                        Ed25519Signer, HMACSigner, LazyBuilder, PreBuilder,
+                        SimNetwork, attest, canonical_manifest, cpu_smoke,
+                        make_sbom, tpu_single_pod, verify_attestation)
+from repro.deploy import (ChunkIntegrityError, FleetDeployer, FleetTopology,
+                          PeerIndex, Quarantine)
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def _fanout(n_edges=2):
+    """1 cloud seed + N edges, all linked (test_topology's shape)."""
+    topo = FleetTopology.edge_fanout(n_edges, cloud_edge_bps=200e6,
+                                     edge_edge_bps=100e6)
+    cloud = tpu_single_pod()
+    edges = [dataclasses.replace(cpu_smoke(), platform_id=f"edge-host-{i}")
+             for i in range(n_edges)]
+    topo.place(cloud.platform_id, "cloud")
+    for i, s in enumerate(edges):
+        topo.place(s.platform_id, f"edge-{i}")
+    return topo, cloud, edges
+
+
+def _smoke_cir(pb, arch="phi4-mini-3.8b", entrypoint="train"):
+    return pb.prebuild(ARCHS[arch].reduced(), entrypoint=entrypoint)
+
+
+# ---------------------------------------------------------------------------
+# Attestation: canonical payload, sign/verify, tamper rejection
+# ---------------------------------------------------------------------------
+
+def test_canonical_manifest_is_deterministic(service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    builder = LazyBuilder(service, signer=HMACSigner(b"s3cret"))
+    inst = builder.build(cir, cpu_spec)
+    p1 = canonical_manifest(cir, inst.lock)
+    p2 = canonical_manifest(cir, inst.lock)
+    assert p1 == p2
+    # the payload covers the lock verbatim: any pin change reshapes it
+    tampered = dataclasses.replace(
+        inst.lock, pins=tuple(list(inst.lock.pins[:-1])))
+    assert canonical_manifest(cir, tampered) != p1
+
+
+def test_attestation_roundtrip_and_envelope_json(service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    signer = HMACSigner(b"fleet-secret", key_id="k1")
+    builder = LazyBuilder(service, signer=signer)
+    inst = builder.build(cir, cpu_spec)
+    att = builder.attest(inst)
+    assert att.algorithm == "hmac-sha256" and att.key_id == "k1"
+    # verify from a fresh envelope (the JSON wire form)
+    att2 = Attestation.from_json(att.to_json())
+    verify_attestation(cir, inst.lock, att2, signer)
+    with pytest.raises(AttestationError):
+        Attestation.from_json('{"not": "an envelope"}')
+
+
+def test_attestation_tamper_rejected(service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    signer = HMACSigner(b"fleet-secret")
+    builder = LazyBuilder(service, signer=signer)
+    inst = builder.build(cir, cpu_spec)
+    att = builder.attest(inst)
+    # forged signature
+    with pytest.raises(AttestationError, match="signature"):
+        verify_attestation(cir, inst.lock,
+                           dataclasses.replace(att, signature="00" * 32),
+                           signer)
+    # tampered lock (a different pin set) -> digest mismatch, not signature
+    tampered_lock = dataclasses.replace(
+        inst.lock, pins=inst.lock.pins[:-1], digests=inst.lock.digests[:-1])
+    with pytest.raises(AttestationError, match="digest mismatch"):
+        verify_attestation(cir, tampered_lock, att, signer)
+    # wrong secret on the verifier side
+    with pytest.raises(AttestationError):
+        verify_attestation(cir, inst.lock, att, HMACSigner(b"wrong"))
+    # wrong envelope version fails closed
+    with pytest.raises(AttestationError, match="version"):
+        verify_attestation(cir, inst.lock,
+                           dataclasses.replace(att, version=99), signer)
+
+
+def test_build_verifies_attestation_before_any_fetch(service, pb, cpu_spec):
+    """The hard-fail path: a required-but-missing or invalid attestation
+    stops the build at plan time — zero chunks fetched, zero bytes on the
+    wire."""
+    cir = _smoke_cir(pb)
+    signer = HMACSigner(b"fleet-secret")
+    builder = LazyBuilder(service, signer=signer, require_attestation=True)
+    served_before = service.bytes_served
+    with pytest.raises(AttestationError, match="refusing to schedule fetch"):
+        builder.build(cir, cpu_spec)
+    assert service.bytes_served == served_before        # nothing fetched
+    assert len(builder.store.digests()) == 0            # nothing landed
+
+    # the legitimate flow: attest on one (pre-build side) builder, verify
+    # + build on the enforcing one
+    minting = LazyBuilder(service, signer=signer)
+    inst0 = minting.build(cir, cpu_spec)
+    att = minting.attest(inst0)
+    inst = builder.build(cir, cpu_spec, attestation=att)
+    assert inst.report.attestation_verified
+    inst_locked = builder.build_from_lock(cir, inst0.lock, cpu_spec,
+                                          attestation=att)
+    assert inst_locked.report.attestation_verified
+
+
+def test_builder_without_signer_rejects_supplied_attestation(
+        service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    minting = LazyBuilder(service, signer=HMACSigner(b"s"))
+    inst = minting.build(cir, cpu_spec)
+    att = minting.attest(inst)
+    unsigned = LazyBuilder(service)
+    with pytest.raises(AttestationError, match="no signer"):
+        unsigned.build_from_lock(cir, inst.lock, cpu_spec, attestation=att)
+    with pytest.raises(ValueError):
+        LazyBuilder(service, require_attestation=True)  # needs a signer
+
+
+@pytest.mark.skipif(not ED25519_AVAILABLE,
+                    reason="optional 'cryptography' backend not installed")
+def test_ed25519_signer_roundtrip(service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    signer = Ed25519Signer()
+    builder = LazyBuilder(service, signer=signer)
+    inst = builder.build(cir, cpu_spec)
+    att = builder.attest(inst)
+    assert att.algorithm == "ed25519"
+    verify_attestation(cir, inst.lock, att, signer)
+    with pytest.raises(AttestationError):
+        verify_attestation(
+            cir, inst.lock,
+            dataclasses.replace(att, signature="00" * 64), signer)
+
+
+def test_ed25519_unavailable_raises_cleanly():
+    if ED25519_AVAILABLE:
+        pytest.skip("backend present — the gate is exercised elsewhere")
+    with pytest.raises(RuntimeError, match="cryptography"):
+        Ed25519Signer()
+
+
+# ---------------------------------------------------------------------------
+# SBOM emission
+# ---------------------------------------------------------------------------
+
+def test_sbom_shape_and_determinism(service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    builder = LazyBuilder(service)
+    inst = builder.build(cir, cpu_spec)
+    sbom = builder.sbom(inst)
+    assert sbom["bomFormat"] == "CycloneDX"
+    assert sbom["specVersion"] == "1.5"
+    assert sbom["serialNumber"] == f"urn:cir:lock:{inst.lock.digest()}"
+    meta = sbom["metadata"]["component"]
+    assert meta["name"] == cir.name and meta["bom-ref"] == cir.digest()
+    # one record per resolved component, canonically sorted
+    comps = sbom["components"]
+    assert len(comps) == len(inst.bundle.components())
+    keys = [(c["group"], c["name"], c["version"]) for c in comps]
+    assert keys == sorted(keys)
+    by_digest = {c.digest(): c for c in inst.bundle.components()}
+    for rec in comps:
+        c = by_digest[rec["bom-ref"]]
+        assert rec["group"] == c.manager and rec["version"] == c.version
+        assert rec["hashes"] == [{"alg": "SHA-256", "content": c.digest()}]
+        props = {p["name"]: p["value"] for p in rec["properties"]}
+        assert int(props["cir:sizeBytes"]) == c.size_bytes
+        # chunk counts come from the builder's chunk store
+        assert int(props["cir:chunkCount"]) == \
+            len(builder.store.chunks_of(c))
+    # deterministic: same build -> byte-identical document
+    assert json.dumps(builder.sbom(inst), sort_keys=True) == \
+        json.dumps(sbom, sort_keys=True)
+
+
+def test_sbom_without_chunk_store_defaults_to_zero_counts(
+        service, pb, cpu_spec):
+    cir = _smoke_cir(pb)
+    builder = LazyBuilder(service)
+    inst = builder.build(cir, cpu_spec)
+    sbom = make_sbom(cir, inst.lock, inst.bundle.resolution)
+    for rec in sbom["components"]:
+        props = {p["name"]: p["value"] for p in rec["properties"]}
+        assert props["cir:chunkCount"] == "0"
+
+
+# ---------------------------------------------------------------------------
+# Quarantine: threshold + decay (fake clock — no sleeping)
+# ---------------------------------------------------------------------------
+
+def test_quarantine_threshold_and_decay():
+    t = [0.0]
+    q = Quarantine(threshold=3, decay_s=100.0, clock=lambda: t[0])
+    assert not q.record_corruption("liar")
+    assert not q.record_corruption("liar")
+    assert not q.is_quarantined("liar")
+    assert q.record_corruption("liar")            # third strike crosses
+    assert q.is_quarantined("liar")
+    assert q.active() == {"liar"}
+    assert q.quarantined_at["liar"] == 0.0
+    # strikes age out: past the decay window the node is readmitted
+    t[0] = 100.1
+    assert not q.is_quarantined("liar")
+    assert q.active() == set()
+    assert q.strikes("liar") == 0
+    # ...but quarantined_at keeps the convergence record
+    assert "liar" in q.quarantined_at
+    # an honest node never quarantines
+    assert not q.is_quarantined("honest")
+    with pytest.raises(ValueError):
+        Quarantine(threshold=0)
+
+
+def test_quarantined_holder_never_selected():
+    """best_many refuses a blacklisted source; holders()/holders_many()
+    stay unfiltered (the eviction oracle asks existence, not pullability).
+    """
+    q = Quarantine(threshold=1, clock=lambda: 0.0)
+    idx = PeerIndex(quarantine=q)
+    idx.announce("liar", ["c1"])
+    idx.announce("honest", ["c1"])
+    link_bps = {"liar": 1e9, "honest": 1e6}   # the liar has the fat link
+    assert idx.best_many(["c1"], link_bps, exclude="me") == {"c1": "liar"}
+    q.record_corruption("liar")
+    assert idx.best_many(["c1"], link_bps, exclude="me") == {"c1": "honest"}
+    assert set(idx.holders("c1")) == {"honest", "liar"}  # unfiltered
+
+
+# ---------------------------------------------------------------------------
+# Verify-on-receipt: corrupt-stripe retraction + re-source
+# ---------------------------------------------------------------------------
+
+def _byzantine_fleet(service, n_edges, liars, simnet=True):
+    topo, cloud, edges = _fanout(n_edges)
+    net = SimNetwork(topo) if simnet else None
+    fleet = FleetDeployer(service, topology=topo, simnet=net)
+    fleet.mark_byzantine(liars)
+    return fleet, topo, cloud, edges
+
+
+def test_corrupt_stripe_retracts_resources_and_strikes(service, pb):
+    """One lying edge: the honest neighbour detects every corrupt stripe,
+    retracts the liar, re-sources (peers/upstream), and the build commits
+    zero corrupt chunks."""
+    fleet, topo, cloud, edges = _byzantine_fleet(service, 2, [])
+    cir = _smoke_cir(pb)
+    r1 = fleet.deploy(cir, [cloud, edges[0]])
+    assert r1.ok and r1.corrupt_chunks_total == 0
+    fleet.mark_byzantine(["edge-0"])
+    r2 = fleet.deploy(cir, [edges[1]])
+    assert r2.ok
+    assert r2.corrupt_chunks_total > 0        # the liar was caught lying
+    assert r2.corrupt_bytes_total > 0
+    assert r2.peer_fallbacks_total > 0        # ...and re-sourced
+    # corrupt chunks were never committed: the target store holds exactly
+    # the content its build planned, all stores accounted the rejection
+    st = fleet.node_store("edge-1")
+    assert st.chunk_stats.corrupt_rejected == r2.corrupt_chunks_total
+    # strikes landed against the liar
+    assert fleet.quarantine.strikes("edge-0") > 0
+    # the liar's advertisements were retracted for the failed stripes
+    rep = r2.deployments[0].report
+    assert rep.bytes_delta_fetched == \
+        r2.node_traffic["edge-1"].bytes_total
+
+
+def test_byzantine_peers_cannot_break_accounting_identity(service, pb):
+    """The headline chaos invariant at K=25% liars: every build converges,
+    zero corrupt chunks commit, and per-node bytes_total still equals the
+    builds' bytes_delta_fetched sum (corrupt bytes are discarded, never
+    double-counted)."""
+    fleet, topo, cloud, edges = _byzantine_fleet(service, 4, [])
+    cir = _smoke_cir(pb)
+    r1 = fleet.deploy(cir, [cloud, edges[0]])
+    assert r1.ok
+    fleet.mark_byzantine(["edge-0"])          # 1 of 4 edges lies: 25%
+    r2 = fleet.deploy(cir, edges[1:])
+    assert r2.ok and r2.n_failed == 0
+    assert r2.corrupt_chunks_total > 0
+    # delta <= fetched per build, and the fleet identity holds exactly
+    for d in r2.deployments:
+        assert d.report.bytes_delta_fetched <= d.report.bytes_fetched
+    assert sum(t.bytes_total for t in r2.node_traffic.values()) == \
+        r2.bytes_delta_total
+    # corrupt bytes are a separate column, not part of the peer bytes
+    assert r2.corrupt_bytes_total > 0
+    assert r2.bytes_peer_total + r2.bytes_upstream_total == \
+        r2.bytes_delta_total
+    # the liar converged to fleet-wide quarantine...
+    assert r2.quarantined_nodes == ["edge-0"]
+    assert fleet.quarantine.quarantined_at["edge-0"] > 0.0
+    # ...and a fresh deploy no longer touches it at all
+    extra = dataclasses.replace(cpu_smoke(), platform_id="edge-host-extra")
+    topo.place(extra.platform_id, "edge-1")
+    r3 = fleet.deploy(cir, [extra])
+    assert r3.ok and r3.corrupt_chunks_total == 0
+    assert "edge-0" not in r3.node_traffic["edge-1"].peer_sources
+
+
+def test_verify_receipts_off_restores_trusting_behaviour(service, pb):
+    """verify_receipts=False is the pre-§12 fleet: the tamper hook never
+    runs, nothing is rejected (the opt-out that shows the default is the
+    protection)."""
+    topo, cloud, edges = _fanout(2)
+    fleet = FleetDeployer(service, topology=topo, verify_receipts=False)
+    cir = _smoke_cir(pb)
+    r1 = fleet.deploy(cir, [cloud, edges[0]])
+    assert r1.ok
+    fleet.mark_byzantine(["edge-0"])
+    r2 = fleet.deploy(cir, [edges[1]])
+    assert r2.ok
+    assert r2.corrupt_chunks_total == 0       # nobody checked
+    assert r2.quarantined_nodes == []
+
+
+def test_chunk_integrity_error_is_peer_transfer_error():
+    e = ChunkIntegrityError("liar", ["c1", "c2"], 128)
+    from repro.deploy import PeerTransferError
+    assert isinstance(e, PeerTransferError)
+    assert e.src == "liar" and e.corrupt_ids == ["c1", "c2"]
+    assert e.corrupt_bytes == 128
