@@ -34,8 +34,10 @@ SCALE = "BENCH_scale.json"
 COLDSTART = "BENCH_coldstart.json"
 PLACEMENT = "BENCH_placement.json"
 INTEGRITY = "BENCH_integrity.json"
+HETERO = "BENCH_hetero.json"
+CROSSPLATFORM = "BENCH_crossplatform.json"
 BASELINES = (FETCH, PIPELINE, DISTRIBUTION, CHURN, SCALE, COLDSTART,
-             PLACEMENT, INTEGRITY)
+             PLACEMENT, INTEGRITY, HETERO, CROSSPLATFORM)
 
 
 @dataclasses.dataclass
@@ -105,8 +107,8 @@ def _load(path: str) -> Optional[Dict]:
 
 def run_fresh(out_dir: str) -> Dict[str, Dict]:
     """Re-run the smoke benchmarks, writing their JSON into ``out_dir``."""
-    from . import build_time, churn, coldstart, distribution, integrity, \
-        placement, scale
+    from . import build_time, churn, coldstart, cross_platform, \
+        distribution, hetero, integrity, placement, scale
 
     print("== re-running smoke benchmarks (this is the gate's evidence) ==")
     delta = build_time.delta_redeploy(quiet=True)
@@ -140,10 +142,17 @@ def run_fresh(out_dir: str) -> Dict[str, Dict]:
         sbom_path=os.path.join(out_dir, "SBOM_smoke.json"))
     integ_path = integrity.write_bench_integrity(
         path=os.path.join(out_dir, INTEGRITY), smoke=True, rows=integ_rows)
+    het_rows = hetero.collect(smoke=True, quiet=True)
+    het_path = hetero.write_bench_hetero(
+        path=os.path.join(out_dir, HETERO), smoke=True, rows=het_rows)
+    xp_rows = cross_platform.collect(smoke=True, quiet=True)
+    xp_path = cross_platform.write_bench_crossplatform(
+        path=os.path.join(out_dir, CROSSPLATFORM), smoke=True, rows=xp_rows)
     return {FETCH: _load(fetch_path), PIPELINE: _load(pipe_path),
             DISTRIBUTION: _load(dist_path), CHURN: _load(churn_path),
             SCALE: _load(scale_path), COLDSTART: _load(cold_path),
-            PLACEMENT: _load(place_path), INTEGRITY: _load(integ_path)}
+            PLACEMENT: _load(place_path), INTEGRITY: _load(integ_path),
+            HETERO: _load(het_path), CROSSPLATFORM: _load(xp_path)}
 
 
 def build_checks(base: Dict[str, Optional[Dict]],
@@ -255,6 +264,27 @@ def build_checks(base: Dict[str, Optional[Dict]],
     add(INTEGRITY, ["chaos", "quarantined"], True, 0.0, abs_limit=1.0)
     add(INTEGRITY, ["attestation", "tamper_rejected"], True, 0.0,
         abs_limit=1.0)
+
+    # -- performance-portable hetero fleet: virtual-time, deterministic --
+    # the §13 split must keep eliminating >= 50% of the cross-platform
+    # compiled wire (the benchmark's own floor; the gate holds the
+    # committed margin on top)
+    add(HETERO, ["split", "wire_reduction_pct"], True, 0.10,
+        abs_limit=50.0)
+    add(HETERO, ["split", "accounting_identical"], True, 0.0,
+        abs_limit=1.0)
+    # the shared IR must be lowered exactly once fleet-wide — a second
+    # published copy means the sharing path collapsed
+    add(HETERO, ["ir_once", "ir_published_copies"], False, 0.0,
+        abs_limit=1.0)
+    add(HETERO, ["identity", "ir_columns_zero_when_off"], True, 0.0,
+        abs_limit=1.0)
+
+    # -- paper §5.3 cross-platform deploys: deterministic cost model -----
+    add(CROSSPLATFORM, ["summary", "avg_reduction_pct"], True, 0.10,
+        abs_limit=60.0)
+    add(CROSSPLATFORM, ["summary", "distinct_variant_sets"], True, 0.0,
+        abs_limit=4.0)
     return checks
 
 

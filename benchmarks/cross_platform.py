@@ -2,11 +2,17 @@
 
 The conventional baseline needs one image per platform (4 builds); CIR
 needs one pre-build and four lazy-builds that each pick platform-fitted
-variants."""
+variants.
+
+Writes ``BENCH_crossplatform.json`` (CI artifact + regression-gate
+baseline; see ``benchmarks.check_regression``)."""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.configs import ARCHS
 from repro.core import (cpu_smoke, gpu_server, tpu_multi_pod,
@@ -14,6 +20,12 @@ from repro.core import (cpu_smoke, gpu_server, tpu_multi_pod,
 
 from .common import (MBPS, conventional_for, csv_row, fresh_builder,
                      lazy_deploy_time)
+
+ARCH = "gemma2-9b"
+# Paper §5.3 reports 78.7% average build-time reduction vs per-platform
+# conventional builds; the gate holds the floor well below the paper's
+# figure but far above noise.
+CROSSPLATFORM_MIN_REDUCTION_PCT = 60.0
 
 PLATFORMS = {
     "cpu-server": cpu_smoke,
@@ -23,7 +35,7 @@ PLATFORMS = {
 }
 
 
-def run(arch_id: str = "gemma2-9b", bw_mbps: float = 500.0,
+def run(arch_id: str = ARCH, bw_mbps: float = 500.0,
         quiet: bool = False) -> Dict[str, Dict]:
     bw = bw_mbps * MBPS
     lb, pb = fresh_builder(bw_mbps)
@@ -61,16 +73,70 @@ def run(arch_id: str = "gemma2-9b", bw_mbps: float = 500.0,
     return rows
 
 
-def main() -> List[str]:
-    rows = run(quiet=True)
+def _metrics(rows: Dict[str, Dict]) -> Dict[str, float]:
     avg = sum(100 * (1 - r["lazy_s"] / r["conv_s"])
               for r in rows.values()) / len(rows)
     distinct = len({tuple(sorted(r["picks"].items()))
                     for r in rows.values()})
+    assert avg >= CROSSPLATFORM_MIN_REDUCTION_PCT, \
+        f"avg build-time reduction only {avg:.1f}% " \
+        f"(floor {CROSSPLATFORM_MIN_REDUCTION_PCT:.0f}%)"
+    assert distinct == len(rows), \
+        "platforms did not pick distinct variant sets"
+    return {"avg_reduction_pct": avg,
+            "distinct_variant_sets": float(distinct),
+            "n_platforms": float(len(rows))}
+
+
+def collect(smoke: bool = False, quiet: bool = False,
+            service=None) -> Dict[str, Dict]:
+    """The §5.3 sweep as a gated phase; smoke changes nothing (the run is
+    already a single deterministic pass per platform) and ``service`` is
+    accepted for uniformity with the other modules (the sweep builds its
+    own per-platform nodes)."""
+    rows = run(quiet=quiet)
+    return {"platforms": rows, "summary": _metrics(rows)}
+
+
+def write_bench_crossplatform(path: Optional[str] = None,
+                              smoke: bool = False,
+                              rows: Optional[Dict] = None) -> str:
+    """Record the §5.3 cross-platform trajectory (CI artifact + the
+    committed regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_CROSSPLATFORM_PATH",
+                                  "BENCH_crossplatform.json")
+    if rows is None:
+        rows = collect(smoke=smoke, quiet=True)
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "arch": ARCH,
+            "min_reduction_pct": CROSSPLATFORM_MIN_REDUCTION_PCT,
+        },
+        "summary": rows["summary"],
+        "platforms": {
+            name: {k: v for k, v in r.items() if k != "picks"}
+            for name, r in rows["platforms"].items()
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = collect(smoke=smoke, quiet=True)
+    write_bench_crossplatform(smoke=smoke, rows=rows)
+    s = rows["summary"]
     return [csv_row("cross_platform.s5_3", 0.0,
-                    f"avg_reduction={avg:.1f}%;distinct_variant_sets="
-                    f"{distinct}/4")]
+                    f"avg_reduction={s['avg_reduction_pct']:.1f}%;"
+                    f"distinct_variant_sets="
+                    f"{s['distinct_variant_sets']:.0f}/"
+                    f"{s['n_platforms']:.0f}")]
 
 
 if __name__ == "__main__":
-    run()
+    smoke = "--smoke" in sys.argv
+    rows = collect(smoke=smoke)
+    out = write_bench_crossplatform(smoke=smoke, rows=rows)
+    print(f"wrote {out}")

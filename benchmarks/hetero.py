@@ -1,0 +1,253 @@
+"""Performance-portable CIR on a heterogeneous fleet (docs §13).
+
+A mixed fleet (cpu-host + gpu + tpu edges behind one cloud seed) deploying
+one CIR used to re-ship a monolithic compiled executable per platform
+class — 24 MiB + 8 MiB/entry each — even though most of those bytes are
+the platform-neutral program, identical across classes.  The §13 split
+publishes one shared ``manager="ir"`` module (lowered once fleet-wide)
+plus small per-platform artifact *tails* and Pallas autotune tables, all
+over the ordinary peer chunk path.  All timings are **virtual** seconds
+on the simulated transport, so the benchmark is deterministic.  Phases:
+
+  * *cross-platform split* — warm cloud precompiles all three platform
+    classes; each edge's re-deploy then moves only its tail + autotune.
+    The compiled-artifact wire across the fleet must shrink by
+    ``>= HETERO_MIN_REDUCTION_PCT`` vs the monolithic baseline, with the
+    resolved-content byte accounting **identical** in both modes;
+  * *IR shared once* — no warm: the first cold edge lowers and publishes
+    the IR exactly once; every other platform class peer-fetches it.
+    Tails never cross platform-class boundaries (each class compiles its
+    own);
+  * *byte identical* — with the split disabled every §13 column is zero
+    and every per-node byte column matches the pre-§13 build exactly:
+    the split re-labels bytes, it never smuggles or invents them.
+
+Writes ``BENCH_hetero.json`` (CI artifact + regression-gate baseline;
+see ``benchmarks.check_regression``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs import ARCHS
+from repro.core import (PreBuilder, SimNetwork, catalog, cpu_smoke,
+                        gpu_server, tpu_single_pod)
+from repro.deploy import FleetDeployer, FleetTopology
+
+from .common import csv_row
+
+ARCH = "starcoder2-3b"
+HETERO_MIN_REDUCTION_PCT = 50.0   # cross-platform compiled wire eliminated
+PLATFORM_CLASSES = ("cpu", "gpu", "tpu")
+
+
+def _fleet(service, ir_components: bool):
+    """Cloud seed + one edge per platform class on the virtual clock.
+    Sequential workers + no overlap: virtual timings are exact replays."""
+    topo = FleetTopology.hetero_edge(PLATFORM_CLASSES)
+    cloud = dataclasses.replace(tpu_single_pod(), platform_id="cloud-seed")
+    mk = {"cpu": cpu_smoke, "gpu": gpu_server, "tpu": tpu_single_pod}
+    edges = {p: dataclasses.replace(mk[p](), platform_id=f"{p}-edge-host")
+             for p in PLATFORM_CLASSES}
+    topo.place(cloud.platform_id, "cloud")
+    for p, s in edges.items():
+        topo.place(s.platform_id, f"{p}-edge")
+    net = SimNetwork(topo)
+    fd = FleetDeployer(service, topology=topo, simnet=net,
+                       max_workers=1, fetch_workers=1, overlap=False,
+                       ir_components=ir_components)
+    return net, fd, cloud, edges
+
+
+def _deploy_edges(service, ir: bool, warm: bool) -> Tuple:
+    """One warm-or-cold hetero rollout; returns (fleet result, deployer)."""
+    cir = PreBuilder(service).prebuild(ARCHS[ARCH], entrypoint="serve")
+    net, fd, cloud, edges = _fleet(service, ir_components=ir)
+    specs = [edges[p] for p in PLATFORM_CLASSES]
+    if warm:
+        assert fd.warm(cir, specs, precompile=True) == len(specs)
+    res = fd.deploy(cir, specs, assemble=True, compile_steps=True)
+    assert res.ok, res.summary()
+    return res, fd
+
+
+def cross_platform_split(service=None, quiet: bool = False
+                         ) -> Dict[str, float]:
+    """Warm cloud precompiles all three classes; each edge re-deploy then
+    moves only its platform tail + autotune table instead of the whole
+    monolithic executable — >= 50% of the compiled wire eliminated, with
+    resolved-content accounting identical in both modes."""
+    service = service or catalog.build_service()
+    off, _ = _deploy_edges(service, ir=False, warm=True)
+    on, _ = _deploy_edges(service, ir=True, warm=True)
+    for res in (off, on):
+        assert res.compile_cache_hits_total == len(PLATFORM_CLASSES), \
+            res.summary()
+    # the split must never change WHAT a node resolves and fetches — only
+    # how the compiled bytes that ride on top are labeled and shipped
+    for nid, t_off in off.node_traffic.items():
+        t_on = on.node_traffic[nid]
+        assert t_off.bytes_total == t_on.bytes_total, nid
+        assert t_off.bytes_from_upstream == t_on.bytes_from_upstream, nid
+    mono_wire = off.artifact_bytes_fetched_total
+    split_wire = sum(t.platform_tail_bytes + t.ir_shared_bytes
+                     for t in on.node_traffic.values())
+    assert mono_wire > 0 and split_wire > 0
+    reduction = 100.0 * (1.0 - split_wire / mono_wire)
+    assert reduction >= HETERO_MIN_REDUCTION_PCT, \
+        f"split only eliminated {reduction:.1f}% of the compiled wire " \
+        f"(floor {HETERO_MIN_REDUCTION_PCT:.0f}%): monolithic " \
+        f"{mono_wire / 2**20:.1f} MiB vs split {split_wire / 2**20:.1f} MiB"
+    row = {
+        "monolithic_wire_mib": mono_wire / 2**20,
+        "split_wire_mib": split_wire / 2**20,
+        "wire_reduction_pct": reduction,
+        "redeploy_virtual_s_off": off.sim_elapsed_s,
+        "redeploy_virtual_s_on": on.sim_elapsed_s,
+        "accounting_identical": 1.0,
+    }
+    if not quiet:
+        print(f"-- cross-platform split ({ARCH} serve, "
+              f"{len(PLATFORM_CLASSES)} classes): monolithic "
+              f"{row['monolithic_wire_mib']:.1f} MiB vs tails "
+              f"{row['split_wire_mib']:.2f} MiB on the wire "
+              f"(-{reduction:.1f}%), accounting identical")
+    return row
+
+
+def ir_shared_once(service=None, quiet: bool = False) -> Dict[str, float]:
+    """Cold hetero rollout, no warm: the first edge lowers + publishes the
+    shared IR exactly once; the other platform classes peer-fetch it and
+    compile only their own tails (which never cross class boundaries)."""
+    service = service or catalog.build_service()
+    res, fd = _deploy_edges(service, ir=True, warm=False)
+    reports = [d.report for d in res.deployments]
+    assert all(r.ir_enabled for r in reports)
+    # exactly one lowering fleet-wide: one node published IR bytes, and
+    # they sum to a single module
+    publishers = [r for r in reports if r.ir_bytes_published > 0]
+    assert len(publishers) == 1, \
+        f"{len(publishers)} nodes lowered the IR (want 1)"
+    ir_size = publishers[0].ir_bytes_published
+    assert res.ir_bytes_published_total == ir_size
+    ir_peers = [t for t in res.node_traffic.values()
+                if t.ir_shared_bytes > 0]
+    assert len(ir_peers) == len(PLATFORM_CLASSES) - 1
+    assert all(t.ir_shared_bytes == ir_size for t in ir_peers)
+    # no cache crosses platform classes: every class compiles its own tail
+    assert all(not r.compile_cache_hit and r.artifact_bytes_published > 0
+               for r in reports)
+    assert res.artifact_bytes_fetched_total == 0
+    row = {
+        "ir_published_copies": float(res.ir_bytes_published_total / ir_size),
+        "ir_module_mib": ir_size / 2**20,
+        "ir_peer_nodes": float(len(ir_peers)),
+        "tails_published": float(sum(r.artifact_bytes_published > 0
+                                     for r in reports)),
+        "cold_virtual_s": res.sim_elapsed_s,
+    }
+    if not quiet:
+        print(f"-- IR shared once: {row['ir_module_mib']:.0f} MiB module "
+              f"lowered once, peer-fetched by {len(ir_peers)} other "
+              f"class(es); {row['tails_published']:.0f} per-class tails "
+              f"compiled locally")
+    return row
+
+
+def byte_identical(service=None, quiet: bool = False) -> Dict[str, float]:
+    """With ``ir_components`` off, every §13 report column is zero and the
+    whole per-node report matches the pre-§13 build field-for-field."""
+    service = service or catalog.build_service()
+    off, _ = _deploy_edges(service, ir=False, warm=False)
+    on, _ = _deploy_edges(service, ir=True, warm=False)
+    for d in off.deployments:
+        r = d.report
+        assert not r.ir_enabled
+        assert r.ir_shared_bytes == r.ir_bytes_published == 0
+        assert r.platform_tail_bytes == 0
+        assert r.autotune_bytes_fetched == r.autotune_bytes_published == 0
+    for nid, t in off.node_traffic.items():
+        assert t.ir_shared_bytes == t.platform_tail_bytes == 0, nid
+        assert t.ir_chunks_from_peers == 0, nid
+    # resolved content is untouched by the split in EITHER mode
+    for d_off, d_on in zip(off.deployments, on.deployments):
+        for f in ("bytes_fetched", "bytes_delta_fetched", "chunks_hit",
+                  "chunks_missed", "cache_hits", "cache_misses",
+                  "n_components", "n_compiled", "bytes_total_components"):
+            assert getattr(d_off.report, f) == getattr(d_on.report, f), f
+    assert off.bytes_delta_total == on.bytes_delta_total
+    row = {
+        "accounting_identical": 1.0,
+        "ir_columns_zero_when_off": 1.0,
+        "bytes_delta_mib": off.bytes_delta_total / 2**20,
+    }
+    if not quiet:
+        print(f"-- byte identical: split off == pre-§13 build "
+              f"({row['bytes_delta_mib']:.1f} MiB resolved delta in both "
+              f"modes, every §13 column zero when off)")
+    return row
+
+
+def write_bench_hetero(path: Optional[str] = None,
+                       smoke: bool = False,
+                       rows: Optional[Dict] = None) -> str:
+    """Record the heterogeneous-fleet trajectory (CI artifact + the
+    committed regression-gate baseline)."""
+    path = path or os.environ.get("BENCH_HETERO_PATH", "BENCH_hetero.json")
+    if rows is None:
+        rows = collect(smoke=smoke, quiet=True)
+    payload = {
+        "config": {
+            "smoke": smoke,
+            "arch": ARCH,
+            "platform_classes": list(PLATFORM_CLASSES),
+            "hetero_min_reduction_pct": HETERO_MIN_REDUCTION_PCT,
+        },
+        "split": rows["split"],
+        "ir_once": rows["ir_once"],
+        "identity": rows["identity"],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    return path
+
+
+def collect(smoke: bool = False, quiet: bool = False,
+            service=None) -> Dict[str, Dict]:
+    """All phases; the deterministic fleet is already small, so smoke
+    changes nothing — every assertion IS the claim under test."""
+    service = service or catalog.build_service()
+    return {
+        "split": cross_platform_split(service, quiet=quiet),
+        "ir_once": ir_shared_once(service, quiet=quiet),
+        "identity": byte_identical(service, quiet=quiet),
+    }
+
+
+def main(smoke: bool = False) -> List[str]:
+    rows = collect(smoke=smoke, quiet=True)
+    write_bench_hetero(smoke=smoke, rows=rows)
+    sp, ir = rows["split"], rows["ir_once"]
+    return [
+        csv_row(
+            "hetero.cross_platform_split", 0.0,
+            f"mono={sp['monolithic_wire_mib']:.1f}MiB;"
+            f"split={sp['split_wire_mib']:.2f}MiB;"
+            f"reduction={sp['wire_reduction_pct']:.1f}%"),
+        csv_row(
+            "hetero.ir_shared_once", 0.0,
+            f"ir={ir['ir_module_mib']:.0f}MiB;"
+            f"copies={ir['ir_published_copies']:.0f};"
+            f"peers={ir['ir_peer_nodes']:.0f}"),
+    ]
+
+
+if __name__ == "__main__":
+    smoke = "--smoke" in sys.argv
+    rows = collect(smoke=smoke)
+    out = write_bench_hetero(smoke=smoke, rows=rows)
+    print(f"wrote {out}")

@@ -15,10 +15,11 @@ import traceback
 
 def main(smoke: bool = False) -> None:
     from . import (bandwidth, build_time, churn, coldstart, cross_platform,
-                   distribution, image_size, placement, roofline, scale,
-                   sharing)
+                   distribution, hetero, image_size, placement, roofline,
+                   scale, sharing)
     mods = [image_size, build_time, bandwidth, cross_platform, sharing,
-            distribution, churn, scale, coldstart, placement, roofline]
+            distribution, churn, scale, coldstart, placement, hetero,
+            roofline]
     print("name,us_per_call,derived")
     failures = 0
     for mod in mods:

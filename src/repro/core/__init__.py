@@ -29,7 +29,10 @@ from .orchestrator import (STAGES, BuildGraph,  # noqa: F401
 from .compilecache import (COMPILED_MANAGER, COMPILE_VERSION_SALT,  # noqa: F401
                            CompileCache, CompileCacheStats,
                            CompiledArtifact, artifact_component,
-                           compile_cache_key)
+                           compile_cache_key, legacy_compile_cache_key)
+from .irmodule import (AUTOTUNE_MANAGER, IR_MANAGER,  # noqa: F401
+                       IR_VERSION_SALT, autotune_component,
+                       ir_module_component, ir_module_digest)
 from .lazybuild import (BuildPlan, BuildPlanCache, BuildReport,  # noqa: F401
                         ComponentBundle, ContainerInstance, FetchEngine,
                         LazyBuilder, Lockfile, PlanCacheStats,

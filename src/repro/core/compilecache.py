@@ -38,6 +38,9 @@ from collections import OrderedDict
 from typing import Dict, Optional, Sequence, Tuple
 
 from .component import UniformComponent
+from .irmodule import (PROGRAM_MANAGERS, TAIL_BYTES_BASE,  # noqa: F401
+                       TAIL_BYTES_PER_ENTRY, ir_module_digest,
+                       partition_plan_digest)
 
 # Manager namespace for compiled executables.  Never resolved from a CIR
 # dependency closure — artifact components are created by the compile
@@ -46,12 +49,10 @@ COMPILED_MANAGER = "compiled"
 
 # Version salt folded into every cache key: bump when the artifact format
 # or the key derivation changes so stale executables can never false-hit.
-COMPILE_VERSION_SALT = "cir-xla-exec-v1"
-
-# The staged program is a pure function of the assemble-gated pins (model
-# topology, runtime step closures, kernels, parallelism plan, data
-# pipeline) — the same managers BuildGraph gates the assemble stage on.
-PROGRAM_MANAGERS = ("model", "runtime", "kernel", "parallel", "data")
+# v2: the program identity is the real IR module digest (doc §13), no
+# longer the lock-digest proxy — v1 keys must never alias v2 entries.
+COMPILE_VERSION_SALT = "cir-xla-exec-v2"
+LEGACY_COMPILE_VERSION_SALT = "cir-xla-exec-v1"
 
 # Deterministic cost/size model for the executable.  Real XLA compiles of
 # multi-billion-parameter programs take tens of seconds; the discrete-event
@@ -65,13 +66,38 @@ ARTIFACT_BYTES_PER_ENTRY = 8 * 2 ** 20     # per staged step function
 def compile_cache_key(lock, spec, entry_names: Sequence[str]) -> str:
     """Derive the fleet-wide cache key for a compiled executable.
 
-    Digest inputs (doc §10): the *program* — sorted digests of the
-    lockfile's assemble-gated pins plus the staged entrypoint names (a
-    proxy for the HLO/StableHLO module digest); the *platform class* —
-    chip, mesh shape/axes, backend and kernel-interpret mode, deliberately
-    excluding ``platform_id`` so same-class nodes share; and the *version
-    salt* — the spec's jax version plus :data:`COMPILE_VERSION_SALT`.
+    Digest inputs (doc §10, §13): the *program* — the real IR module
+    digest (:func:`repro.core.irmodule.ir_module_digest`, derived from
+    the lock closure, so semantically identical programs resolved from
+    different catalogs share compiled artifacts); the *platform class* —
+    chip, mesh shape/axes, backend, kernel-interpret mode and the
+    platform-selected partition plan, deliberately excluding
+    ``platform_id`` so same-class nodes share; and the *version salt* —
+    the spec's jax version plus :data:`COMPILE_VERSION_SALT`.
     """
+    blob = json.dumps({
+        "ir_module": ir_module_digest(lock, entry_names),
+        "platform": {
+            "chip": spec.chip.name,
+            "mesh_shape": list(spec.mesh_shape),
+            "mesh_axes": list(spec.mesh_axes),
+            "backend": spec.backend,
+            "interpret_kernels": spec.interpret_kernels,
+            "partition_plan": partition_plan_digest(lock),
+        },
+        "version": {"jax": spec.jax_version,
+                    "salt": COMPILE_VERSION_SALT},
+    }, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def legacy_compile_cache_key(lock, spec,
+                             entry_names: Sequence[str]) -> str:
+    """The pre-§13 (v1) key derivation: the lock-digest *proxy* for the
+    program identity.  Kept only as a compat shim so callers holding old
+    keys can recognise them — new cache entries are keyed exclusively by
+    :func:`compile_cache_key`, and the salt split guarantees a v1 key can
+    never alias (or leak into) a v2 entry."""
     program = sorted(
         d for (m, _n, _v, _e), d in zip(lock.pins, lock.digests)
         if m in PROGRAM_MANAGERS)
@@ -86,29 +112,38 @@ def compile_cache_key(lock, spec, entry_names: Sequence[str]) -> str:
             "interpret_kernels": spec.interpret_kernels,
         },
         "version": {"jax": spec.jax_version,
-                    "salt": COMPILE_VERSION_SALT},
+                    "salt": LEGACY_COMPILE_VERSION_SALT},
     }, sort_keys=True).encode()
     return hashlib.sha256(blob).hexdigest()
 
 
-def artifact_component(key: str,
-                       entry_names: Sequence[str]) -> UniformComponent:
+def artifact_component(key: str, entry_names: Sequence[str],
+                       tail: bool = False) -> UniformComponent:
     """The content-addressed carrier for one compiled executable.
 
     The key is the whole identity: every node of the platform class
     constructs a byte-identical component (and therefore identical chunk
     ids), which is what lets the executable flow over the ordinary
-    peer-to-peer chunk path.
+    peer-to-peer chunk path.  With ``tail=True`` the carrier holds only
+    the per-platform remainder of the split executable (doc §13) — the
+    platform-neutral majority lives in the shared ``manager="ir"``
+    module — sized so IR + tail equals the monolithic envelope.
     """
     names = tuple(sorted(entry_names))
+    if tail:
+        size = TAIL_BYTES_BASE + TAIL_BYTES_PER_ENTRY * len(names)
+        name = f"xla-tail-{key[:16]}"
+    else:
+        size = ARTIFACT_BYTES_BASE + ARTIFACT_BYTES_PER_ENTRY * len(names)
+        name = f"xla-exec-{key[:16]}"
     return UniformComponent(
         manager=COMPILED_MANAGER,
-        name=f"xla-exec-{key[:16]}",
+        name=name,
         version="1.0",
         env="any",
-        context={"compile_key": key, "entries": list(names)},
+        context={"compile_key": key, "entries": list(names), "tail": tail},
         payload="",
-        size_bytes=ARTIFACT_BYTES_BASE + ARTIFACT_BYTES_PER_ENTRY * len(names),
+        size_bytes=size,
     )
 
 
@@ -116,11 +151,14 @@ def artifact_component(key: str,
 class CompiledArtifact:
     """One cached executable: the key, its carrier component, and what the
     original compile cost (virtual seconds) so reports can say what a hit
-    saved."""
+    saved.  Under the §13 split the carrier is the platform tail and
+    ``autotune`` names the Pallas autotune-table component that rides
+    with it (``None`` for monolithic v1-style artifacts)."""
     key: str
     component: UniformComponent
     entry_names: Tuple[str, ...]
     compile_s: float = 0.0
+    autotune: Optional[UniformComponent] = None
 
 
 @dataclasses.dataclass

@@ -1,0 +1,166 @@
+"""Platform-neutral IR modules + per-platform artifact tails (doc §13).
+
+The compile cache (``repro.core.compilecache``) amortizes the XLA compile
+*within* a platform class, but the cache key it derived until now was a
+lock-digest proxy for the program — and the executable it shipped was a
+monolithic blob, so a heterogeneous fleet (cpu-host + gpu + tpu deploying
+one CIR) re-shipped bytes that are actually platform-neutral.  This
+module makes the performance-portable split explicit:
+
+* :func:`ir_module_digest` is the real program identity: a digest over
+  the lock closure's assemble-gated pins plus the staged entry set —
+  deliberately **platform-free** (no chip, mesh, backend or jax version),
+  so semantically identical programs resolved from different catalogs or
+  deployed to different platform classes share one IR module.
+* :func:`ir_module_component` wraps that digest as a ``manager="ir"``
+  component — the StableHLO-like module, chunk-distributed and
+  peer-sourced like any component.  It is derived deterministically from
+  the lock closure, so every node of *every* platform class constructs a
+  byte-identical carrier: the shared IR is lowered once fleet-wide and
+  only ever copied afterwards.
+* :func:`autotune_component` wraps a compile key's Pallas autotune table
+  as a small ``manager="autotune"`` component riding the same peer path.
+
+With the split on, the per-platform bytes a node fetches or builds are
+only the artifact *tail* (the platform-specific executable remainder,
+``TAIL_BYTES_*``) plus the autotune table; the platform-neutral majority
+of the old monolithic envelope (``IR_BYTES_*``) moves once per fleet
+instead of once per platform class.  The size/cost model keeps the
+monolithic envelope as the baseline: IR + tail == the §10 artifact
+envelope, and IR lowering + tail compile == the §10 compile cost, so the
+split changes *where* bytes and seconds land, never how many there are.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from typing import Sequence
+
+from .component import UniformComponent
+
+# Manager namespaces for the split.  Never resolved from a CIR dependency
+# closure — IR modules are derived by the compile stage from the lock
+# closure; autotune tables are produced next to the platform tail.
+IR_MANAGER = "ir"
+AUTOTUNE_MANAGER = "autotune"
+
+# Folded into every IR digest: bump when the IR serialization (the
+# modeled StableHLO bytecode format) changes so stale modules never
+# false-hit across an incompatible lowering.
+IR_VERSION_SALT = "cir-stablehlo-v1"
+
+# The staged program is a pure function of the assemble-gated pins (model
+# topology, runtime step closures, kernels, parallelism plan, data
+# pipeline) — the same managers BuildGraph gates the assemble stage on.
+PROGRAM_MANAGERS = ("model", "runtime", "kernel", "parallel", "data")
+
+# The *platform-neutral* subset: what the exported StableHLO module is
+# made of.  The ``parallel`` plan is deliberately excluded — partition
+# plans are selected per platform class (``tp`` on a single host,
+# ``fsdp-tp`` on a mesh), and like GSPMD partitioning they apply during
+# the platform lowering, not in the exported module.  The plan instead
+# feeds the *platform* side of the compile key
+# (:func:`partition_plan_digest`), so dropping it here can never cause a
+# cross-plan false hit on the compiled tail.
+IR_PROGRAM_MANAGERS = ("model", "runtime", "kernel", "data")
+
+# Size model (doc §13): the §10 monolithic envelope (24 MiB + 8 MiB per
+# entry) splits into a platform-neutral IR majority and a per-platform
+# tail; the two sum exactly to the monolithic sizes so the split is a
+# re-labeling of the same bytes, never a free lunch.
+IR_BYTES_BASE = 18 * 2 ** 20        # serialized StableHLO module envelope
+IR_BYTES_PER_ENTRY = 6 * 2 ** 20    # per staged step function
+TAIL_BYTES_BASE = 6 * 2 ** 20       # platform-specific executable remainder
+TAIL_BYTES_PER_ENTRY = 2 * 2 ** 20
+
+# Pallas autotune tables are small: block-size / pipeline choices per
+# kernel, keyed by the compile key (platform class included via the key).
+AUTOTUNE_BYTES_BASE = 128 * 2 ** 10
+AUTOTUNE_BYTES_PER_ENTRY = 64 * 2 ** 10
+
+# Cost model on the virtual clock: lowering to IR + compiling the tail
+# (+ autotuning) sums to the §10 monolithic compile cost (8 s/entry), so
+# a lone node pays the same either way — the fleet saves by sharing the
+# lowering, not by pretending compiles got cheaper.
+IR_LOWER_VIRTUAL_S_PER_ENTRY = 2.0
+TAIL_COMPILE_VIRTUAL_S_PER_ENTRY = 5.5
+AUTOTUNE_VIRTUAL_S_PER_ENTRY = 0.5
+
+
+def ir_module_digest(lock, entry_names: Sequence[str]) -> str:
+    """The real program identity: digest of the StableHLO-like module.
+
+    Derived deterministically from the lock closure — sorted digests of
+    the platform-neutral program pins (:data:`IR_PROGRAM_MANAGERS`) plus
+    the sorted staged entry set and the IR format salt.  Deliberately
+    excludes every platform input (chip, mesh, backend, jax version,
+    ``platform_id``, and the platform-selected partition plan): the
+    module is what the program *is*, before any platform lowers it.  Two
+    locks that pin the same program content — even when resolved from
+    different catalogs or for different platform classes — derive the
+    same digest and therefore share IR and compiled artifacts.
+    """
+    program = sorted(
+        d for (m, _n, _v, _e), d in zip(lock.pins, lock.digests)
+        if m in IR_PROGRAM_MANAGERS)
+    blob = json.dumps({
+        "program": program,
+        "entries": sorted(entry_names),
+        "salt": IR_VERSION_SALT,
+    }, sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+def partition_plan_digest(lock) -> str:
+    """Digest of the lock's partition-plan pins (the ``parallel``
+    manager).  Excluded from the IR identity — the plan is a platform-
+    class choice applied during lowering — and folded into the *platform*
+    side of the compile key instead, so two platform classes that share
+    an IR module but partition differently still compile distinct tails.
+    """
+    plan = sorted(
+        d for (m, _n, _v, _e), d in zip(lock.pins, lock.digests)
+        if m == "parallel")
+    return hashlib.sha256(json.dumps(plan).encode()).hexdigest()
+
+
+def ir_module_component(lock, entry_names: Sequence[str]) -> UniformComponent:
+    """The content-addressed carrier for one shared IR module.
+
+    The IR digest is the whole identity, so every node — of every
+    platform class — constructs a byte-identical component with identical
+    chunk ids; the module flows over the ordinary peer-to-peer chunk path
+    and is fetched (or lowered) once fleet-wide.
+    """
+    digest = ir_module_digest(lock, entry_names)
+    names = tuple(sorted(entry_names))
+    return UniformComponent(
+        manager=IR_MANAGER,
+        name=f"stablehlo-{digest[:16]}",
+        version="1.0",
+        env="any",
+        context={"ir_digest": digest, "entries": list(names)},
+        payload="",
+        size_bytes=IR_BYTES_BASE + IR_BYTES_PER_ENTRY * len(names),
+    )
+
+
+def autotune_component(key: str, spec,
+                       entry_names: Sequence[str]) -> UniformComponent:
+    """The Pallas autotune table for one compiled platform tail.
+
+    Keyed by the compile key (which already folds in the platform class),
+    so tables never cross platform-class boundaries but are shared — like
+    the tail itself — between same-class nodes.
+    """
+    names = tuple(sorted(entry_names))
+    return UniformComponent(
+        manager=AUTOTUNE_MANAGER,
+        name=f"autotune-{key[:16]}",
+        version="1.0",
+        env="any",
+        context={"compile_key": key, "chip": spec.chip.name,
+                 "entries": list(names)},
+        payload="",
+        size_bytes=AUTOTUNE_BYTES_BASE + AUTOTUNE_BYTES_PER_ENTRY * len(names),
+    )

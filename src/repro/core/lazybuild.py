@@ -41,6 +41,10 @@ from .compilecache import (COMPILE_VIRTUAL_S_PER_ENTRY, CompileCache,
 from .component import UniformComponent
 from .integrity import (Attestation, AttestationError, Signer, make_sbom,
                         attest as _sign_manifest, verify_attestation)
+from .irmodule import (AUTOTUNE_VIRTUAL_S_PER_ENTRY,
+                       IR_LOWER_VIRTUAL_S_PER_ENTRY,
+                       TAIL_COMPILE_VIRTUAL_S_PER_ENTRY,
+                       autotune_component, ir_module_component)
 from .orchestrator import (BuildGraph, BuildOrchestrator, ComponentReadiness,
                            Lifecycle)
 from .registry import RegistryError, UniformComponentService
@@ -332,6 +336,16 @@ class BuildReport:
     artifact_bytes_fetched: int = 0  # compiled-artifact wire bytes (peers)
     artifact_chunks_fetched: int = 0
     artifact_bytes_published: int = 0  # locally-compiled bytes stored
+    # -- performance-portable IR columns (core/irmodule.py, docs §13) --------
+    # Accounted exactly like artifacts: never in the resolved-content
+    # columns, so with the split disabled every column below is zero and
+    # the whole report is byte-identical to a pre-§13 build.
+    ir_enabled: bool = False         # builder ran with the IR split on
+    ir_shared_bytes: int = 0         # shared-IR bytes sourced (store/peers)
+    ir_bytes_published: int = 0      # IR lowered locally + published
+    platform_tail_bytes: int = 0     # per-platform bytes (tail + autotune)
+    autotune_bytes_fetched: int = 0  # autotune-table wire bytes (peers)
+    autotune_bytes_published: int = 0
     # -- trust & integrity columns (core/integrity.py, docs §12) -------------
     attestation_verified: bool = False  # signed manifest checked at plan time
 
@@ -746,7 +760,8 @@ class LazyBuilder:
                  fetch_transport: Optional[Any] = None,
                  compile_cache: Optional[CompileCache] = None,
                  signer: Optional[Signer] = None,
-                 require_attestation: bool = False):
+                 require_attestation: bool = False,
+                 ir_components: bool = False):
         self.service = service
         # manifest-attestation policy (docs §12): a signer makes this
         # builder able to verify (and mint) attestations; require_attestation
@@ -762,6 +777,11 @@ class LazyBuilder:
         # fleet-wide compiled-executable index (opt-in: None disables the
         # cache and the compile stage behaves exactly as before)
         self.compile_cache = compile_cache
+        # performance-portable split (docs §13, opt-in): compile as a
+        # shared platform-neutral IR module plus a per-platform artifact
+        # tail + autotune table, instead of one monolithic executable.
+        # Off by default so every pre-§13 accounting identity holds.
+        self.ir_components = ir_components
         self.build_graph = build_graph if build_graph is not None \
             else BuildGraph()
         self.fetch_engine = FetchEngine(self.store, service,
@@ -869,6 +889,28 @@ class LazyBuilder:
                 report.compile_cache_hit = True
                 report.compile_skips += len(names)
                 cache.stats.compile_skips += len(names)
+                if self.ir_components:
+                    self._ingest_autotune(art, report)
+            elif self.ir_components:
+                # §13 split: the per-platform tail can only be lowered
+                # from the shared IR module, so the compile is gated on
+                # IR-readiness — fetch the module from the fleet or
+                # derive it locally before the tail compile may start
+                self._ensure_ir(inst.lock, names, report)
+                self._model_compile_cost(
+                    len(names), TAIL_COMPILE_VIRTUAL_S_PER_ENTRY)
+                auto = autotune_component(key, inst.spec, names)
+                art = CompiledArtifact(
+                    key=key,
+                    component=artifact_component(key, names, tail=True),
+                    entry_names=names,
+                    compile_s=TAIL_COMPILE_VIRTUAL_S_PER_ENTRY * len(names),
+                    autotune=auto)
+                self._publish_artifact(art, report)
+                self._model_compile_cost(
+                    len(names), AUTOTUNE_VIRTUAL_S_PER_ENTRY)
+                report.autotune_bytes_published += self._commit_local(auto)
+                cache.put(art)
             else:
                 # miss (or no reachable copy of the bytes): pay the
                 # platform compile, then publish the executable fleet-wide
@@ -879,6 +921,15 @@ class LazyBuilder:
                     compile_s=COMPILE_VIRTUAL_S_PER_ENTRY * len(names))
                 self._publish_artifact(art, report)
                 cache.put(art)
+            if self.ir_components:
+                report.ir_enabled = True
+                # every platform-specific byte this build moved or made:
+                # the tail executable plus its autotune table
+                report.platform_tail_bytes = (
+                    report.artifact_bytes_fetched
+                    + report.artifact_bytes_published
+                    + report.autotune_bytes_fetched
+                    + report.autotune_bytes_published)
 
         for name in names:
             out[name] = jax.jit(out[name])
@@ -886,7 +937,9 @@ class LazyBuilder:
         report.compile_s = time.perf_counter() - t0
         return out
 
-    def _model_compile_cost(self, n_entries: int) -> None:
+    def _model_compile_cost(self, n_entries: int,
+                            s_per_entry: float =
+                            COMPILE_VIRTUAL_S_PER_ENTRY) -> None:
         """Advance the virtual clock by the modeled XLA compile cost.
 
         Only the discrete-event transport observes it (wall-clock builds
@@ -895,38 +948,42 @@ class LazyBuilder:
         """
         tr = self.fetch_engine.transport
         if isinstance(tr, SimTransport):
-            tr.backoff(COMPILE_VIRTUAL_S_PER_ENTRY * n_entries)
+            tr.backoff(s_per_entry * n_entries)
 
-    def _ingest_artifact(self, art: CompiledArtifact,
-                         report: BuildReport) -> bool:
-        """Land a cached executable's bytes locally; False means recompile.
+    def _ingest_peer_component(self, comp: UniformComponent,
+                               stripe_method: str = "fetch_artifact_stripe"
+                               ) -> Optional[Tuple[int, int]]:
+        """Land a derived component's bytes locally, *peers only*.
 
-        Resident content is a free hit.  Missing chunks are sourced from
-        *peers only* — compiled artifacts are born on fleet nodes, the
-        upstream registry never stores them — through the same claim /
+        The shared body of every derived-component ingest (compiled
+        executables, §13 platform tails, IR modules, autotune tables):
+        resident content is a free hit; missing chunks are sourced from
+        linked peers only — derived components are born on fleet nodes,
+        the upstream registry never stores them — through the same claim /
         commit / abort singleflight protocol as every other component.
-        Artifact wire bytes land in ``report.artifact_bytes_fetched``,
-        never in the resolved-content columns.
+        ``stripe_method`` names the ``NodePeering`` transfer so each kind
+        lands in its own ``NodeTraffic`` columns.  Returns
+        ``(wire_bytes, chunks)`` — ``(0, 0)`` for resident content — or
+        ``None`` when no reachable copy exists.
         """
-        comp = art.component
         store = self.store
         if not isinstance(store, ChunkedComponentStore):
-            return store.has(comp)
+            return (0, 0) if store.has(comp) else None
         if store.has(comp) and not store.missing_chunks(comp):
-            return True
+            return (0, 0)
         peering = self.fetch_engine.peering
+        fetch = getattr(peering, stripe_method, None)
         plan = store.plan_fetch(comp)
+        fetched = (0, 0)
         try:
             if plan.claimed:
-                if peering is None or not peering.fetch_artifact_stripe(
-                        comp, plan.claimed):
+                if fetch is None or not fetch(comp, plan.claimed):
                     store.abort_chunks(plan.claimed, component=comp)
                     store.mark_incomplete(comp)
-                    return False
+                    return None
                 store.commit_chunks(plan.claimed, component=comp)
-                report.artifact_bytes_fetched += sum(
-                    ch.size for ch, _ev in plan.claimed)
-                report.artifact_chunks_fetched += len(plan.claimed)
+                fetched = (sum(ch.size for ch, _ev in plan.claimed),
+                           len(plan.claimed))
         except BaseException:
             store.abort_chunks(plan.claimed, component=comp)
             raise
@@ -934,33 +991,97 @@ class LazyBuilder:
             ev.wait(CLAIM_WAIT_TIMEOUT_S)
         if store.missing_chunks(comp):
             store.mark_incomplete(comp)
-            return False
+            return None
         if peering is not None:
             peering.announce_chunks(store.chunks_of(comp))
+        return fetched
+
+    def _ingest_artifact(self, art: CompiledArtifact,
+                         report: BuildReport) -> bool:
+        """Land a cached executable's bytes locally; False means recompile.
+
+        Artifact wire bytes land in ``report.artifact_bytes_fetched``,
+        never in the resolved-content columns.  A §13 platform tail
+        (``context["tail"]``) rides the tail stripe so ``NodeTraffic``
+        can additionally prove the bytes were platform-specific.
+        """
+        comp = art.component
+        method = "fetch_tail_stripe" if comp.context.get("tail") \
+            else "fetch_artifact_stripe"
+        res = self._ingest_peer_component(comp, method)
+        if res is None:
+            return False
+        report.artifact_bytes_fetched += res[0]
+        report.artifact_chunks_fetched += res[1]
         return True
 
-    def _publish_artifact(self, art: CompiledArtifact,
-                          report: BuildReport) -> None:
-        """Store the locally-compiled executable (a local ingest: no wire
-        bytes) and announce its chunks so peers can source it."""
-        comp = art.component
+    def _commit_local(self, comp: UniformComponent) -> int:
+        """Store a locally-produced component (a local ingest: no wire
+        bytes) and announce its chunks so peers can source it.  Returns
+        the bytes committed."""
         store = self.store
         if not isinstance(store, ChunkedComponentStore):
-            if store.put(comp):
-                report.artifact_bytes_published += comp.size_bytes
-            return
+            return comp.size_bytes if store.put(comp) else 0
         plan = store.plan_fetch(comp)
+        nbytes = 0
         try:
             if plan.claimed:
                 store.commit_chunks(plan.claimed, component=comp)
-                report.artifact_bytes_published += sum(
-                    ch.size for ch, _ev in plan.claimed)
+                nbytes = sum(ch.size for ch, _ev in plan.claimed)
         except BaseException:
             store.abort_chunks(plan.claimed, component=comp)
             raise
         peering = self.fetch_engine.peering
         if peering is not None:
             peering.announce_chunks(store.chunks_of(comp))
+        return nbytes
+
+    def _publish_artifact(self, art: CompiledArtifact,
+                          report: BuildReport) -> None:
+        """Store the locally-compiled executable and announce its chunks
+        so peers can source it."""
+        report.artifact_bytes_published += self._commit_local(art.component)
+
+    def _ensure_ir(self, lock: Lockfile, entry_names: Sequence[str],
+                   report: BuildReport) -> UniformComponent:
+        """The §13 IR-readiness gate: land the shared IR module locally.
+
+        Resident IR is a free hit; otherwise linked peers are tried first
+        (the module is lowered once fleet-wide and only ever copied
+        afterwards, riding ``NodePeering.fetch_ir_stripe``); only when no
+        reachable copy exists does this node pay the lowering cost and
+        publish the module for the rest of the fleet.  Shared-IR bytes
+        land in ``report.ir_shared_bytes`` / ``ir_bytes_published``,
+        never in the resolved-content columns.
+        """
+        comp = ir_module_component(lock, entry_names)
+        res = self._ingest_peer_component(comp, "fetch_ir_stripe")
+        if res is not None:
+            report.ir_shared_bytes += comp.size_bytes
+            return comp
+        self._model_compile_cost(len(entry_names),
+                                 IR_LOWER_VIRTUAL_S_PER_ENTRY)
+        report.ir_bytes_published += self._commit_local(comp)
+        return comp
+
+    def _ingest_autotune(self, art: CompiledArtifact,
+                         report: BuildReport) -> None:
+        """Land the restored tail's Pallas autotune table (§13).
+
+        Peer-first like the tail itself; when no peer still holds the
+        table the node re-tunes locally (a small virtual cost — tables
+        are cheap to regenerate, unlike compiles) and re-publishes.
+        """
+        auto = art.autotune
+        if auto is None:
+            return
+        res = self._ingest_peer_component(auto, "fetch_tail_stripe")
+        if res is not None:
+            report.autotune_bytes_fetched += res[0]
+            return
+        self._model_compile_cost(len(art.entry_names),
+                                 AUTOTUNE_VIRTUAL_S_PER_ENTRY)
+        report.autotune_bytes_published += self._commit_local(auto)
 
     # -- trust & integrity (core/integrity.py, docs §12) ----------------
     def _check_attestation(self, cir: CIR, lock: Lockfile,

@@ -164,17 +164,21 @@ class BuildGraph:
     The defaults encode the assembler's real data dependencies: the model
     family + runtime/data payloads (and the kernel/parallel variants they
     pull from the bundle) must be local before assemble; the platform env
-    must be proven before step compilation; weight assets gate only
-    first-weight-use (the COMPLETE stage), so a deployment is READY while
-    the tail still streams.  Managers named by no gate (e.g. ``opt``) gate
-    READY — deployable means everything but the declared tail is local.
+    must be proven before step compilation — as must the shared
+    ``manager="ir"`` module when the §13 performance-portable split is
+    on, since the per-platform tail is lowered *from* it (the compile
+    stage fetches or derives the IR before any tail compile starts);
+    weight assets gate only first-weight-use (the COMPLETE stage), so a
+    deployment is READY while the tail still streams.  Managers named by
+    no gate (e.g. ``opt``) gate READY — deployable means everything but
+    the declared tail is local.
     """
 
     def __init__(self,
                  assemble_managers: Sequence[str] = ("model", "runtime",
                                                      "kernel", "parallel",
                                                      "data"),
-                 compile_managers: Sequence[str] = ("env",),
+                 compile_managers: Sequence[str] = ("env", "ir"),
                  tail_managers: Sequence[str] = ("asset",)):
         self.assemble_managers: FrozenSet[str] = frozenset(assemble_managers)
         self.compile_managers: FrozenSet[str] = frozenset(compile_managers)

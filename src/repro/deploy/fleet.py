@@ -23,6 +23,7 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Set, Tuple
 from ..core.chunkstore import ChunkedComponentStore
 from ..core.cir import CIR
 from ..core.compilecache import CompileCache
+from ..core.irmodule import ir_module_component
 from ..core.lazybuild import (BuildPlanCache, BuildReport, ContainerInstance,
                               LazyBuilder)
 from ..core.registry import UniformComponentService
@@ -111,6 +112,12 @@ class FleetResult:
     compile_skips_total: int = 0          # step compiles skipped fleet-wide
     artifact_bytes_fetched_total: int = 0  # compiled-artifact peer wire
     artifact_bytes_published_total: int = 0  # freshly compiled bytes stored
+    # -- performance-portable IR columns (core/irmodule.py, docs §13) ----
+    # All zero (and their summary line absent) when the split is off, so
+    # every pre-§13 column stays byte-identical with it disabled.
+    ir_shared_bytes_total: int = 0        # shared-IR bytes sourced fleet-wide
+    ir_bytes_published_total: int = 0     # IR modules lowered + published
+    platform_tail_bytes_total: int = 0    # per-platform bytes (tail+autotune)
     # -- speculative-placement columns (PlacementPlanner, docs §11) ------
     # Window: since the end of the previous deploy() — pre-positioning
     # runs *between* deploys, and its hits land during this one.  All
@@ -197,6 +204,14 @@ class FleetResult:
                 f"{self.artifact_bytes_fetched_total / 2**20:.1f} MiB from "
                 f"peers / {self.artifact_bytes_published_total / 2**20:.1f} "
                 f"MiB published")
+        if self.ir_shared_bytes_total or self.ir_bytes_published_total or \
+                self.platform_tail_bytes_total:
+            lines.append(
+                f"  IR split: {self.ir_shared_bytes_total / 2**20:.1f} MiB "
+                f"shared IR sourced, "
+                f"{self.ir_bytes_published_total / 2**20:.1f} MiB lowered + "
+                f"published, platform tails "
+                f"{self.platform_tail_bytes_total / 2**20:.1f} MiB")
         if self.bytes_speculative or self.speculation_hit_bytes or \
                 self.speculation_wasted_bytes:
             lines.append(
@@ -326,7 +341,8 @@ class FleetDeployer:
                  simnet: Optional[SimNetwork] = None,
                  compile_cache: Optional[CompileCache] = None,
                  verify_receipts: bool = True,
-                 quarantine: Optional[Quarantine] = None):
+                 quarantine: Optional[Quarantine] = None,
+                 ir_components: bool = False):
         if eviction_policy not in EVICTION_POLICIES:
             raise ValueError(f"unknown eviction policy {eviction_policy!r} "
                              f"(one of {EVICTION_POLICIES})")
@@ -349,6 +365,10 @@ class FleetDeployer:
         # platform-class peer's hit (the bytes still move peer-to-peer)
         self.compile_cache = CompileCache() if compile_cache is None \
             else compile_cache
+        # performance-portable split (docs §13, opt-in): every node
+        # builder compiles a shared platform-neutral IR module plus a
+        # per-platform artifact tail instead of one monolithic executable
+        self.ir_components = ir_components
         self.max_workers = max_workers
         self.overlap = overlap
         self.topology = topology
@@ -386,7 +406,8 @@ class FleetDeployer:
                 plan_cache=self.plan_cache,
                 fetch_workers=fetch_workers,
                 fetch_simulate_bps=fetch_simulate_bps,
-                compile_cache=self.compile_cache)
+                compile_cache=self.compile_cache,
+                ir_components=ir_components)
             return
         if store is not None:
             raise ValueError(
@@ -423,7 +444,8 @@ class FleetDeployer:
                              fetch_workers=fetch_workers,
                              fetch_simulate_bps=None,
                              peering=peering,
-                             compile_cache=self.compile_cache)
+                             compile_cache=self.compile_cache,
+                             ir_components=ir_components)
             lb.readiness_listeners.append(peering.on_component_ready)
             self._node_stores[node_id] = st
             self._node_peerings[node_id] = peering
@@ -677,6 +699,11 @@ class FleetDeployer:
                                              for r in reports),
             artifact_bytes_published_total=sum(r.artifact_bytes_published
                                                for r in reports),
+            ir_shared_bytes_total=sum(r.ir_shared_bytes for r in reports),
+            ir_bytes_published_total=sum(r.ir_bytes_published
+                                         for r in reports),
+            platform_tail_bytes_total=sum(r.platform_tail_bytes
+                                          for r in reports),
             bytes_speculative=spec_delta[0],
             speculation_hit_bytes=spec_delta[1],
             speculation_wasted_bytes=spec_delta[2],
@@ -871,11 +898,21 @@ class FleetDeployer:
             # warmed content they accompany (overlap-then-release keeps the
             # original pin alive until the wider one is in place)
             arts = self.compile_cache.artifacts()
-            art_comps = {a.component.digest(): a.component
-                         for _spec, inst in insts
-                         if inst.compile_key is not None
-                         for a in [arts.get(inst.compile_key)]
-                         if a is not None}
+            art_comps: Dict[str, Any] = {}
+            for _spec, inst in insts:
+                if inst.compile_key is None:
+                    continue
+                art = arts.get(inst.compile_key)
+                if art is None:
+                    continue
+                art_comps[art.component.digest()] = art.component
+                if art.autotune is not None:
+                    art_comps[art.autotune.digest()] = art.autotune
+                if self.ir_components:
+                    # the shared IR module the tails were lowered from must
+                    # stay peer-sourceable exactly as long as the tails do
+                    ir = ir_module_component(inst.lock, art.entry_names)
+                    art_comps[ir.digest()] = ir
             if art_comps:
                 self._pin_warm(store, cir,
                                list(comps.values()) + list(art_comps.values()))

@@ -282,6 +282,37 @@ class FleetTopology:
                 topo.link(a, b, edge_edge_bps)
         return topo
 
+    @classmethod
+    def hetero_edge(cls, platform_classes: Sequence[str] = ("cpu", "gpu",
+                                                            "tpu"),
+                    cloud_id: str = "cloud",
+                    cloud_upstream_bps: float = 1.25e9,
+                    edge_upstream_bps: float = 6.25e6,
+                    cloud_edge_bps: float = 125e6,
+                    edge_edge_bps: float = 2.5e8,
+                    edge_capacity_bytes: Optional[int] = None,
+                    cloud_capacity_bytes: Optional[int] = None
+                    ) -> "FleetTopology":
+        """One cloud seed + one edge node per platform *class*: the
+        genuinely heterogeneous continuum (cpu-host + gpu + tpu in one
+        topology) of the §13 hetero benchmark.  Node ids are
+        ``{class}-edge``; the link shape matches ``edge_fanout`` — every
+        edge links the cloud and every other edge, so the shared IR can
+        flow once fleet-wide while each platform tail stays inside its
+        class."""
+        topo = cls()
+        topo.add_node(cloud_id, upstream_bps=cloud_upstream_bps, seed=True,
+                      capacity_bytes=cloud_capacity_bytes)
+        edges = [f"{p}-edge" for p in platform_classes]
+        for e in edges:
+            topo.add_node(e, upstream_bps=edge_upstream_bps,
+                          capacity_bytes=edge_capacity_bytes)
+            topo.link(cloud_id, e, cloud_edge_bps)
+        for i, a in enumerate(edges):
+            for b in edges[i + 1:]:
+                topo.link(a, b, edge_edge_bps)
+        return topo
+
 
 # ---------------------------------------------------------------------------
 # Peer index (fleet-wide chunk gossip)
@@ -440,6 +471,15 @@ class NodeTraffic:
     # holds with byzantine peers in the fleet.
     corrupt_chunks: int = 0
     corrupt_bytes: int = 0
+    # Performance-portable IR transfers (docs §13) are likewise kept out
+    # of ``bytes_total``: the shared IR module and the per-platform tail
+    # (split executable + autotune table) ride the artifact-style
+    # peer-only path in their own columns, so the wire split proves how
+    # many of a deploy's derived bytes were platform-neutral vs
+    # platform-specific — and every column is zero with the split off.
+    ir_shared_bytes: int = 0         # shared-IR bytes pulled from peers
+    ir_chunks_from_peers: int = 0
+    platform_tail_bytes: int = 0     # tail + autotune bytes from peers
 
     @property
     def bytes_total(self) -> int:
@@ -492,6 +532,11 @@ class NodeTraffic:
             spec_chunks=self.spec_chunks - before.spec_chunks,
             corrupt_chunks=self.corrupt_chunks - before.corrupt_chunks,
             corrupt_bytes=self.corrupt_bytes - before.corrupt_bytes,
+            ir_shared_bytes=self.ir_shared_bytes - before.ir_shared_bytes,
+            ir_chunks_from_peers=self.ir_chunks_from_peers
+            - before.ir_chunks_from_peers,
+            platform_tail_bytes=self.platform_tail_bytes
+            - before.platform_tail_bytes,
         )
 
 
@@ -822,47 +867,91 @@ class NodePeering:
             t.corrupt_chunks += staged.corrupt_chunks
             t.corrupt_bytes += staged.corrupt_bytes
 
-    def fetch_artifact_stripe(self, component: UniformComponent,
-                              stripe: Sequence[Tuple[Chunk, threading.Event]]
-                              ) -> bool:
-        """Transfer a compiled-artifact stripe from linked peers ONLY.
+    def _peer_only_pull(self, component: UniformComponent,
+                        chunks: Sequence[Chunk]
+                        ) -> Optional[Tuple[int, int]]:
+        """Shared body of the derived-component transfers (compiled
+        artifacts, §13 platform tails and IR modules): linked peers ONLY.
 
-        Compiled executables are born on fleet nodes — the upstream
+        Derived components are born on fleet nodes — the upstream
         registry never stores them — so there is no upstream fallback:
-        this returns ``False`` unless *every* chunk can be sourced from a
-        peer, and the caller recompiles locally (then re-publishes).  A
-        peer that cannot honour its advertisement is retracted, exactly as
-        on the resolved-content path.  Successful transfers land in the
-        ``artifact_*`` traffic columns, never in ``bytes_total``.
+        this returns ``None`` unless *every* chunk can be sourced from a
+        peer, and the caller rebuilds the content locally (then
+        re-publishes).  A peer that cannot honour its advertisement is
+        retracted, exactly as on the resolved-content path.  Returns
+        ``(bytes, chunks)`` on success.
 
         A ``NodeDownError`` naming *this* node propagates — its build is
-        dead and must fail, not silently recompile on a dead node.
+        dead and must fail, not silently rebuild on a dead node.
         """
-        chunks = [ch for ch, _ev in stripe]
         if not chunks:
-            return True
+            return (0, 0)
         if not self.enabled:
-            return False
+            return None
         staged_bytes = 0
         groups = self.select(chunks)
         if any(src is None for src, _chs in groups):
-            return False               # no linked peer holds part of it
+            return None                # no linked peer holds part of it
         for src, chs in groups:
             try:
                 self._peer_pull(src, component, chs)
             except PeerTransferError as e:
                 self.index.retract(src, [ch.id for ch in chs])
                 if isinstance(e, ChunkIntegrityError):
-                    # a corrupt artifact stripe strikes the liar exactly
-                    # like resolved content — the caller recompiles locally
+                    # a corrupt derived stripe strikes the liar exactly
+                    # like resolved content — the caller rebuilds locally
                     with self._lock:
                         self.traffic.corrupt_chunks += len(e.corrupt_ids)
                         self.traffic.corrupt_bytes += e.corrupt_bytes
                     if self.quarantine is not None:
                         self.quarantine.record_corruption(src)
-                return False
+                return None
             staged_bytes += sum(ch.size for ch in chs)
+        return staged_bytes, len(chunks)
+
+    def fetch_artifact_stripe(self, component: UniformComponent,
+                              stripe: Sequence[Tuple[Chunk, threading.Event]]
+                              ) -> bool:
+        """Transfer a compiled-artifact stripe from linked peers ONLY
+        (``_peer_only_pull``).  Successful transfers land in the
+        ``artifact_*`` traffic columns, never in ``bytes_total``."""
+        res = self._peer_only_pull(component, [ch for ch, _ev in stripe])
+        if res is None:
+            return False
         with self._lock:
-            self.traffic.artifact_bytes_from_peers += staged_bytes
-            self.traffic.artifact_chunks_from_peers += len(chunks)
+            self.traffic.artifact_bytes_from_peers += res[0]
+            self.traffic.artifact_chunks_from_peers += res[1]
+        return True
+
+    def fetch_tail_stripe(self, component: UniformComponent,
+                          stripe: Sequence[Tuple[Chunk, threading.Event]]
+                          ) -> bool:
+        """Platform-tail variant (docs §13): the same peer-only transfer
+        as ``fetch_artifact_stripe``, additionally folded into
+        ``platform_tail_bytes`` — the per-node proof that with the IR
+        split on, the only platform-specific wire bytes a node pulls are
+        the tail executable and its autotune table."""
+        res = self._peer_only_pull(component, [ch for ch, _ev in stripe])
+        if res is None:
+            return False
+        with self._lock:
+            self.traffic.artifact_bytes_from_peers += res[0]
+            self.traffic.artifact_chunks_from_peers += res[1]
+            self.traffic.platform_tail_bytes += res[0]
+        return True
+
+    def fetch_ir_stripe(self, component: UniformComponent,
+                        stripe: Sequence[Tuple[Chunk, threading.Event]]
+                        ) -> bool:
+        """Shared-IR variant (docs §13): the same peer-only transfer as
+        ``fetch_artifact_stripe``, landing in ``ir_shared_bytes`` /
+        ``ir_chunks_from_peers`` — the platform-neutral module is lowered
+        once fleet-wide, so these bytes appear at most once per node and
+        never cross into ``bytes_total``."""
+        res = self._peer_only_pull(component, [ch for ch, _ev in stripe])
+        if res is None:
+            return False
+        with self._lock:
+            self.traffic.ir_shared_bytes += res[0]
+            self.traffic.ir_chunks_from_peers += res[1]
         return True

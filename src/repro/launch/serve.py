@@ -49,6 +49,11 @@ def main(argv=None) -> int:
     ap.add_argument("--sbom-out", metavar="PATH", default=None,
                     help="write the CycloneDX-shaped SBOM of the resolved "
                          "dependency closure once READY (docs §12, R-096)")
+    ap.add_argument("--platform-report", action="store_true",
+                    help="build with the §13 performance-portable split "
+                         "(shared IR module + per-platform artifact tail + "
+                         "autotune table) and print which of those "
+                         "components were peer-shared vs locally built")
     ap.add_argument("--retire-spec", action="store_true",
                     help="after writing the snapshot, demote the instance's "
                          "content to the speculative eviction tier (a spec: "
@@ -61,7 +66,8 @@ def main(argv=None) -> int:
                  "a snapshot would strand the instance)")
 
     svc = catalog.default_service()
-    builder = LazyBuilder(svc, compile_cache=CompileCache())
+    builder = LazyBuilder(svc, compile_cache=CompileCache(),
+                          ir_components=args.platform_report)
 
     if args.restore:
         with open(args.restore) as f:
@@ -80,7 +86,8 @@ def main(argv=None) -> int:
         # lifecycle stages, not build()
         inst = builder.build(cir, spec, mesh=make_smoke_mesh(1),
                              overrides={"workload": "decode"},
-                             compile_steps=bool(args.snapshot_out),
+                             compile_steps=bool(args.snapshot_out
+                                                or args.platform_report),
                              block=False)
     inst.wait("ready")
     verb = "restored" if args.restore else "lazy-built"
@@ -92,6 +99,24 @@ def main(argv=None) -> int:
         write_sbom(args.sbom_out, sbom)
         print(f"SBOM written to {args.sbom_out} "
               f"({len(sbom['components'])} components)")
+    if args.platform_report:
+        inst.wait("complete")
+        rep = inst.report
+
+        def src(shared: int, built: int) -> str:
+            if shared:
+                return f"shared ({shared / 2**20:.1f} MiB from the fleet)"
+            if built:
+                return f"locally built ({built / 2**20:.1f} MiB published)"
+            return "resident (no bytes moved)"
+
+        print("platform report (docs §13 split, "
+              f"compile_key={(inst.compile_key or '')[:16]}):")
+        print(f"  ir module      {src(rep.ir_shared_bytes, rep.ir_bytes_published)}")
+        print(f"  platform tail  "
+              f"{src(rep.artifact_bytes_fetched, rep.artifact_bytes_published)}")
+        print(f"  autotune table "
+              f"{src(rep.autotune_bytes_fetched, rep.autotune_bytes_published)}")
     # first weight use: block until the asset tail has fully landed
     inst.wait("weights")
     print(f"weights landed; fetched={inst.report.bytes_fetched}B "

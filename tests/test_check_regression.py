@@ -1,9 +1,9 @@
 """The bench-regression gate's comparison logic (no benchmarks are run —
 the smoke runs themselves are exercised by CI's bench-smoke job)."""
-from benchmarks.check_regression import (CHURN, COLDSTART, DISTRIBUTION,
-                                         FETCH, INTEGRITY, PIPELINE,
-                                         PLACEMENT, SCALE, Check,
-                                         build_checks)
+from benchmarks.check_regression import (CHURN, COLDSTART, CROSSPLATFORM,
+                                         DISTRIBUTION, FETCH, HETERO,
+                                         INTEGRITY, PIPELINE, PLACEMENT,
+                                         SCALE, Check, build_checks)
 
 
 def test_higher_is_better_band():
@@ -40,7 +40,9 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
           restore_reduction=100.0, p99_ready=20.0, compile_hit=0.95,
           p95_reduction=70.0, wire_overhead=0.0, downtime_ratio=0.01,
           verify_overhead=0.1, corrupt_committed=0, corrupt_rejected=22,
-          chaos_identity=1.0, quarantined=1.0, tamper_rejected=1.0):
+          chaos_identity=1.0, quarantined=1.0, tamper_rejected=1.0,
+          wire_reduction=74.0, hetero_identical=1.0, ir_copies=1,
+          ir_zero_off=1.0, xp_reduction=99.9, variant_sets=4):
     fetch = {
         "delta_redeploy": {
             "archA": {"delta_saved_pct": delta_pct},
@@ -81,16 +83,24 @@ def _docs(delta_pct, double_charged, speedup, ready_pct, offload, upstream,
                   "quarantined": quarantined},
         "attestation": {"tamper_rejected": tamper_rejected},
     }
+    het = {
+        "split": {"wire_reduction_pct": wire_reduction,
+                  "accounting_identical": hetero_identical},
+        "ir_once": {"ir_published_copies": ir_copies},
+        "identity": {"ir_columns_zero_when_off": ir_zero_off},
+    }
+    xp = {"summary": {"avg_reduction_pct": xp_reduction,
+                      "distinct_variant_sets": variant_sets}}
     return {FETCH: fetch, PIPELINE: pipe, DISTRIBUTION: dist, CHURN: churn,
             SCALE: scale, COLDSTART: cold, PLACEMENT: place,
-            INTEGRITY: integ}
+            INTEGRITY: integ, HETERO: het, CROSSPLATFORM: xp}
 
 
 def test_build_checks_pass_and_fail():
     base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
     good = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5)
     checks = build_checks(base, good)
-    assert len(checks) == 27
+    assert len(checks) == 33
     assert all(c.ok for c in checks)
 
     # a fleet that double-charges a single byte fails outright
@@ -203,6 +213,32 @@ def test_integrity_gate_binds_on_regressions():
     failed = {c.metric for c in build_checks(base, trusted) if not c.ok}
     assert f"{INTEGRITY}:chaos.quarantined" in failed
     assert f"{INTEGRITY}:attestation.tamper_rejected" in failed
+
+
+def test_hetero_gate_binds_on_regressions():
+    base = _docs(30.0, 0, 3.8, 66.0, 0.79, 20.8)
+    # the split losing its wire edge fails the gate (the 50% abs floor
+    # binds even within the relative band), and a second published IR
+    # copy means the fleet-wide sharing path collapsed
+    dup = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, wire_reduction=45.0,
+                ir_copies=2)
+    failed = {c.metric for c in build_checks(base, dup) if not c.ok}
+    assert f"{HETERO}:split.wire_reduction_pct" in failed
+    assert f"{HETERO}:ir_once.ir_published_copies" in failed
+    # byte drift with the feature off, or §13 columns leaking when
+    # disabled, is a hard failure (both are 0/1)
+    leaky = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, hetero_identical=0.0,
+                  ir_zero_off=0.0)
+    failed = {c.metric for c in build_checks(base, leaky) if not c.ok}
+    assert f"{HETERO}:split.accounting_identical" in failed
+    assert f"{HETERO}:identity.ir_columns_zero_when_off" in failed
+    # the §5.3 smoke losing its size-reduction claim, or two platform
+    # classes collapsing onto the same variant set, fails the gate
+    flat = _docs(29.0, 0, 3.0, 60.0, 0.78, 21.5, xp_reduction=55.0,
+                 variant_sets=3)
+    failed = {c.metric for c in build_checks(base, flat) if not c.ok}
+    assert f"{CROSSPLATFORM}:summary.avg_reduction_pct" in failed
+    assert f"{CROSSPLATFORM}:summary.distinct_variant_sets" in failed
 
 
 def test_new_baseline_file_missing_on_old_branch_skips_cleanly():

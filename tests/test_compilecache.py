@@ -74,6 +74,32 @@ def test_cache_key_is_platform_class_not_node(service, pb):
         compile_cache_key(lock0, e0, names)
 
 
+def test_cache_key_is_ir_digest_not_lock_proxy(service, pb):
+    """The v2 key (docs §13) digests the real IR module identity, not the
+    lock-digest proxy: the legacy v1 derivation still exists as a compat
+    shim but can never collide with — or alias — a v2 key, so stale v1
+    entries are unreachable by construction."""
+    from repro.core import legacy_compile_cache_key
+    from repro.core.irmodule import ir_module_digest
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    lb = LazyBuilder(service)
+    spec = cpu_smoke()
+    lock = lb.build(cir, spec, assemble=False).lock
+    names = ("prefill", "decode_step")
+    v2, v1 = compile_cache_key(lock, spec, names), \
+        legacy_compile_cache_key(lock, spec, names)
+    assert v2 != v1
+    # the v2 key moves with the IR module identity and nothing else on
+    # the program side: same lock + same entries is stable ...
+    assert v2 == compile_cache_key(lock, spec, names)
+    assert ir_module_digest(lock, names) == ir_module_digest(lock, names)
+    # ... and the platform side still separates classes (both versions)
+    gpu = gpu_server()
+    lock_gpu = lb.build(cir, gpu, assemble=False).lock
+    assert compile_cache_key(lock_gpu, gpu, names) != v2
+    assert legacy_compile_cache_key(lock_gpu, gpu, names) != v1
+
+
 def test_artifact_component_is_content_addressed():
     a = artifact_component("ab" * 32, ("prefill", "decode_step"))
     b = artifact_component("ab" * 32, ("decode_step", "prefill"))
@@ -82,6 +108,14 @@ def test_artifact_component_is_content_addressed():
     assert a.size_bytes > 0
     c = artifact_component("cd" * 32, ("prefill", "decode_step"))
     assert c.digest() != a.digest()
+    # the §13 tail is a distinct carrier for the same key — sized so that
+    # IR + tail exactly re-labels the monolithic envelope
+    from repro.core.irmodule import IR_BYTES_BASE, IR_BYTES_PER_ENTRY
+    t = artifact_component("ab" * 32, ("prefill", "decode_step"), tail=True)
+    assert t.digest() != a.digest()
+    assert t.context["tail"] and not a.context["tail"]
+    assert t.size_bytes + IR_BYTES_BASE + 2 * IR_BYTES_PER_ENTRY == \
+        a.size_bytes
 
 
 def test_compile_cache_lru_and_stats():

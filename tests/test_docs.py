@@ -470,3 +470,84 @@ def test_architecture_doc_names_real_layers():
     with open(README) as f:
         readme = f.read()
     assert "docs/architecture.md" in readme
+
+
+def test_irmodule_section_names_real_api():
+    """§13 documents the performance-portable split — shared IR modules,
+    per-platform artifact tails, autotune tables, the v2 cache rekey and
+    the hetero gating surface must exist with the documented shape."""
+    import inspect
+
+    from repro.core import (AUTOTUNE_MANAGER, IR_MANAGER, IR_VERSION_SALT,
+                            LazyBuilder, artifact_component,
+                            autotune_component, compile_cache_key,
+                            cpu_smoke, ir_module_component,
+                            ir_module_digest, legacy_compile_cache_key)
+    from repro.core.compilecache import (COMPILE_VERSION_SALT,
+                                         LEGACY_COMPILE_VERSION_SALT,
+                                         CompiledArtifact)
+    from repro.core.irmodule import (IR_BYTES_BASE, IR_BYTES_PER_ENTRY,
+                                     IR_PROGRAM_MANAGERS,
+                                     partition_plan_digest)
+    from repro.core.lazybuild import BuildReport
+    from repro.deploy import FleetDeployer, FleetTopology, NodePeering, \
+        NodeTraffic
+    from repro.deploy.fleet import FleetResult
+
+    with open(DOCS) as f:
+        text = f.read()
+    assert "## 13. Performance-portable CIR: shared IR modules & " \
+        "per-platform artifact tails" in text
+    for name in ("irmodule", "ir_module_digest", "ir_module_component",
+                 "autotune_component", "partition_plan_digest",
+                 "IR_VERSION_SALT", "IR_PROGRAM_MANAGERS",
+                 '`manager="ir"`', '`manager="autotune"`',
+                 "fetch_ir_stripe", "fetch_tail_stripe", "hetero_edge",
+                 "ir_components", "ir_shared_bytes", "ir_bytes_published",
+                 "platform_tail_bytes", "legacy_compile_cache_key",
+                 "cir-xla-exec-v2", "cir-xla-exec-v1",
+                 "BENCH_hetero.json", "BENCH_crossplatform.json",
+                 "--platform-report", "wire_reduction_pct",
+                 "ir_published_copies"):
+        assert name in text, f"§13 lost its {name} reference"
+    # the documented surface
+    assert IR_MANAGER == "ir" and AUTOTUNE_MANAGER == "autotune"
+    assert IR_VERSION_SALT and "parallel" not in IR_PROGRAM_MANAGERS
+    assert COMPILE_VERSION_SALT == "cir-xla-exec-v2"
+    assert LEGACY_COMPILE_VERSION_SALT == "cir-xla-exec-v1"
+    # the v1/v2 signatures stay interchangeable (the compat shim contract)
+    for fn in (compile_cache_key, legacy_compile_cache_key):
+        assert list(inspect.signature(fn).parameters) == \
+            ["lock", "spec", "entry_names"]
+    assert "tail" in inspect.signature(artifact_component).parameters
+    assert "autotune" in CompiledArtifact.__dataclass_fields__
+    for fn in (ir_module_digest, ir_module_component, autotune_component,
+               partition_plan_digest):
+        assert callable(fn)
+    # conservation: IR + tail re-labels the monolithic envelope exactly
+    mono = artifact_component("ab" * 32, ("x",))
+    tail = artifact_component("ab" * 32, ("x",), tail=True)
+    assert tail.size_bytes + IR_BYTES_BASE + IR_BYTES_PER_ENTRY == \
+        mono.size_bytes
+    auto = autotune_component("ab" * 32, cpu_smoke(), ("x",))
+    assert auto.manager == AUTOTUNE_MANAGER
+    for field in ("ir_enabled", "ir_shared_bytes", "ir_bytes_published",
+                  "platform_tail_bytes", "autotune_bytes_fetched",
+                  "autotune_bytes_published"):
+        assert field in BuildReport.__dataclass_fields__
+    for field in ("ir_shared_bytes", "ir_chunks_from_peers",
+                  "platform_tail_bytes"):
+        assert field in NodeTraffic.__dataclass_fields__
+    for field in ("ir_shared_bytes_total", "ir_bytes_published_total",
+                  "platform_tail_bytes_total"):
+        assert field in FleetResult.__dataclass_fields__
+    for cls, meth in ((NodePeering, "fetch_ir_stripe"),
+                      (NodePeering, "fetch_tail_stripe"),
+                      (FleetTopology, "hetero_edge")):
+        assert hasattr(cls, meth)
+    for cls in (LazyBuilder, FleetDeployer):
+        assert "ir_components" in \
+            inspect.signature(cls.__init__).parameters
+    # the serving launcher exposes the per-kind shared-vs-built report
+    import repro.launch.serve as serve_mod
+    assert "--platform-report" in inspect.getsource(serve_mod)

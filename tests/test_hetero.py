@@ -1,0 +1,238 @@
+"""Performance-portable CIR on a heterogeneous fleet (docs §13).
+
+Covers the split's claims: the shared ``manager="ir"`` module is lowered
+exactly once fleet-wide and peer-sourced by every other platform class;
+platform tails and autotune tables never cross platform-class boundaries;
+losing the IR holder (eviction retraction or byzantine quarantine) falls
+back to a local lowering instead of failing the build; and with the
+feature off every §13 column is zero and the build is byte-identical to a
+pre-§13 deploy.
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import ARCHS
+from repro.core import (PreBuilder, cpu_smoke, gpu_server,
+                        legacy_compile_cache_key, tpu_single_pod)
+from repro.core.irmodule import (IR_BYTES_BASE, IR_BYTES_PER_ENTRY,
+                                 ir_module_component, ir_module_digest)
+from repro.deploy import FleetDeployer, FleetTopology
+
+ARCH = "starcoder2-3b"
+
+
+@pytest.fixture
+def pb(service):
+    return PreBuilder(service)
+
+
+def _hetero(service, classes=("cpu", "gpu", "tpu"), **kw):
+    """One cloud seed + one edge per platform class, full edge mesh."""
+    topo = FleetTopology.hetero_edge(classes)
+    cloud = dataclasses.replace(tpu_single_pod(), platform_id="cloud-seed")
+    mk = {"cpu": cpu_smoke, "gpu": gpu_server, "tpu": tpu_single_pod}
+    edges = {p: dataclasses.replace(mk[p](), platform_id=f"{p}-edge-host")
+             for p in classes}
+    topo.place(cloud.platform_id, "cloud")
+    for p, s in edges.items():
+        topo.place(s.platform_id, f"{p}-edge")
+    fd = FleetDeployer(service, topology=topo, ir_components=True,
+                       max_workers=1, fetch_workers=1, overlap=False, **kw)
+    return fd, cloud, edges
+
+
+def test_hetero_edge_shape():
+    topo = FleetTopology.hetero_edge(("cpu", "gpu", "tpu"))
+    assert topo.seed == "cloud"
+    assert set(topo.node_ids()) == {"cloud", "cpu-edge", "gpu-edge",
+                                    "tpu-edge"}
+    # cloud reaches every edge; edges form a full mesh (the IR must be
+    # able to flow between platform classes without a cloud round trip)
+    for p in ("cpu-edge", "gpu-edge", "tpu-edge"):
+        assert topo.bandwidth("cloud", p) is not None
+    assert topo.bandwidth("cpu-edge", "gpu-edge") is not None
+    assert topo.bandwidth("gpu-edge", "tpu-edge") is not None
+
+
+def test_ir_digest_is_platform_free(service, pb):
+    """Every platform class derives the same IR module from its own lock:
+    the digest ignores chip, mesh, backend, jax version and the
+    platform-selected partition plan."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd, cloud, edges = _hetero(service)
+    names = ("prefill", "decode_step")
+    digests, comps = set(), set()
+    for p, spec in edges.items():
+        lock = fd.node_builder(f"{p}-edge").build(
+            cir, spec, assemble=False).lock
+        digests.add(ir_module_digest(lock, names))
+        comps.add(ir_module_component(lock, names).digest())
+    assert len(digests) == 1 and len(comps) == 1
+    # the entry set IS part of the program identity
+    lock = fd.node_builder("cpu-edge").build(
+        cir, edges["cpu"], assemble=False).lock
+    assert ir_module_digest(lock, ("train_step",)) != next(iter(digests))
+
+
+def test_ir_lowered_once_and_peer_shared(service, pb):
+    """Cold hetero rollout: the first class lowers + publishes the IR;
+    every other class peer-fetches the identical module and compiles only
+    its own tail."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd, cloud, edges = _hetero(service)
+    res = fd.deploy(cir, [edges[p] for p in ("cpu", "gpu", "tpu")],
+                    assemble=True, compile_steps=True)
+    assert res.ok, res.summary()
+    reports = [d.report for d in res.deployments]
+    assert all(r.ir_enabled for r in reports)
+    ir_size = IR_BYTES_BASE + 2 * IR_BYTES_PER_ENTRY
+    # exactly one lowering fleet-wide ...
+    assert res.ir_bytes_published_total == ir_size
+    assert sum(r.ir_bytes_published > 0 for r in reports) == 1
+    # ... every other class sourced the shared module (full size, wire)
+    sharers = [r for r in reports if r.ir_shared_bytes > 0]
+    assert len(sharers) == 2
+    assert all(r.ir_shared_bytes == ir_size for r in sharers)
+    wire = [t for t in res.node_traffic.values() if t.ir_shared_bytes > 0]
+    assert len(wire) == 2
+    assert all(t.ir_shared_bytes == ir_size and t.ir_chunks_from_peers > 0
+               for t in wire)
+    # derived bytes never leak into the resolved-content accounting
+    for d in res.deployments:
+        t = res.node_traffic[d.node_id]
+        assert t.bytes_total == d.report.bytes_delta_fetched
+
+
+def test_tails_never_cross_platform_classes(service, pb):
+    """A same-class peer restores the tail over the tail stripe; a
+    different class never sees a cache hit and compiles its own."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    topo = FleetTopology.hetero_edge(("cpu-a", "cpu-b", "gpu"))
+    cloud = dataclasses.replace(tpu_single_pod(), platform_id="cloud-seed")
+    cpu_a = dataclasses.replace(cpu_smoke(), platform_id="cpu-host-a")
+    cpu_b = dataclasses.replace(cpu_smoke(), platform_id="cpu-host-b")
+    gpu = dataclasses.replace(gpu_server(), platform_id="gpu-host")
+    topo.place(cloud.platform_id, "cloud")
+    topo.place(cpu_a.platform_id, "cpu-a-edge")
+    topo.place(cpu_b.platform_id, "cpu-b-edge")
+    topo.place(gpu.platform_id, "gpu-edge")
+    fd = FleetDeployer(service, topology=topo, ir_components=True,
+                       max_workers=1, fetch_workers=1, overlap=False)
+    r_a = fd.deploy(cir, [cpu_a], assemble=True, compile_steps=True)
+    assert r_a.ok and r_a.deployments[0].report.artifact_bytes_published > 0
+    # same class: compile-cache hit, tail + autotune ride the peer stripes
+    r_b = fd.deploy(cir, [cpu_b], assemble=True, compile_steps=True)
+    rep_b = r_b.deployments[0].report
+    t_b = r_b.node_traffic["cpu-b-edge"]
+    assert rep_b.compile_cache_hit
+    assert t_b.platform_tail_bytes > 0
+    assert t_b.platform_tail_bytes == \
+        rep_b.artifact_bytes_fetched + rep_b.autotune_bytes_fetched
+    # different class: no hit, no tail bytes from any peer — only the IR
+    r_g = fd.deploy(cir, [gpu], assemble=True, compile_steps=True)
+    rep_g = r_g.deployments[0].report
+    t_g = r_g.node_traffic["gpu-edge"]
+    assert not rep_g.compile_cache_hit
+    assert rep_g.artifact_bytes_fetched == 0
+    assert rep_g.artifact_bytes_published > 0
+    assert t_g.platform_tail_bytes == 0
+    assert t_g.ir_shared_bytes > 0           # the neutral part DID cross
+
+
+def test_ir_holder_loss_falls_back_to_local_lowering(service, pb):
+    """Eviction retraction on the only IR holder: the next class finds no
+    peer copy and pays the lowering itself instead of failing."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd, cloud, edges = _hetero(service)
+    r0 = fd.deploy(cir, [edges["cpu"]], assemble=True, compile_steps=True)
+    assert r0.ok and r0.ir_bytes_published_total > 0
+    # the holder's store evicts the IR chunks: the eviction listener
+    # retracts them from the PeerIndex
+    lock = fd.node_builder("cpu-edge").build(
+        cir, edges["cpu"], assemble=False).lock
+    comp = ir_module_component(lock, ("prefill", "decode_step"))
+    store = fd.node_store("cpu-edge")
+    peering = fd.node_builder("cpu-edge").fetch_engine.peering
+    peering.on_chunks_evicted([ch.id for ch in store.chunks_of(comp)])
+    r1 = fd.deploy(cir, [edges["gpu"]], assemble=True, compile_steps=True)
+    rep = r1.deployments[0].report
+    assert r1.ok
+    assert rep.ir_shared_bytes == 0 and rep.ir_bytes_published > 0
+    assert r1.node_traffic["gpu-edge"].ir_shared_bytes == 0
+
+
+def test_quarantined_ir_holder_falls_back(service, pb):
+    """A byzantine-quarantined IR holder is never selected as a source:
+    the next class lowers locally."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd, cloud, edges = _hetero(service)
+    r0 = fd.deploy(cir, [edges["cpu"]], assemble=True, compile_steps=True)
+    assert r0.ok and r0.ir_bytes_published_total > 0
+    fd.mark_byzantine(["cpu-edge"])
+    r1 = fd.deploy(cir, [edges["tpu"]], assemble=True, compile_steps=True)
+    rep = r1.deployments[0].report
+    assert r1.ok
+    assert rep.ir_shared_bytes == 0 and rep.ir_bytes_published > 0
+
+
+def test_split_off_is_byte_identical(service, pb):
+    """``ir_components=False`` (the default) must produce a report with
+    every §13 column zero and identical byte accounting — the committed
+    baselines and every pre-§13 caller stay exact."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+
+    def rollout(ir):
+        topo = FleetTopology.hetero_edge(("cpu", "gpu"))
+        cloud = dataclasses.replace(tpu_single_pod(),
+                                    platform_id="cloud-seed")
+        cpu = dataclasses.replace(cpu_smoke(), platform_id="cpu-edge-host")
+        gpu = dataclasses.replace(gpu_server(), platform_id="gpu-edge-host")
+        topo.place(cloud.platform_id, "cloud")
+        topo.place(cpu.platform_id, "cpu-edge")
+        topo.place(gpu.platform_id, "gpu-edge")
+        fd = FleetDeployer(service, topology=topo, ir_components=ir,
+                           max_workers=1, fetch_workers=1, overlap=False)
+        res = fd.deploy(cir, [cpu, gpu], assemble=True, compile_steps=True)
+        assert res.ok, res.summary()
+        return res
+
+    off, on = rollout(False), rollout(True)
+    for d in off.deployments:
+        r = d.report
+        assert not r.ir_enabled
+        assert r.ir_shared_bytes == r.ir_bytes_published == 0
+        assert r.platform_tail_bytes == 0
+        assert r.autotune_bytes_fetched == r.autotune_bytes_published == 0
+    for t in off.node_traffic.values():
+        assert t.ir_shared_bytes == t.ir_chunks_from_peers == 0
+        assert t.platform_tail_bytes == 0
+    assert off.ir_shared_bytes_total == off.ir_bytes_published_total == 0
+    assert off.platform_tail_bytes_total == 0
+    for d_off, d_on in zip(off.deployments, on.deployments):
+        for f in ("bytes_fetched", "bytes_delta_fetched", "chunks_hit",
+                  "chunks_missed", "n_components", "n_compiled",
+                  "bytes_total_components"):
+            assert getattr(d_off.report, f) == getattr(d_on.report, f), f
+        assert off.node_traffic[d_off.node_id].bytes_total == \
+            on.node_traffic[d_on.node_id].bytes_total
+
+
+def test_v1_keys_never_leak_into_v2_cache(service, pb):
+    """The compat shim: the old lock-digest-proxy key is still derivable,
+    is never equal to the v2 key, and never appears as a key of a new
+    cache entry."""
+    cir = pb.prebuild(ARCHS[ARCH], entrypoint="serve")
+    fd, cloud, edges = _hetero(service)
+    res = fd.deploy(cir, [edges[p] for p in ("cpu", "gpu", "tpu")],
+                    assemble=True, compile_steps=True)
+    assert res.ok
+    names = ("decode_step", "prefill")
+    legacy = set()
+    for p, spec in edges.items():
+        lock = fd.node_builder(f"{p}-edge").build(
+            cir, spec, assemble=False).lock
+        legacy.add(legacy_compile_cache_key(lock, spec, names))
+    cached = set(fd.compile_cache.artifacts())
+    assert len(cached) == 3                 # one tail per platform class
+    assert not legacy & cached, "a v1 proxy key leaked into the v2 cache"

@@ -359,3 +359,27 @@ def test_shared_store_path_reports_no_peer_columns(service, pb):
     assert res.bytes_upstream_total == 0 and res.bytes_peer_total == 0
     assert res.peer_offload_ratio == 0.0
     assert all(d.node_id is None for d in res.deployments)
+
+
+def test_node_traffic_ir_columns_in_since_and_as_dict():
+    """The §13 columns ride the NodeTraffic delta/report plumbing like
+    every other column — and stay out of ``bytes_total``, which remains
+    the resolved-content wire only."""
+    from repro.deploy import NodeTraffic
+    t = NodeTraffic(node_id="n", bytes_from_upstream=100,
+                    ir_shared_bytes=30, ir_chunks_from_peers=2,
+                    platform_tail_bytes=10)
+    assert t.bytes_total == 100               # derived bytes never counted
+    d = t.as_dict()
+    assert d["ir_shared_bytes"] == 30
+    assert d["ir_chunks_from_peers"] == 2
+    assert d["platform_tail_bytes"] == 10
+    before = t.snapshot()
+    t.ir_shared_bytes += 5
+    t.platform_tail_bytes += 7
+    t.ir_chunks_from_peers += 1
+    delta = t.since(before)
+    assert delta.ir_shared_bytes == 5
+    assert delta.platform_tail_bytes == 7
+    assert delta.ir_chunks_from_peers == 1
+    assert delta.bytes_from_upstream == 0
